@@ -1,0 +1,131 @@
+"""GASNet-style microbenchmarks (the paper's evaluation lineage, cf. [4]):
+AM round-trip latency, one-sided put bandwidth, collective comparison.
+
+Run as __main__ in a subprocess with 8 host devices (benchmarks/run.py does
+this).  Prints ``name,us_per_call,derived`` CSV rows.
+"""
+import os
+
+if __name__ == "__main__":
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+    )
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def timeit(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main() -> None:
+    from repro.core import gasnet
+    from repro.core.engine import make_engine
+    from repro.core import collectives
+    from repro.optim import compression
+
+    N = 8
+    mesh = jax.make_mesh((N,), ("node",))
+
+    # ---- AM round trip latency vs payload -------------------------------- #
+    for width in (8, 64, 512):
+        ctx = gasnet.Context(mesh, node_axis="node", backend="xla",
+                             am_payload_width=width, am_capacity=2)
+        ctx.handlers.register(
+            "store",
+            lambda state, payload, args: {"buf": payload.astype(jnp.float32)},
+        )
+
+        def am_rt(seg):
+            def prog(node, seg):
+                state = {"buf": jnp.zeros((width,), jnp.float32)}
+                node.am_medium(
+                    jnp.asarray((node.my_id + 1) % N, jnp.int32), "store",
+                    payload=node.local(seg)[:width],
+                )
+                state = node.am_flush(state)
+                # reply leg: send it back
+                node.am_medium(
+                    jnp.asarray((node.my_id - 1) % N, jnp.int32), "store",
+                    payload=state["buf"],
+                )
+                state = node.am_flush(state)
+                return state["buf"][None]
+
+            return ctx.spmd(prog, seg, out_specs=P("node"))
+
+        aspace = ctx.address_space()
+        aspace.register("b", (max(width, 8),), jnp.float32)
+        seg = aspace.alloc("b", init_fn=jnp.ones)
+        us = timeit(am_rt, seg)
+        print(f"am_roundtrip_w{width},{us:.1f},payload={width * 4}B")
+
+    # ---- one-sided put bandwidth vs size ---------------------------------- #
+    ctx = gasnet.Context(mesh, node_axis="node", backend="xla")
+    for size in (1 << 10, 1 << 14, 1 << 18, 1 << 20):
+        n_el = size // 4
+        aspace = ctx.address_space()
+        name = f"bw{size}"
+        aspace.register(name, (n_el,), jnp.float32)
+        seg = aspace.alloc(name)
+
+        def put_prog(node, seg):
+            data = jnp.ones((n_el,), jnp.float32) * node.my_id
+            return node.put(seg, data, to=gasnet.Shift(1), index=0)
+
+        us = timeit(lambda s: ctx.spmd(put_prog, s), seg)
+        gbps = size / (us * 1e-6) / 1e9
+        print(f"put_{size}B,{us:.1f},{gbps:.3f}GB/s/node")
+
+    # ---- collectives: GAS ring (xla engine) vs lax natives ---------------- #
+    M = 1 << 16  # 64k f32 per node contribution
+    x = jnp.ones((N, M), jnp.float32)
+
+    def ring_ar(xl):
+        eng = make_engine("xla", "node", N)
+        return collectives.ring_all_reduce(eng, xl[0])[None]
+
+    def native_ar(xl):
+        return jax.lax.psum(xl[0], "node")[None]
+
+    for nm, fn in (("ring_allreduce", ring_ar), ("xla_allreduce", native_ar)):
+        f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(P("node"),),
+                                  out_specs=P("node"), check_vma=False))
+        us = timeit(f, x)
+        print(f"{nm}_{M * 4}B,{us:.1f},sum_ok="
+              f"{bool(jnp.allclose(f(x)[0], N))}")
+
+    # ---- int8 EF compressed ring vs f32 ring ------------------------------ #
+    err = jnp.zeros((M,), jnp.float32)
+
+    def comp_ar(xl):
+        eng = make_engine("xla", "node", N)
+        red, _ = compression.compressed_ring_all_reduce(
+            eng, xl[0], jnp.zeros((M,), jnp.float32)
+        )
+        return red[None]
+
+    f = jax.jit(jax.shard_map(comp_ar, mesh=mesh, in_specs=(P("node"),),
+                              out_specs=P("node"), check_vma=False))
+    us = timeit(f, x)
+    wire_f32 = 2 * (N - 1) / N * M * 4
+    wire_int8 = 2 * (N - 1) / N * (M * 1 + 4)
+    print(f"compressed_ring_{M * 4}B,{us:.1f},"
+          f"wire_bytes {wire_int8 / wire_f32:.2f}x_of_f32")
+
+    print("GAS_BENCH_DONE")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end benchmarks: train-step throughput + decode tokens/s
+(single device, smoke configs).  CSV: name,us_per_call,derived."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    from repro.configs.registry import SMOKE
+    from repro.data.synthetic import SyntheticLM
+    from repro.models.build import build_model
+    from repro.optim import adamw
+    from repro.parallel.ctx import RunCtx
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    ctx = RunCtx(mesh=None, remat="none")
+
+    for arch in ("qwen3-4b", "falcon-mamba-7b", "arctic-480b"):
+        cfg = SMOKE[arch]
+        model = build_model(cfg)
+        tr = Trainer(model, ctx, adamw.AdamWConfig(lr=1e-3),
+                     TrainerConfig(steps=1, ckpt_every=0))
+        params, st = tr.init(jax.random.PRNGKey(0))
+        fn = tr.make_train_step()
+        B, S = 8, 128
+        src = SyntheticLM(cfg, batch=B, seq_len=S, seed=0)
+        batch = {k: jnp.asarray(v) for k, v in src.batch_at(0).items()}
+        params, st, _ = fn(params, st, batch)  # compile+warm
+        iters = 5
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            params, st, m = fn(params, st, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / iters * 1e6
+        tok_s = B * S / (us * 1e-6)
+        print(f"train_step_{arch},{us:.0f},{tok_s:.0f}tok/s")
+
+    # decode throughput
+    from repro.launch.serve import Request, Server
+
+    cfg = SMOKE["qwen3-4b"]
+    model = build_model(cfg)
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    server = Server(model, ctx, params, batch_size=8, cache_len=96)
+    rng = np.random.default_rng(0)
+    for rid in range(16):
+        server.submit(Request(rid=rid,
+                              prompt=rng.integers(0, cfg.vocab, 16).tolist(),
+                              max_new=16))
+    stats = server.run_until_drained()
+    us = stats["wall_s"] / max(stats["decoded_tokens"], 1) * 1e6
+    print(f"serve_decode_qwen3,{us:.0f},{stats['tok_per_s']:.1f}tok/s")
+    print(f"serve_p50_ttft,{stats['p50_ttft_s'] * 1e6:.0f},"
+          f"{stats['requests']}req")
+    print("TRAIN_SERVE_BENCH_DONE")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""GASPAX — a GASNet-style PGAS communication substrate + training/serving
+framework for JAX on TPU.
+
+Reproduction of Willenberg & Chow, "A software parallel programming approach
+to FPGA-accelerated computing" (2014), adapted from FPGA/GASNet to TPU/JAX:
+
+- ``repro.core``      — the paper's contribution: partitioned global address
+                        space segments, Active Messages, a GASNet-style API,
+                        and ring/hierarchical collectives built on one-sided
+                        puts, with two interchangeable engines ("xla" software
+                        node vs "gascore" Pallas hardware node).
+- ``repro.kernels``   — the GAScore remote-DMA engine as Pallas TPU kernels,
+                        plus perf-critical compute kernels (flash attention,
+                        MoE dispatch, SSM scans) with pure-jnp oracles.
+- ``repro.models``    — composable model zoo covering the 10 assigned
+                        architectures (dense / MoE / SSM / hybrid / VLM /
+                        enc-dec).
+- ``repro.parallel``  — DP/FSDP/TP/EP/SP sharding rules + pipeline stage
+                        partitioning over the pod axis.
+- ``repro.optim``     — sharded AdamW, int8 error-feedback grad compression.
+- ``repro.data``      — deterministic synthetic data pipeline.
+- ``repro.checkpoint``— sharded, async, elastically-restorable checkpoints.
+- ``repro.runtime``   — training loop, fault tolerance, straggler mitigation.
+- ``repro.launch``    — production mesh, multi-pod dry-run, roofline, train,
+                        serve entry points.
+
+Importing ``repro`` performs no JAX device initialization.
+"""
+
+__version__ = "1.0.0"

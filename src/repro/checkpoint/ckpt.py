@@ -1,0 +1,149 @@
+"""Sharded, async, elastically-restorable checkpoints.
+
+Format: one directory per step with one ``.npy`` per pytree leaf plus a
+JSON manifest (treedef paths, shapes, dtypes, step, data-stream cursor).
+Arrays are gathered to host and written whole, so a restore can re-shard
+onto a *different* mesh — the elastic-restart path: lose a pod, rebuild a
+smaller mesh, ``restore(..., sharding_tree=new_shardings)`` and continue.
+(At real 405B scale the writer would emit per-shard files via a
+process-local io pool; the manifest layout already carries everything
+needed — noted in DESIGN.md.)
+
+Writes are atomic (tmp dir + rename) and asynchronous: ``save`` snapshots
+to host memory synchronously (consistent cut), then writes on a background
+thread while training continues — ``AsyncHandle.wait`` joins before the
+next save or at shutdown.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "AsyncHandle", "cleanup"]
+
+_MANIFEST = "manifest.json"
+
+
+def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+class AsyncHandle:
+    def __init__(self, thread: Optional[threading.Thread], path: str):
+        self._thread = thread
+        self.path = path
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+
+    @property
+    def done(self) -> bool:
+        return self._thread is None or not self._thread.is_alive()
+
+
+def save(
+    root: str,
+    step: int,
+    tree: Any,
+    *,
+    extra: Optional[Dict[str, Any]] = None,
+    async_: bool = True,
+) -> AsyncHandle:
+    """Snapshot ``tree`` at ``step``.  Synchronous host gather, async write."""
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    # consistent cut: gather to host NOW
+    host = [(k, np.asarray(jax.device_get(v))) for k, v in _leaf_paths(tree)]
+    manifest = {
+        "step": step,
+        "leaves": [
+            {"key": k, "shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in host
+        ],
+        "extra": extra or {},
+    }
+
+    def write():
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for k, v in host:
+            fn = os.path.join(tmp, k.replace("/", "__") + ".npy")
+            np.save(fn, v)
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return AsyncHandle(t, final)
+    write()
+    return AsyncHandle(None, final)
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for d in os.listdir(root):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(root, d, _MANIFEST)):
+                steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(
+    root: str,
+    step: int,
+    target: Any,
+    sharding_tree: Any = None,
+) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``target`` (pytree of arrays or
+    ShapeDtypeStructs).  ``sharding_tree`` (same structure, NamedSharding
+    leaves) re-shards onto the *current* mesh — elastic restart."""
+    d = os.path.join(root, f"step_{step:010d}")
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    keys = [k for k, _ in _leaf_paths(target)]
+    shardings = (
+        [s for _, s in _leaf_paths(sharding_tree)]
+        if sharding_tree is not None
+        else [None] * len(keys)
+    )
+    leaves = []
+    for k, sh in zip(keys, shardings):
+        fn = os.path.join(d, k.replace("/", "__") + ".npy")
+        arr = np.load(fn)
+        leaves.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+    treedef = jax.tree_util.tree_structure(target)
+    return treedef.unflatten(leaves), manifest.get("extra", {})
+
+
+def cleanup(root: str, keep_last: int = 2) -> None:
+    if not os.path.isdir(root):
+        return
+    steps = sorted(
+        int(d.split("_")[1])
+        for d in os.listdir(root)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for s in steps[:-keep_last] if keep_last else steps:
+        shutil.rmtree(os.path.join(root, f"step_{s:010d}"), ignore_errors=True)

@@ -1,0 +1,26 @@
+"""The paper's primary contribution: a GASNet-style PGAS substrate for JAX.
+
+- ``addrspace``   — partitioned global address space segments.
+- ``am``          — Active Messages (short/medium/long + handler dispatch).
+- ``engine``      — interchangeable transports: XLA software node vs
+                    GAScore Pallas hardware node.
+- ``collectives`` — ring/hierarchical collectives over one-sided puts.
+- ``gasnet``      — the GASNet-like user API (Context / Node / put / get).
+"""
+from repro.core.addrspace import AddressSpace, GlobalAddress, SegmentSpec
+from repro.core.engine import CommEngine, GascoreEngine, XlaEngine, make_engine
+from repro.core.gasnet import Context, Node, Perm, Shift
+
+__all__ = [
+    "AddressSpace",
+    "GlobalAddress",
+    "SegmentSpec",
+    "CommEngine",
+    "XlaEngine",
+    "GascoreEngine",
+    "make_engine",
+    "Context",
+    "Node",
+    "Shift",
+    "Perm",
+]

@@ -1,0 +1,149 @@
+"""Partitioned Global Address Space (PGAS) segments.
+
+The paper's GASNet nodes each expose a *segment* of memory that remote nodes
+may read/write with one-sided operations.  On TPU, a node is a mesh device
+along a designated ``node_axis``; a segment is a single global array with a
+leading node dimension sharded over that axis:
+
+    segment array shape = (n_nodes, *local_shape), sharding = P(node_axis)
+
+Inside a ``shard_map`` over ``node_axis`` every node sees its own
+``(1, *local_shape)`` partition — the "local memory" the GAScore engine of
+that node reads and writes.  A global address is ``(node_id, local_index)``,
+exactly the paper's addressing model.
+
+Segments are *values* (functional): one-sided writes return an updated
+segment array.  The :class:`AddressSpace` holds only metadata, so it can be
+constructed at trace time and never touches device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["SegmentSpec", "AddressSpace", "GlobalAddress"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalAddress:
+    """A (node, index) pair addressing one element range of a segment."""
+
+    node: int
+    index: int
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"gaddr(node={self.node}, index={self.index})"
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentSpec:
+    """Static description of one PGAS segment.
+
+    Attributes:
+      name:        registry key.
+      local_shape: per-node shape (the partition owned by one node).
+      dtype:       element type.
+    """
+
+    name: str
+    local_shape: Tuple[int, ...]
+    dtype: Any
+
+    @property
+    def local_size(self) -> int:
+        size = 1
+        for d in self.local_shape:
+            size *= d
+        return size
+
+    def global_shape(self, n_nodes: int) -> Tuple[int, ...]:
+        return (n_nodes,) + tuple(self.local_shape)
+
+
+class AddressSpace:
+    """Registry of named PGAS segments over one mesh axis.
+
+    This mirrors ``gasnet_attach()``: every node contributes an equally sized
+    partition per segment.  The registry is pure metadata; ``alloc`` produces
+    the actual sharded array.
+    """
+
+    def __init__(self, mesh: jax.sharding.Mesh, node_axis: str = "node"):
+        if node_axis not in mesh.axis_names:
+            raise ValueError(
+                f"node_axis {node_axis!r} not in mesh axes {mesh.axis_names}"
+            )
+        self.mesh = mesh
+        self.node_axis = node_axis
+        self._specs: Dict[str, SegmentSpec] = {}
+
+    # ------------------------------------------------------------------ #
+    # registry
+    # ------------------------------------------------------------------ #
+    @property
+    def n_nodes(self) -> int:
+        return self.mesh.shape[self.node_axis]
+
+    @property
+    def specs(self) -> Dict[str, SegmentSpec]:
+        return dict(self._specs)
+
+    def register(
+        self,
+        name: str,
+        local_shape: Tuple[int, ...],
+        dtype: Any = jnp.float32,
+    ) -> SegmentSpec:
+        if name in self._specs:
+            raise ValueError(f"segment {name!r} already registered")
+        spec = SegmentSpec(name=name, local_shape=tuple(local_shape), dtype=dtype)
+        self._specs[name] = spec
+        return spec
+
+    def spec(self, name: str) -> SegmentSpec:
+        return self._specs[name]
+
+    # ------------------------------------------------------------------ #
+    # allocation & addressing
+    # ------------------------------------------------------------------ #
+    def sharding(self, name: str) -> NamedSharding:
+        del name  # every segment uses the same layout
+        return NamedSharding(self.mesh, P(self.node_axis))
+
+    def alloc(
+        self,
+        name: str,
+        init_fn: Callable[..., jax.Array] = jnp.zeros,
+    ) -> jax.Array:
+        """Materialize a segment as a sharded device array."""
+        spec = self._specs[name]
+        shape = spec.global_shape(self.n_nodes)
+        arr = init_fn(shape, dtype=spec.dtype)
+        return jax.device_put(arr, self.sharding(name))
+
+    def alloc_from(self, name: str, value: jax.Array) -> jax.Array:
+        """Place an existing (n_nodes, *local_shape) array into the segment."""
+        spec = self._specs[name]
+        expect = spec.global_shape(self.n_nodes)
+        if tuple(value.shape) != expect:
+            raise ValueError(
+                f"segment {name!r} expects shape {expect}, got {value.shape}"
+            )
+        return jax.device_put(value.astype(spec.dtype), self.sharding(name))
+
+    # ------------------------------------------------------------------ #
+    # host-side (test/debug) accessors
+    # ------------------------------------------------------------------ #
+    def read(self, seg: jax.Array, addr: GlobalAddress, length: int) -> jax.Array:
+        """Host-side read of ``length`` flat elements at a global address."""
+        local = seg[addr.node].reshape(-1)
+        return local[addr.index : addr.index + length]
+
+    def in_specs(self) -> P:
+        """PartitionSpec of any segment for use in shard_map in/out specs."""
+        return P(self.node_axis)

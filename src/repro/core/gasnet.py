@@ -1,0 +1,336 @@
+"""GASNet-style API surface: contexts, nodes, one-sided put/get, AMs.
+
+This is the unified API the paper argues for: the *same* calls are made by
+"software nodes" and "hardware nodes"; only the engine differs.  Mapping to
+GASNet Core/Extended:
+
+====================  =====================================================
+GASNet                 here
+====================  =====================================================
+gasnet_init/attach     ``Context(mesh, node_axis, backend)`` + AddressSpace
+gasnet_mynode          ``node.my_id``
+gasnet_nodes           ``node.n_nodes``
+gasnet_put             ``node.put(seg, data, to=..., index=...)``
+gasnet_get             ``node.get(seg, frm=..., index=..., size=...)``
+gasnet_AMRequestShort  ``node.am_short(dest, handler, args)``
+gasnet_AMRequestMedium ``node.am_medium(dest, handler, payload, args)``
+gasnet_AMRequestLong   ``node.am_long(dest, handler, payload, dst_index)``
+(poll + handler run)   ``node.am_flush(state)``
+gasnet_barrier         ``node.barrier()``
+====================  =====================================================
+
+One-sided semantics under SPMD: every node executes the same program, so a
+"one-sided put" is a *pattern* of puts — :class:`Shift` (every node targets
+``me+k``) or :class:`Perm` (arbitrary static permutation).  Data-dependent
+destinations go through the Active Message router (capacity-bounded
+all-to-all), the static-schedule analogue of the paper's packet network.
+
+Example::
+
+    ctx = gasnet.Context(mesh, node_axis="node", backend="gascore")
+    aspace = ctx.address_space()
+    aspace.register("buf", (128,), jnp.float32)
+    seg = aspace.alloc("buf")
+
+    def program(node, seg):
+        seg = node.put(seg, node.local(seg)[:16], to=gasnet.Shift(1), index=0)
+        node.barrier()
+        return seg
+
+    seg = ctx.spmd(program, seg)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import am as am_lib
+from repro.core.addrspace import AddressSpace
+from repro.core.engine import CommEngine, make_engine
+
+__all__ = ["Shift", "Perm", "Context", "Node"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shift:
+    """Every node targets node ``(me + k) % n``."""
+
+    k: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Perm:
+    """Node ``i`` targets node ``dst[i]`` (a static permutation)."""
+
+    dst: Tuple[int, ...]
+
+
+Pattern = Any  # Shift | Perm
+
+
+def _inverse(pattern: Pattern, n: int) -> Pattern:
+    if isinstance(pattern, Shift):
+        return Shift(-pattern.k)
+    inv = [0] * n
+    for s, d in enumerate(pattern.dst):
+        inv[int(d)] = s
+    return Perm(tuple(inv))
+
+
+class Node:
+    """Handle passed to SPMD node programs; wraps one CommEngine.
+
+    All methods are trace-time; segments appear as their local
+    ``(1, *local_shape)`` partitions inside ``shard_map``.
+    """
+
+    def __init__(self, engine: CommEngine, handlers: am_lib.HandlerTable,
+                 am_capacity: int, am_payload_width: int,
+                 am_per_peer_capacity: int):
+        self.engine = engine
+        self.handlers = handlers
+        self._am_capacity = am_capacity
+        self._am_payload_width = am_payload_width
+        self._am_per_peer = am_per_peer_capacity
+        self._batch: Optional[am_lib.AMBatch] = None
+        self.dropped = jnp.zeros((), jnp.int32)
+
+    # ----------------------------------------------------------------- #
+    # identity & sync
+    # ----------------------------------------------------------------- #
+    @property
+    def my_id(self) -> jax.Array:
+        return self.engine.my_id()
+
+    @property
+    def n_nodes(self) -> int:
+        return self.engine.n_nodes
+
+    def barrier(self) -> None:
+        self.engine.barrier()
+
+    # ----------------------------------------------------------------- #
+    # segments: local views
+    # ----------------------------------------------------------------- #
+    @staticmethod
+    def local(seg: jax.Array) -> jax.Array:
+        """Local partition of a segment inside shard_map: drop the leading
+        per-node axis of size 1."""
+        return seg[0]
+
+    @staticmethod
+    def _restore(seg_like: jax.Array, local: jax.Array) -> jax.Array:
+        del seg_like
+        return local[None]
+
+    # ----------------------------------------------------------------- #
+    # one-sided remote memory access
+    # ----------------------------------------------------------------- #
+    def _move(self, x: jax.Array, to: Pattern) -> jax.Array:
+        if isinstance(to, Shift):
+            return self.engine.shift(x, to.k)
+        if isinstance(to, Perm):
+            return self.engine.permute(x, to.dst)
+        raise TypeError(f"bad pattern {to!r}")
+
+    def put(
+        self,
+        seg: jax.Array,
+        data: jax.Array,
+        *,
+        to: Pattern = Shift(1),
+        index: jax.Array | int = 0,
+    ) -> jax.Array:
+        """One-sided remote write: ``data`` lands in the target node's
+        partition of ``seg`` at flat offset ``index`` (sender-specified,
+        shipped with the payload, exactly like a GAScore AMLong header).
+
+        Returns the updated segment.  ``data`` is flattened; the write is
+        contiguous in the flattened local partition.
+        """
+        local = self.local(seg)
+        flat = local.reshape(-1)
+        payload = data.reshape(-1).astype(flat.dtype)
+        idx = jnp.asarray(index, jnp.int32)
+        moved = self._move(payload, to)
+        midx = self._move(idx, to)
+        received = self._move(jnp.ones((), bool), to)
+        cur = lax.dynamic_slice(flat, (midx,), (payload.shape[0],))
+        new = lax.dynamic_update_slice(
+            flat, jnp.where(received, moved, cur), (midx,)
+        )
+        return self._restore(seg, new.reshape(local.shape))
+
+    def get(
+        self,
+        seg: jax.Array,
+        *,
+        frm: Pattern = Shift(1),
+        index: jax.Array | int = 0,
+        size: int = 1,
+    ) -> jax.Array:
+        """One-sided remote read of ``size`` flat elements at offset
+        ``index`` in node ``pattern(me)``'s partition.
+
+        GASNet gets are request/reply; so is this: the offset travels to the
+        source (inverse pattern), the source slices, the reply travels back.
+        """
+        n = self.n_nodes
+        inv = _inverse(frm, n)
+        local = self.local(seg).reshape(-1)
+        idx = jnp.asarray(index, jnp.int32)
+        # request: the source node pattern(me) learns the offset I want
+        req = self._move(idx, frm)
+        data = lax.dynamic_slice(local, (req,), (size,))
+        # reply: data travels back from the source to me
+        return self._move(data, inv)
+
+    # ----------------------------------------------------------------- #
+    # Active Messages
+    # ----------------------------------------------------------------- #
+    def _ensure_batch(self) -> am_lib.AMBatch:
+        if self._batch is None:
+            self._batch = am_lib.empty_batch(
+                self._am_capacity, self._am_payload_width
+            )
+        return self._batch
+
+    def am_short(self, dest: jax.Array, handler: str, args: Sequence[Any] = ()):
+        b = self._ensure_batch()
+        self._batch = am_lib.push(
+            b, dest, self.handlers.id_of(handler), args=args
+        )
+
+    def am_medium(
+        self,
+        dest: jax.Array,
+        handler: str,
+        payload: jax.Array,
+        args: Sequence[Any] = (),
+    ):
+        b = self._ensure_batch()
+        self._batch = am_lib.push(
+            b, dest, self.handlers.id_of(handler), args=args, payload=payload
+        )
+
+    def am_long(
+        self,
+        dest: jax.Array,
+        handler: str,
+        payload: jax.Array,
+        dst_index: jax.Array | int,
+        nelem: jax.Array | int = 0,
+    ):
+        """AMLong: payload lands at ``dst_index`` (flat) of the handler's
+        segment; handler convention is ``long_write_handler``-compatible
+        (args[0]=offset, args[1]=element count)."""
+        b = self._ensure_batch()
+        self._batch = am_lib.push(
+            b,
+            dest,
+            self.handlers.id_of(handler),
+            args=(dst_index, nelem),
+            payload=payload,
+        )
+
+    def am_flush(self, state: Any) -> Any:
+        """Route all queued messages and run handlers at the receivers.
+        Returns the updated receiver state.  (The poll loop of GASNet.)"""
+        batch = self._ensure_batch()
+        recv, dropped = am_lib.route(
+            batch,
+            axis=self.engine.axis,
+            n_nodes=self.n_nodes,
+            per_peer_capacity=self._am_per_peer,
+            all_to_all_fn=self.engine.all_to_all,
+        )
+        self.dropped = self.dropped + dropped
+        self._batch = None
+        return am_lib.deliver(state, recv, self.handlers)
+
+
+class Context:
+    """Session object: mesh + node axis + engine backend + handler table."""
+
+    def __init__(
+        self,
+        mesh: jax.sharding.Mesh,
+        node_axis: str = "node",
+        backend: str = "xla",
+        interpret: bool = True,
+        am_capacity: int = 16,
+        am_payload_width: int = 8,
+        am_per_peer_capacity: int | None = None,
+    ):
+        self.mesh = mesh
+        self.node_axis = node_axis
+        self.backend = backend
+        self.interpret = interpret
+        self.handlers = am_lib.HandlerTable()
+        self.am_capacity = am_capacity
+        self.am_payload_width = am_payload_width
+        self.am_per_peer_capacity = am_per_peer_capacity or am_capacity
+        self.n_nodes = mesh.shape[node_axis]
+
+    # ----------------------------------------------------------------- #
+    def address_space(self) -> AddressSpace:
+        return AddressSpace(self.mesh, self.node_axis)
+
+    def register_handler(self, name: str, fn: Callable) -> int:
+        return self.handlers.register(name, fn)
+
+    def make_engine(self) -> CommEngine:
+        return make_engine(
+            self.backend, self.node_axis, self.n_nodes, interpret=self.interpret
+        )
+
+    def make_node(self) -> Node:
+        return Node(
+            self.make_engine(),
+            self.handlers,
+            self.am_capacity,
+            self.am_payload_width,
+            self.am_per_peer_capacity,
+        )
+
+    # ----------------------------------------------------------------- #
+    def spmd(
+        self,
+        program: Callable,
+        *args: Any,
+        in_specs: Any = None,
+        out_specs: Any = None,
+        jit: bool = True,
+    ) -> Any:
+        """Run ``program(node, *local_args)`` as an SPMD node program.
+
+        Default in/out specs treat every argument as a segment (sharded on
+        the leading node axis).  Pass explicit specs for replicated or
+        differently-sharded arguments.
+        """
+        seg_spec = P(self.node_axis)
+        if in_specs is None:
+            in_specs = jax.tree.map(lambda _: seg_spec, args)
+        if out_specs is None:
+            out_specs = seg_spec
+
+        def body(*local_args):
+            node = self.make_node()
+            return program(node, *local_args)
+
+        fn = jax.shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+        )
+        if jit:
+            fn = jax.jit(fn)
+        return fn(*args)

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline with sharded, prefetched loading."""
+from repro.data.synthetic import SyntheticLM, ShardedLoader
+
+__all__ = ["SyntheticLM", "ShardedLoader"]

@@ -1,0 +1,356 @@
+"""Trip-count-aware cost analysis over compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers model under-reports flops/bytes/collective traffic by the
+layer count (demonstrated in tests/test_hlostats.py).  This module
+re-derives the three roofline inputs from the compiled module text with
+loop multiplication:
+
+1. parse every computation, building a symbol table
+   instruction/parameter name -> result type (operand types are NOT inline
+   in scheduled HLO; they are resolved through the table);
+2. recover each ``while`` loop's trip count from its
+   ``backend_config={"known_trip_count":{"n":...}}`` (emitted by XLA's
+   induction-variable analysis), falling back to the condition
+   computation's compare-against-constant;
+3. cost bottom-up: cost(while) = trips × (body + cond);
+   fusion/call/map/conditional costs recurse into called computations.
+
+Per-instruction model:
+  flops      — dot: 2 × result numel × contracted size (MXU term);
+               arithmetic elementwise/reduce: 1 flop per output element
+               (VPU term; matters for the SSM/LRU scan cells).
+  bytes      — operand + result sizes of materializing ops (fusion, dot,
+               copy, custom-call, collectives, dynamic-update-slice...) —
+               an HBM-traffic model in the TPU sense: every instruction
+               boundary in scheduled HLO is a materialization point.
+  collective — operand bytes per collective type (all-gather, all-reduce,
+               reduce-scatter, all-to-all, collective-permute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze", "HloStats"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.*?)\s*\{\s*$")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs",
+    "compare", "select", "and", "or", "xor", "exponential-minus-one",
+    "log-plus-one", "sine", "cosine", "atan2", "reduce", "clamp",
+    "round-nearest-even", "sign", "floor", "ceil", "logistic", "erf",
+}
+
+_MATERIALIZING = {
+    "fusion", "dot", "copy", "custom-call", "dynamic-update-slice",
+    "dynamic-slice", "gather", "scatter", "transpose", "reshape", "pad",
+    "slice", "concatenate", "broadcast", "convert", "iota", "reduce",
+    "sort", "select-and-scatter", "reduce-window", "rng",
+}
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_text: str) -> int:
+    total = 0
+    for dt, dims in _shapes_in(type_text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_numel(type_text: str) -> int:
+    total = 0
+    for _, dims in _shapes_in(type_text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Inst:
+    name: str
+    opcode: str
+    result_type: str
+    rest: str  # args + attrs (everything after the opening paren)
+
+    def operand_names(self) -> List[str]:
+        # operands are the %names before the closing paren of the arg list
+        depth = 1
+        buf = []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            buf.append(ch)
+        args = "".join(buf)
+        return re.findall(r"%([\w\.\-]+)", args)
+
+    @property
+    def attrs(self) -> str:
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return self.rest[i + 1:]
+        return ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    insts: List[Inst]
+    types: Dict[str, str]  # symbol -> result type text
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    bytes: float
+    collective_bytes: float
+    collective_per_type: Dict[str, float]
+    collective_counts: Dict[str, float]
+    while_trips: Dict[str, int]
+    unresolved_whiles: List[str]
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _parse(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and ("->" in line):
+                cur = Computation(name=m.group(2), insts=[], types={})
+                if m.group(1):
+                    entry = m.group(2)
+                # parameters from header: "name: type, name: type"
+                for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^()]*\))|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)", m.group(3)):
+                    cur.types[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}" or line.strip().startswith("} "):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if m:
+            inst = Inst(
+                name=m.group(1), result_type=m.group(2),
+                opcode=m.group(3), rest=m.group(4),
+            )
+            cur.insts.append(inst)
+            cur.types[inst.name] = inst.result_type
+    return comps, entry
+
+
+def _called(inst: Inst) -> List[str]:
+    names = []
+    for key in ("calls", "body", "condition", "to_apply",
+                "true_computation", "false_computation"):
+        for m in re.finditer(rf"{key}=%?([\w\.\-]+)", inst.attrs):
+            names.append(m.group(1))
+    for m in re.finditer(r"branch_computations=\{([^}]*)\}", inst.attrs):
+        names.extend(p.strip().lstrip("%") for p in m.group(1).split(","))
+    return names
+
+
+def _trip_from_backend_config(inst: Inst) -> Optional[int]:
+    m = re.search(r'backend_config=(\{.*?\})(?:,|$| )', inst.attrs)
+    if not m:
+        m = re.search(r'backend_config=(\{.*\})\s*$', inst.attrs)
+    if not m:
+        return None
+    try:
+        cfgtxt = m.group(1)
+        # backend_config JSON may contain nested braces; grab greedily
+        start = inst.attrs.index("backend_config=") + len("backend_config=")
+        depth = 0
+        end = start
+        for i in range(start, len(inst.attrs)):
+            if inst.attrs[i] == "{":
+                depth += 1
+            elif inst.attrs[i] == "}":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        cfg = json.loads(inst.attrs[start:end])
+        n = cfg.get("known_trip_count", {}).get("n")
+        return int(n) if n is not None else None
+    except Exception:
+        return None
+
+
+def _trip_from_condition(cond: Computation) -> Optional[int]:
+    consts: Dict[str, int] = {}
+    for inst in cond.insts:
+        if inst.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", f"{inst.opcode}({inst.rest}")
+            if m:
+                consts[inst.name] = int(m.group(1))
+    best = None
+    for inst in cond.insts:
+        if inst.opcode == "compare" or "compare" in inst.rest:
+            for op in inst.operand_names():
+                if op in consts and consts[op] > 0:
+                    best = max(best or 0, consts[op])
+    return best
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = _parse(text)
+    trips: Dict[str, int] = {}
+    unresolved: List[str] = []
+
+    for comp in comps.values():
+        for inst in comp.insts:
+            if inst.opcode != "while":
+                continue
+            mb = re.search(r"body=%?([\w\.\-]+)", inst.attrs)
+            mc = re.search(r"condition=%?([\w\.\-]+)", inst.attrs)
+            body = mb.group(1) if mb else None
+            t = _trip_from_backend_config(inst)
+            if t is None and mc and mc.group(1) in comps:
+                t = _trip_from_condition(comps[mc.group(1)])
+            if body:
+                if t is None:
+                    unresolved.append(inst.name)
+                    t = 1
+                trips[body] = t
+                if mc:
+                    trips[mc.group(1)] = t  # reuse map for cond comp
+
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float], Dict[str, float]]] = {}
+
+    def cost(cname: str):
+        if cname in memo:
+            return memo[cname]
+        comp = comps.get(cname)
+        zero = (0.0, 0.0, 0.0,
+                {c: 0.0 for c in COLLECTIVES}, {c: 0.0 for c in COLLECTIVES})
+        if comp is None:
+            return zero
+        fl = by = co = 0.0
+        ct = {c: 0.0 for c in COLLECTIVES}
+        cn = {c: 0.0 for c in COLLECTIVES}
+
+        def operand_bytes(inst: Inst) -> int:
+            return sum(_type_bytes(comp.types.get(o, "")) for o in
+                       inst.operand_names())
+
+        for inst in comp.insts:
+            op = inst.opcode
+            if op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", inst.attrs)
+                mc = re.search(r"condition=%?([\w\.\-]+)", inst.attrs)
+                t = trips.get(mb.group(1), 1) if mb else 1
+                for sub in filter(None, [mb and mb.group(1), mc and mc.group(1)]):
+                    sf, sb, sc, sct, scn = cost(sub)
+                    fl += t * sf
+                    by += t * sb
+                    co += t * sc
+                    for k in COLLECTIVES:
+                        ct[k] += t * sct[k]
+                        cn[k] += t * scn[k]
+                continue
+            for sub in _called(inst):
+                sf, sb, sc, sct, scn = cost(sub)
+                fl += sf
+                by += sb
+                co += sc
+                for k in COLLECTIVES:
+                    ct[k] += sct[k]
+                    cn[k] += scn[k]
+            base = op.replace("-start", "").replace("-done", "")
+            if op == "dot":
+                rnumel = _type_numel(inst.result_type)
+                ops = inst.operand_names()
+                lhs_type = comp.types.get(ops[0], "") if ops else ""
+                contracted = 1
+                m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.attrs)
+                shp = _shapes_in(lhs_type)
+                if m and shp:
+                    dims = shp[0][1]
+                    for idx in m.group(1).split(","):
+                        if idx and int(idx) < len(dims):
+                            contracted *= dims[int(idx)]
+                fl += 2.0 * rnumel * contracted
+                by += _type_bytes(inst.result_type) + operand_bytes(inst)
+            elif base in COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                b = operand_bytes(inst)
+                co += b
+                ct[base] += b
+                cn[base] += 1
+                by += b + _type_bytes(inst.result_type)
+            elif op in _ELEMENTWISE:
+                fl += _type_numel(inst.result_type)
+                by += _type_bytes(inst.result_type) + operand_bytes(inst)
+            elif op in _MATERIALIZING:
+                by += _type_bytes(inst.result_type) + operand_bytes(inst)
+        memo[cname] = (fl, by, co, ct, cn)
+        return memo[cname]
+
+    if entry is None:
+        for n in comps:
+            if n.startswith("main"):
+                entry = n
+    fl, by, co, ct, cn = cost(entry) if entry else (0, 0, 0, {}, {})
+    return HloStats(
+        flops=fl,
+        bytes=by,
+        collective_bytes=co,
+        collective_per_type=ct,
+        collective_counts=cn,
+        while_trips=trips,
+        unresolved_whiles=unresolved,
+    )

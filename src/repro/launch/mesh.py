@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches JAX device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before the first
+JAX device query, and smoke tests/benches must keep seeing 1 device.
+
+Axis roles:
+  pod   — inter-pod links (the expensive OCCC-like hop): pure data parallel
+          by default, pipeline stages with ``--pipeline``.
+  data  — intra-pod FSDP/data-parallel (batch + parameter dim 0).
+  model — tensor/expert parallel (heads, d_ff columns, experts, vocab).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "mesh_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> jax.sharding.Mesh:
+    """Arbitrary mesh for tests / elastic restarts."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh: jax.sharding.Mesh) -> Tuple[Tuple[str, ...], str]:
+    """(dp_axes, tp_axis) role assignment for a mesh by convention."""
+    names = mesh.axis_names
+    tp = "model" if "model" in names else names[-1]
+    dp = tuple(n for n in names if n != tp)
+    return dp, tp

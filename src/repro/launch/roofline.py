@@ -1,0 +1,188 @@
+"""Roofline derivation from dry-run artifacts.
+
+Three terms per (arch × shape × mesh) cell, in seconds-per-step:
+
+    compute    = HLO_FLOPs_global   / (chips × 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes_global   / (chips × 819e9   B/s HBM)
+    collective = collective_bytes   / (chips × 50e9    B/s per ICI link)
+
+``compiled.cost_analysis()`` on the SPMD-partitioned executable reports
+PER-DEVICE flops/bytes (verified against an analytic matmul in
+tests/test_roofline.py), so global = per_device × chips.  Collective bytes
+are per-device operand sums from the HLO text (each device injects its
+operand onto its links).
+
+The dominant term is the bottleneck; MODEL_FLOPS/HLO_FLOPs measures how
+much compiled compute is "useful" (remat recompute, padding and dead work
+show up here).  MODEL_FLOPS = 6·N_active·tokens for training (fwd+bwd),
+2·N_active·tokens for inference steps.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from repro.configs.registry import ARCHS, SHAPES
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+__all__ = ["derive", "load_records", "table"]
+
+
+def analytic_memory_bytes(arch: str, shape_name: str, chips: int,
+                          state_bytes: int = 4) -> float:
+    """Per-device HBM traffic per step under a TPU-quality schedule.
+
+    The HLO-text bytes model (``hlostats.bytes``) charges every scheduled-HLO
+    instruction boundary, which reflects CPU fusion granularity — orders of
+    magnitude above what a fused TPU schedule moves (recorded in the JSON as
+    the pessimistic bound).  The roofline *memory term* instead uses this
+    analytic minimum: weights + optimizer states + saved activations + KV
+    traffic, each moved the minimum number of times:
+
+    train:   weights read fwd + bwd (bf16), grad write+read (f32),
+             m/v read+write (state_bytes), param read+write;
+             activations: one residual stream per layer saved + reread +
+             recomputed under full remat (3 moves of B·S·D·2B per layer).
+    prefill: weights once + KV cache write + activations write/read once.
+    decode:  weights once (all experts resident for MoE: every expert is
+             hit at batch>=128·topk) + full KV cache read + one slot write.
+    """
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    total, active = cfg.param_counts()
+    B, S = shape.global_batch, shape.seq_len
+    D, L = cfg.d_model, cfg.n_layers + cfg.n_enc_layers
+    KH, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    w_b = 2  # bf16 weights
+    if shape.kind == "train":
+        weight_traffic = total * (2 * w_b + 2 * 4 + 2 * state_bytes * 2
+                                  + 2 * w_b)
+        act_traffic = L * B * S * D * w_b * 3  # save + reread + recompute
+        return (weight_traffic + act_traffic) / chips
+    if shape.kind == "prefill":
+        kv = L * B * S * KH * Dh * 2 * w_b if not cfg.attention_free else (
+            L * B * (cfg.resolved_d_inner * cfg.ssm_state) * 4)
+        act = L * B * S * D * w_b * 2
+        return (total * w_b + kv + act) / chips
+    # decode: per generated token
+    if cfg.attention_free:
+        state = L * B * cfg.resolved_d_inner * (cfg.ssm_state + 3) * 4 * 2
+        return (total * w_b + state) / chips
+    window = cfg.local_window if "local" in cfg.pattern else S
+    kinds = cfg.layer_kinds()
+    kv_read = B * KH * Dh * 2 * w_b * sum(
+        min(S, window) if k == "local" else
+        (0 if k in ("mamba",) else S) for k in kinds
+    )
+    return (total * w_b + kv_read) / chips
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    _, n_active = cfg.param_counts()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def derive(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    flops_dev = rec["cost"].get("flops", 0.0)
+    sched_bytes_dev = rec["cost"].get("bytes_accessed", 0.0)
+    mem_dev = analytic_memory_bytes(rec["arch"], rec["shape"], chips)
+    coll_dev = rec["collectives"]["total"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = mem_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = flops_dev * chips
+    useful = mf / hlo_global if hlo_global else 0.0
+    # roofline fraction: useful-compute time over the bound set by the
+    # dominant term (how close the step is to the best this hardware allows
+    # given the compiled schedule)
+    t_useful = (mf / chips) / PEAK_FLOPS
+    bound = max(terms.values())
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "tag", "n_devices")},
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "sched_bytes_dev": sched_bytes_dev,
+        "mem_bytes_dev": mem_dev,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": useful,
+        "roofline_fraction": (t_useful / bound) if bound else 0.0,
+        "collectives": rec["collectives"]["per_type"],
+        "memory": rec.get("memory", {}),
+    }
+
+
+def load_records(out_dir: str = "results/dryrun") -> List[Dict[str, Any]]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt_t(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}µs"
+
+
+def table(out_dir: str = "results/dryrun", tag: str = None) -> str:
+    rows = []
+    for rec in load_records(out_dir):
+        if tag and rec.get("tag") != tag:
+            continue
+        d = derive(rec)
+        if d is None:
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                f"ERROR: {rec.get('error', '?')[:60]} | | | | | |"
+            )
+            continue
+        rows.append(
+            "| {arch} | {shape} | {mesh} | {tc} | {tm} | {tl} | **{dom}** | "
+            "{ur:.2f} | {rf:.2f} |".format(
+                arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+                tc=_fmt_t(d["t_compute_s"]), tm=_fmt_t(d["t_memory_s"]),
+                tl=_fmt_t(d["t_collective_s"]), dom=d["dominant"],
+                ur=d["useful_ratio"], rf=d["roofline_fraction"],
+            )
+        )
+    header = (
+        "| arch | shape | mesh | compute | memory | collective | dominant | "
+        "useful | roofline frac |\n|---|---|---|---|---|---|---|---|---|"
+    )
+    return header + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+    print(table(args.dir, args.tag))

@@ -1,0 +1,203 @@
+"""Batched serving driver: prefill/decode with continuous batching (lite).
+
+Request lifecycle: queued -> prefilled (KV cache slot assigned) -> decoding
+in the fixed-width decode batch -> finished (EOS or max tokens) -> slot
+recycled for the next queued request.
+
+The decode step is one jit'd ``model.decode_step`` over the whole batch;
+per-row positions let rows be at different generation depths (continuous
+batching).  Prefill runs per-request (production would batch prefills and
+overlap them with decode on separate cores; the scheduler hook is where
+disaggregated prefill would hand the KV cache over the GAS layer — see
+examples/heterogeneous_pipeline.py for that transfer demonstrated with
+one-sided puts).
+
+CPU-scale demo: ``python -m repro.launch.serve --arch qwen3-4b --smoke``.
+"""
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    t_enqueue: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class Server:
+    """Fixed-decode-batch continuous batching over Model prefill/decode."""
+
+    def __init__(self, model, ctx, params, batch_size: int, cache_len: int,
+                 eos_id: int = -1, greedy: bool = True, seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+
+        self.jax, self.jnp = jax, jnp
+        self.model = model
+        self.ctx = ctx
+        self.params = params
+        self.B = batch_size
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+
+        self.active: List[Optional[Request]] = [None] * batch_size
+        self.positions = np.zeros((batch_size,), np.int32)
+        self.last_token = np.zeros((batch_size, 1), np.int32)
+        self.caches = None  # lazily built from first prefill
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+
+        self._decode = jax.jit(
+            lambda p, t, pos, c: model.decode_step(p, ctx, t, pos, c)
+        )
+        self._prefill_one = jax.jit(
+            lambda p, b: model.prefill(p, ctx, b, cache_len=cache_len)
+        )
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        req.t_enqueue = time.monotonic()
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _write_row(self, caches_one, slot: int) -> None:
+        """Insert a single-request cache into batch row ``slot``."""
+        jnp = self.jnp
+        if self.caches is None:
+            # build an empty batched cache from the single-row structure
+            self.caches = self.jax.tree.map(
+                lambda x: jnp.zeros((x.shape[0], self.B) + x.shape[2:],
+                                    x.dtype),
+                caches_one,
+            )
+        self.caches = self.jax.tree.map(
+            lambda full, one: full.at[:, slot].set(one[:, 0]),
+            self.caches, caches_one,
+        )
+
+    def _admit(self) -> None:
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            toks = self.jnp.asarray(req.prompt, self.jnp.int32)[None]
+            logits, caches_one = self._prefill_one(
+                self.params, {"inputs": toks}
+            )
+            tok = int(np.argmax(np.asarray(logits)[0]))
+            req.out.append(tok)
+            req.t_first = time.monotonic()
+            self.active[slot] = req
+            self.positions[slot] = len(req.prompt)
+            self.last_token[slot, 0] = tok
+            self._write_row(caches_one, slot)
+
+    def _retire(self, slot: int) -> None:
+        req = self.active[slot]
+        req.t_done = time.monotonic()
+        self.finished.append(req)
+        self.active[slot] = None
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> int:
+        """One scheduler tick: admit, decode one token for all rows."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live or self.caches is None:
+            return 0
+        jnp = self.jnp
+        logits, self.caches = self._decode(
+            self.params,
+            jnp.asarray(self.last_token),
+            jnp.asarray(self.positions),
+            self.caches,
+        )
+        logits = np.asarray(logits)
+        for i in live:
+            req = self.active[i]
+            tok = int(np.argmax(logits[i]))
+            req.out.append(tok)
+            self.positions[i] += 1
+            self.last_token[i, 0] = tok
+            if tok == self.eos_id or len(req.out) >= req.max_new:
+                self._retire(i)
+            if self.positions[i] >= self.cache_len - 1:
+                self._retire(i)
+        return len(live)
+
+    def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
+        t0 = time.monotonic()
+        decoded = 0
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            decoded += self.step()
+            ticks += 1
+        dt = time.monotonic() - t0
+        lat = [r.t_done - r.t_enqueue for r in self.finished]
+        ttft = [r.t_first - r.t_enqueue for r in self.finished]
+        return {
+            "requests": len(self.finished),
+            "decoded_tokens": decoded,
+            "wall_s": dt,
+            "tok_per_s": decoded / dt if dt else 0.0,
+            "p50_latency_s": float(np.median(lat)) if lat else 0.0,
+            "p50_ttft_s": float(np.median(ttft)) if ttft else 0.0,
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--cache-len", type=int, default=64)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs.registry import SMOKE
+    from repro.models.build import build_model
+    from repro.parallel.ctx import RunCtx
+
+    cfg = SMOKE[args.arch]
+    model = build_model(cfg)
+    ctx = RunCtx(mesh=None, remat="none")
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    server = Server(model, ctx, params, args.batch, args.cache_len)
+
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        server.submit(
+            Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, size=args.prompt_len).tolist(),
+                max_new=args.max_new,
+            )
+        )
+    stats = server.run_until_drained()
+    for k, v in stats.items():
+        print(f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Training driver.
+
+CPU-scale entry point exercising the full production path: config registry,
+mesh construction, sharded params, AdamW, deterministic data, async
+checkpoints, restart.  On a real TPU fleet the same driver runs with
+``--mesh single|multi`` under one process per host (jax.distributed); here
+``--devices N`` forces N host devices for multi-device CPU runs.
+
+Examples::
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+        --steps 100 --ckpt-dir /tmp/ckpt
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+        --devices 8 --mesh-shape 4,2 --steps 50
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-trainable)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (set before jax init)")
+    ap.add_argument("--mesh-shape", default="",
+                    help="e.g. 4,2 -> mesh (data=4, model=2)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ga-steps", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--remat", default="none")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}"
+        )
+
+    import jax
+    from repro.configs.registry import ARCHS, SMOKE
+    from repro.data.synthetic import ShardedLoader, SyntheticLM
+    from repro.launch.mesh import make_mesh, mesh_axes
+    from repro.models.build import build_model
+    from repro.optim import adamw
+    from repro.parallel.ctx import RunCtx
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
+    model = build_model(cfg)
+
+    mesh = None
+    dp, tp = ("data",), "model"
+    if args.mesh_shape:
+        shape = tuple(int(x) for x in args.mesh_shape.split(","))
+        axes = ("data", "model")[: len(shape)] if len(shape) <= 2 else (
+            "pod", "data", "model")
+        mesh = make_mesh(shape, axes)
+        dp, tp = mesh_axes(mesh)
+
+    ctx = RunCtx(mesh=mesh, dp=dp, tp=tp, remat=args.remat)
+    opt = adamw.AdamWConfig(
+        lr=args.lr,
+        weight_decay=0.0,
+        schedule=adamw.warmup_cosine(args.lr, max(args.steps // 20, 1),
+                                     args.steps),
+    )
+    tcfg = TrainerConfig(
+        steps=args.steps,
+        ga_steps=args.ga_steps,
+        ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+        ckpt_dir=args.ckpt_dir or None,
+        log_every=max(args.steps // 20, 1),
+    )
+    trainer = Trainer(model, ctx, opt, tcfg)
+
+    key = jax.random.PRNGKey(args.seed)
+    start_step, extra = 0, {}
+    if args.resume and args.ckpt_dir:
+        params, opt_state, start_step, extra = trainer.recover(key)
+        print(f"resumed from step {start_step}")
+    else:
+        params, opt_state = trainer.init(key)
+
+    src = SyntheticLM(cfg, batch=args.batch, seq_len=args.seq, seed=args.seed)
+    loader = ShardedLoader(
+        src, mesh=mesh, dp_axes=dp,
+        start_step=int(extra.get("data_step", start_step)),
+    )
+    try:
+        params, opt_state, history = trainer.run(
+            params, opt_state, loader, start_step=start_step,
+            on_step=lambda s, m: print(
+                f"step {s:5d} loss {m['loss']:.4f} "
+                f"gnorm {m['grad_norm']:.3f} {m['step_time_s']*1e3:.0f}ms",
+                flush=True,
+            ),
+        )
+    finally:
+        loader.close()
+    print(f"final loss: {history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

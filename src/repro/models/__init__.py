@@ -1,0 +1,1 @@
+"""Composable model zoo covering the 10 assigned architectures."""

@@ -1,0 +1,250 @@
+"""Model facade: init / train_loss / prefill / decode for every arch,
+plus the ShapeDtypeStruct input builders the multi-pod dry-run lowers
+against (no allocation — the shannon/kernels stand-in pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.common import ArchConfig, Segment
+from repro.parallel.ctx import RunCtx, shard
+
+__all__ = ["Model", "ShapeConfig", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+@dataclasses.dataclass
+class Model:
+    """All entry points close over (cfg, segment structure); params are
+    explicit pytrees so the launcher controls sharding and checkpointing."""
+
+    cfg: ArchConfig
+    dec_segments: List[Segment]
+    enc_segments: Optional[List[Segment]] = None
+
+    # ------------------------------------------------------------------ #
+    def init(self, ctx: RunCtx, key) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        kio, kdec, kenc = jax.random.split(key, 3)
+        io_p, io_s = T.lm_io_init(cfg, ctx, kio)
+        _, dec_p, dec_s = T.stack_init(cfg.layer_kinds(), cfg, ctx, kdec)
+        params = {"io": io_p, "dec": dec_p}
+        specs = {"io": io_s, "dec": dec_s}
+        if cfg.n_enc_layers:
+            _, enc_p, enc_s = T.stack_init(
+                ["enc"] * cfg.n_enc_layers, cfg, ctx, kenc
+            )
+            params["enc"] = enc_p
+            specs["enc"] = enc_s
+        return params, specs
+
+    def abstract_init(self, ctx: RunCtx) -> Tuple[Any, Any]:
+        """(params ShapeDtypeStructs, PartitionSpecs) with NO allocation.
+
+        Specs are plain Python objects built during tracing, so they can be
+        captured from an ``eval_shape`` of ``init`` — this is how the
+        dry-run stands up a 1T-parameter model on a CPU host.
+        """
+        captured = {}
+
+        def f(k):
+            p, s = self.init(ctx, k)
+            captured["specs"] = s
+            return p
+
+        params_struct = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return params_struct, captured["specs"]
+
+    # ------------------------------------------------------------------ #
+    def _encode(self, params, ctx: RunCtx, frames: jax.Array) -> jax.Array:
+        B, S, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x = shard(frames.astype(self.cfg.dtype), ctx, ctx.hidden_spec())
+        x, _ = T.stack_apply(
+            self.enc_segments, params["enc"], self.cfg, ctx, x,
+            mode="train", positions=pos,
+        )
+        return T.final_hidden(params["io"], self.cfg, x)
+
+    def _xkv(self, params, ctx: RunCtx, batch: Dict) -> Optional[jax.Array]:
+        if self.cfg.n_enc_layers:
+            return self._encode(params, ctx, batch["frames"])
+        if "xkv" in batch:
+            return batch["xkv"].astype(self.cfg.dtype)
+        return None
+
+    # ------------------------------------------------------------------ #
+    def train_hidden(self, params, ctx: RunCtx, batch: Dict) -> jax.Array:
+        cfg = self.cfg
+        tokens = batch["inputs"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x = T.embed(params["io"], cfg, ctx, tokens)
+        x, _ = T.stack_apply(
+            self.dec_segments, params["dec"], cfg, ctx, x,
+            mode="train", positions=pos, xkv=self._xkv(params, ctx, batch),
+        )
+        return x
+
+    def train_loss(self, params, ctx: RunCtx, batch: Dict) -> jax.Array:
+        h = self.train_hidden(params, ctx, batch)
+        return T.chunked_ce_loss(
+            params["io"], self.cfg, ctx, h, batch["targets"], batch["mask"]
+        )
+
+    def train_logits(self, params, ctx: RunCtx, batch: Dict) -> jax.Array:
+        """Full logits (small configs / tests only)."""
+        h = self.train_hidden(params, ctx, batch)
+        return T.logits_fn(params["io"], self.cfg, ctx, h)
+
+    # ------------------------------------------------------------------ #
+    def prefill(
+        self, params, ctx: RunCtx, batch: Dict, cache_len: int
+    ) -> Tuple[jax.Array, Any]:
+        cfg = self.cfg
+        tokens = batch["inputs"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x = T.embed(params["io"], cfg, ctx, tokens)
+        x, caches = T.stack_apply(
+            self.dec_segments, params["dec"], cfg, ctx, x,
+            mode="prefill", cache_len=cache_len, positions=pos,
+            xkv=self._xkv(params, ctx, batch),
+        )
+        logits = T.logits_fn(params["io"], cfg, ctx, x[:, -1:, :])[:, 0]
+        return logits, caches
+
+    def decode_step(
+        self,
+        params,
+        ctx: RunCtx,
+        token: jax.Array,  # (B, 1) int32
+        positions: jax.Array,  # (B,) int32 — index of the new token
+        caches: Any,
+    ) -> Tuple[jax.Array, Any]:
+        cfg = self.cfg
+        B = token.shape[0]
+        pos = positions[:, None]
+        x = T.embed(params["io"], cfg, ctx, token)
+        x, caches = T.stack_apply(
+            self.dec_segments, params["dec"], cfg, ctx, x,
+            mode="decode", caches=caches, positions=pos, xkv=None,
+        )
+        logits = T.logits_fn(params["io"], cfg, ctx, x)[:, 0]
+        return logits, caches
+
+    # ------------------------------------------------------------------ #
+    # dry-run stand-ins
+    # ------------------------------------------------------------------ #
+    def input_structs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            batch = {
+                "inputs": sds((B, S), i32),
+                "targets": sds((B, S), i32),
+                "mask": sds((B, S), jnp.float32),
+            }
+        elif shape.kind == "prefill":
+            batch = {"inputs": sds((B, S), i32)}
+        else:  # decode
+            batch = {"token": sds((B, 1), i32), "positions": sds((B,), i32)}
+        if cfg.n_enc_layers:
+            if shape.kind != "decode":
+                batch["frames"] = sds((B, S, cfg.d_model), cfg.dtype)
+        elif cfg.cross_kv_len and shape.kind != "decode":
+            batch["xkv"] = sds((B, cfg.cross_kv_len, cfg.d_model), cfg.dtype)
+        return batch
+
+    def input_specs(self, shape: ShapeConfig, ctx: RunCtx) -> Dict[str, P]:
+        specs: Dict[str, P] = {}
+        for k, v in self.input_structs(shape).items():
+            if k in ("inputs", "targets", "mask", "token"):
+                specs[k] = P(ctx.dp, None)
+            elif k == "positions":
+                specs[k] = P(ctx.dp)
+            else:  # frames / xkv
+                specs[k] = P(ctx.dp, None, None)
+        return specs
+
+    def cache_structs(self, shape: ShapeConfig, ctx: RunCtx) -> Any:
+        """Abstract cache pytree for decode dry-runs (eval_shape of prefill)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        params_struct = jax.eval_shape(
+            lambda k: self.init(ctx_local(ctx), k)[0], jax.random.PRNGKey(0)
+        )
+        pre_batch = {"inputs": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.n_enc_layers:
+            pre_batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)
+        elif cfg.cross_kv_len:
+            pre_batch["xkv"] = jax.ShapeDtypeStruct(
+                (B, cfg.cross_kv_len, cfg.d_model), cfg.dtype
+            )
+        _, cache_struct = jax.eval_shape(
+            lambda p, b: self.prefill(p, ctx_local(ctx), b, cache_len=S),
+            params_struct, pre_batch,
+        )
+        return cache_struct
+
+    def cache_specs(self, cache_struct: Any, ctx: RunCtx) -> Any:
+        """PartitionSpecs for a cache pytree (see sharding rules in DESIGN)."""
+        cfg = self.cfg
+        tp_heads = ctx.tp_size and cfg.n_kv_heads % max(ctx.tp_size, 1) == 0
+
+        def spec_for(path, leaf) -> P:
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            nd = len(leaf.shape)
+            if name in ("k", "v"):  # (L, B, W, KH, Dh)
+                if tp_heads:
+                    return P(None, ctx.dp, None, ctx.tp, None)
+                return P(None, ctx.dp, ctx.tp, None, None)
+            if name == "pos":  # (L, B, W)
+                if tp_heads:
+                    return P(None, ctx.dp, None)
+                return P(None, ctx.dp, ctx.tp)
+            if name == "conv":  # (L, B, Wc-1, C)
+                return P(None, ctx.dp, None, ctx.tp)
+            if name == "ssm":  # (L, B, Di, N)
+                return P(None, ctx.dp, ctx.tp, None)
+            if name == "h":  # (L, B, W)
+                return P(None, ctx.dp, ctx.tp)
+            return P(*([None] * nd))
+
+        return jax.tree_util.tree_map_with_path(spec_for, cache_struct)
+
+
+def ctx_local(ctx: RunCtx) -> RunCtx:
+    """ctx variant with no mesh (for eval_shape structure derivation)."""
+    return dataclasses.replace(ctx, mesh=None, moe_mode="local")
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    from repro.models.common import build_layer_program
+
+    dec_segments = build_layer_program(cfg.layer_kinds())
+    enc_segments = (
+        build_layer_program(["enc"] * cfg.n_enc_layers)
+        if cfg.n_enc_layers
+        else None
+    )
+    return Model(cfg=cfg, dec_segments=dec_segments, enc_segments=enc_segments)

@@ -1,0 +1,248 @@
+"""Architecture configuration schema + the layer-program machinery.
+
+Every assigned architecture is expressed as an :class:`ArchConfig` plus a
+repeating *pattern* of block kinds (e.g. gemma3's 5 local : 1 global).  The
+pattern is compiled into :class:`Segment`\\ s — maximal runs of identical
+repeating units — each executed as one ``jax.lax.scan`` over stacked layer
+parameters, which keeps the HLO size O(kinds) instead of O(layers) even for
+the 126-layer llama3-405b.
+
+Block kinds:
+
+- ``global``  — GQA self-attention (full causal) + MLP
+- ``local``   — GQA self-attention (sliding window) + MLP
+- ``moe``     — GQA self-attention + mixture-of-experts FFN
+- ``dense``   — like ``global`` (used for MoE models' leading dense layers)
+- ``mamba``   — mamba1 selective-SSM mixer (no MLP)
+- ``rec``     — RG-LRU recurrent mixer + MLP (griffin/recurrentgemma)
+- ``cross``   — GQA self-attention + gated cross-attention + MLP (VLM)
+- ``enc``     — bidirectional self-attention + MLP (encoder stacks)
+- ``xdec``    — causal self-attention + encoder cross-attention + MLP
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ArchConfig", "Segment", "build_layer_program", "KNOWN_KINDS"]
+
+KNOWN_KINDS = (
+    "global",
+    "local",
+    "moe",
+    "dense",
+    "mamba",
+    "rec",
+    "cross",
+    "enc",
+    "xdec",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """Static description of one architecture (exact published numbers)."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # layer pattern (repeating unit of block kinds); padded/truncated to
+    # n_layers by build_layer_program.
+    pattern: Tuple[str, ...] = ("global",)
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    local_window: int = 1024
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "silu"  # silu | gelu
+    mlp_gated: bool = True  # SwiGLU-style; False = classic 2-matrix FFN
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_dense_residual: bool = False  # arctic: parallel dense FFN
+    n_shared_experts: int = 0  # kimi: always-on experts
+    first_dense_layers: int = 0  # kimi: leading dense layers
+    d_ff_dense: Optional[int] = None  # d_ff of dense/residual FFN if different
+    # --- SSM (mamba1) ---
+    ssm_state: int = 16
+    d_inner: int = 0  # 0 -> 2 * d_model
+    conv_width: int = 4
+    dt_rank: int = 0  # 0 -> d_model // 16
+    # --- hybrid (RG-LRU) ---
+    lru_width: int = 0  # 0 -> d_model
+    # --- VLM / enc-dec frontends (stubs provide the embeddings) ---
+    cross_kv_len: int = 0  # vision tokens / encoder length for cross blocks
+    n_enc_layers: int = 0  # encoder stack depth (seamless)
+    # --- numerics ---
+    dtype: Any = jnp.bfloat16
+    sub_quadratic: bool = False  # eligible for long_500k decode
+
+    # ------------------------------------------------------------------ #
+    def __post_init__(self):
+        for k in self.pattern:
+            if k not in KNOWN_KINDS:
+                raise ValueError(f"unknown block kind {k!r}")
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // max(self.n_heads, 1)
+
+    @property
+    def resolved_d_inner(self) -> int:
+        return self.d_inner or 2 * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.dt_rank or max(self.d_model // 16, 1)
+
+    @property
+    def resolved_lru_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def resolved_d_ff_dense(self) -> int:
+        return self.d_ff_dense or self.d_ff
+
+    @property
+    def attention_free(self) -> bool:
+        return all(k == "mamba" for k in self.pattern)
+
+    def layer_kinds(self) -> List[str]:
+        """Per-layer kinds for the decoder stack (length n_layers)."""
+        kinds: List[str] = []
+        if self.first_dense_layers:
+            kinds.extend(["dense"] * self.first_dense_layers)
+        i = 0
+        while len(kinds) < self.n_layers:
+            kinds.append(self.pattern[i % len(self.pattern)])
+            i += 1
+        return kinds[: self.n_layers]
+
+    # parameter counting (for roofline MODEL_FLOPS) ---------------------- #
+    def param_counts(self) -> Tuple[int, int]:
+        """(total_params, active_params) — embedding included once."""
+        D, F, V = self.d_model, self.d_ff, self.vocab
+        H, KH, Dh = self.n_heads, self.n_kv_heads, self.resolved_head_dim
+        total = V * D  # embedding
+        if not self.tie_embeddings:
+            total += V * D  # lm head
+        active = total
+
+        def attn_params() -> int:
+            return D * H * Dh + 2 * D * KH * Dh + H * Dh * D
+
+        def mlp_params(f: int) -> int:
+            return (3 if self.mlp_gated else 2) * D * f
+
+        for kind in self.layer_kinds():
+            if kind in ("global", "local", "dense", "enc"):
+                f = self.resolved_d_ff_dense if kind == "dense" else F
+                p = attn_params() + mlp_params(
+                    f if kind != "dense" else self.resolved_d_ff_dense
+                )
+                total += p
+                active += p
+            elif kind == "moe":
+                shared = self.n_shared_experts * mlp_params(F)
+                router = D * self.n_experts
+                experts_total = self.n_experts * mlp_params(F)
+                experts_active = self.top_k * mlp_params(F)
+                dense_res = (
+                    mlp_params(self.resolved_d_ff_dense)
+                    if self.moe_dense_residual
+                    else 0
+                )
+                total += attn_params() + router + experts_total + shared + dense_res
+                active += attn_params() + router + experts_active + shared + dense_res
+            elif kind == "mamba":
+                Di, N = self.resolved_d_inner, self.ssm_state
+                R = self.resolved_dt_rank
+                p = (
+                    D * 2 * Di  # in_proj
+                    + self.conv_width * Di  # conv
+                    + Di * (R + 2 * N)  # x_proj
+                    + R * Di  # dt_proj
+                    + Di * N  # A
+                    + Di  # D skip
+                    + Di * D  # out_proj
+                )
+                total += p
+                active += p
+            elif kind == "rec":
+                W = self.resolved_lru_width
+                p = (
+                    2 * D * W  # linear + gate branches
+                    + self.conv_width * W  # causal conv
+                    + 2 * W * W  # RG-LRU input & recurrence gate projections
+                    + W  # Lambda (recurrence decay)
+                    + W * D  # out proj
+                    + mlp_params(F)
+                )
+                total += p
+                active += p
+            elif kind in ("cross", "xdec"):
+                p = 2 * attn_params() + mlp_params(F)
+                total += p
+                active += p
+        if self.n_enc_layers:
+            enc = self.n_enc_layers * (attn_params() + mlp_params(F))
+            total += enc
+            active += enc
+        return total, active
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A maximal run of identical repeating units, executed as one scan.
+
+    ``unit``: tuple of block kinds applied in order inside the scan body.
+    ``count``: number of scan iterations (stacked-parameter leading dim).
+    """
+
+    unit: Tuple[str, ...]
+    count: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.unit) * self.count
+
+
+def build_layer_program(kinds: Sequence[str], max_unit: int = 8) -> List[Segment]:
+    """Compile a per-layer kind list into scan segments.
+
+    Greedy: find the shortest repeating unit (length <= max_unit) covering a
+    maximal prefix, emit it as a Segment, recurse on the rest.  Guarantees
+    segment order == layer order.
+    """
+    kinds = list(kinds)
+    segments: List[Segment] = []
+    i = 0
+    n = len(kinds)
+    while i < n:
+        best = (1, 1)  # (unit_len, count)
+        for ul in range(1, min(max_unit, n - i) + 1):
+            unit = kinds[i : i + ul]
+            count = 1
+            while (
+                i + (count + 1) * ul <= n
+                and kinds[i + count * ul : i + (count + 1) * ul] == unit
+            ):
+                count += 1
+            if count * ul > best[0] * best[1] or (
+                count * ul == best[0] * best[1] and ul < best[0]
+            ):
+                best = (ul, count)
+        ul, count = best
+        segments.append(Segment(unit=tuple(kinds[i : i + ul]), count=count))
+        i += ul * count
+    assert sum(s.n_layers for s in segments) == n
+    return segments

@@ -1,0 +1,4 @@
+"""Parallelism substrate: run context, sharding rules, pipeline stages."""
+from repro.parallel.ctx import RunCtx, shard
+
+__all__ = ["RunCtx", "shard"]

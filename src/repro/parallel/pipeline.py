@@ -1,0 +1,117 @@
+"""Pipeline parallelism over the pod axis (GPipe fill–drain).
+
+The paper's two-level interconnect (on-chip network vs OCCC) maps to
+intra-pod ICI vs inter-pod links; pipeline stages are the classic way to
+put the *slow* link on the lowest-frequency traffic: one activation
+transfer per microbatch per stage boundary instead of per-layer parameter
+or gradient traffic.
+
+Implementation: layers are already scan-stacked, so a stage is simply a
+shard of the layer-stack dimension.  ``gpipe`` runs inside ``shard_map``
+over the pipeline axis; stage boundaries are one-sided neighbor puts
+(``lax.ppermute`` — or the GAScore engine, same interface).  Autodiff
+through ppermute gives the reverse-direction backward schedule for free;
+remat on the stage body bounds activation memory.
+
+Schedule (S stages, M microbatches, T = M + S - 1 ticks):
+
+  tick t: stage s computes microbatch (t - s) if 0 <= t - s < M
+          then puts its activation to stage s+1.
+
+Bubble fraction = (S-1)/T, the standard GPipe overhead; the multi-pod
+mesh uses S=2, M>=8 -> <= 11% bubble.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["gpipe", "pipelined"]
+
+
+def gpipe(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    stage_params: Any,
+    x_micro: jax.Array,  # (M, mb, ...) microbatched input (stage-0 content)
+    *,
+    axis: str,
+    n_stages: int,
+    broadcast_out: bool = True,
+) -> jax.Array:
+    """Run ``stage_fn`` as a GPipe pipeline inside shard_map over ``axis``.
+
+    Every device holds ``stage_params`` for ITS stage (layer-stack shard).
+    Returns the final-stage outputs (M, mb, ...).  With ``broadcast_out``
+    the result is psum-broadcast to every stage (cheap relative to the
+    steady-state activation traffic, and lets the loss epilogue run
+    replicated); otherwise it is valid on the last stage only.
+    """
+    S = n_stages
+    M = x_micro.shape[0]
+    stage = lax.axis_index(axis)
+    mb_shape = x_micro.shape[1:]
+    carry_in = jnp.zeros(mb_shape, x_micro.dtype)
+    outputs = jnp.zeros_like(x_micro)
+    pairs = [(i, i + 1) for i in range(S - 1)]  # forward chain (no wrap)
+
+    for t in range(M + S - 1):
+        # stage 0 injects microbatch t; others consume the neighbor put
+        mb_idx = jnp.clip(t - stage, 0, M - 1)
+        inject = lax.dynamic_index_in_dim(x_micro, jnp.clip(t, 0, M - 1), 0,
+                                          keepdims=False)
+        x_in = jnp.where(stage == 0, inject, carry_in)
+        active = (t - stage >= 0) & (t - stage < M)
+        y = stage_fn(stage_params, x_in)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        # last stage records its result
+        outputs = lax.cond(
+            active & (stage == S - 1),
+            lambda o: lax.dynamic_update_index_in_dim(o, y, mb_idx, 0),
+            lambda o: o,
+            outputs,
+        )
+        # one-sided put of activations to the next stage
+        carry_in = lax.ppermute(y, axis, pairs)
+    if broadcast_out:
+        outputs = lax.psum(outputs, axis)  # only the last stage is nonzero
+    return outputs
+
+
+def pipelined(
+    stage_fn: Callable,
+    *,
+    mesh: jax.sharding.Mesh,
+    axis: str = "pod",
+    n_micro: int,
+    params_spec: Any,
+    x_spec: P,
+    out_spec: Optional[P] = None,
+    remat: bool = True,
+) -> Callable:
+    """Wrap a stage function into a jit-able pipelined forward.
+
+    ``params_spec`` must shard the layer-stack dimension over ``axis``;
+    ``x_spec``/``out_spec`` shard the microbatch dimension over nothing
+    (microbatches stream through stages, data-parallel axes can shard the
+    per-microbatch batch dim as usual).
+    """
+    n_stages = mesh.shape[axis]
+    body = jax.checkpoint(stage_fn) if remat else stage_fn
+
+    def fn(stage_params, x_micro):
+        return gpipe(
+            body, stage_params, x_micro, axis=axis, n_stages=n_stages
+        )
+
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(params_spec, x_spec),
+        out_specs=out_spec if out_spec is not None else x_spec,
+        check_vma=False,
+    )

@@ -1,0 +1,74 @@
+"""Sharding utilities: divisibility-safe spec resolution.
+
+Explicit jit ``in_shardings`` are strict: a dimension must be exactly
+divisible by the product of its mesh axes (unlike internal propagation,
+which pads).  Real configs violate this routinely — vocab 256206, 1601
+vision tokens, 56 attention heads, batch-1 long-context decode — so every
+spec that reaches a NamedSharding goes through :func:`sanitize`, which
+drops the axis assignment of any non-dividing dimension (falling back to
+replication for that dim, the conservative-but-correct choice; the
+roofline table then shows the replication cost explicitly, e.g. arctic's
+56 heads staying unsharded over model=16).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["sanitize", "sanitize_tree", "named_shardings"]
+
+
+def _axes_size(mesh: jax.sharding.Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in entry)
+    return mesh.shape[entry]
+
+
+def sanitize(spec: P, shape: Sequence[int], mesh: jax.sharding.Mesh) -> P:
+    """Drop per-dimension axis assignments that don't divide the dim."""
+    entries = tuple(spec)
+    out = []
+    for d, entry in enumerate(entries):
+        if entry is None or d >= len(shape):
+            out.append(entry)
+            continue
+        size = _axes_size(mesh, entry)
+        if size and shape[d] % size == 0:
+            out.append(entry)
+        elif isinstance(entry, (tuple, list)):
+            # try dropping trailing axes until it divides
+            cand = list(entry)
+            while cand and shape[d] % _axes_size(mesh, tuple(cand)) != 0:
+                cand.pop()
+            out.append(tuple(cand) if cand else None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def sanitize_tree(spec_tree: Any, struct_tree: Any,
+                  mesh: jax.sharding.Mesh) -> Any:
+    """tree_map sanitize over matching (specs, shapes) trees."""
+    return jax.tree.map(
+        lambda spec, st: sanitize(spec, st.shape, mesh),
+        spec_tree,
+        struct_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def named_shardings(spec_tree: Any, struct_tree: Any,
+                    mesh: jax.sharding.Mesh) -> Any:
+    """Specs -> NamedShardings with divisibility sanitation."""
+    return jax.tree.map(
+        lambda spec, st: NamedSharding(mesh, sanitize(spec, st.shape, mesh)),
+        spec_tree,
+        struct_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

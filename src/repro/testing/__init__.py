@@ -1,0 +1,6 @@
+"""Multi-device test suites, run as subprocesses by pytest.
+
+Each module's __main__ sets XLA_FLAGS for N host CPU devices BEFORE
+importing jax (which is why these are separate processes: the main pytest
+process must keep seeing 1 device, per the dry-run isolation rule).
+"""

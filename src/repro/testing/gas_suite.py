@@ -1,0 +1,160 @@
+"""GAS layer suite: segments, put/get, AMs, ring collectives (8 devices)."""
+import os
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def main() -> None:
+    from repro.core import am, collectives, gasnet
+    from repro.core.engine import make_engine
+
+    mesh = jax.make_mesh((8,), ("node",))
+    ctx = gasnet.Context(mesh, node_axis="node", backend="xla",
+                         am_payload_width=4)
+
+    aspace = ctx.address_space()
+    aspace.register("buf", (32,), jnp.float32)
+    seg = aspace.alloc("buf")
+    assert seg.shape == (8, 32)
+
+    # ---- one-sided put (Shift pattern, sender-chosen offset) ------------
+    def prog(node, seg):
+        data = jnp.full((4,), node.my_id, jnp.float32)
+        seg = node.put(seg, data, to=gasnet.Shift(1), index=2)
+        node.barrier()
+        return seg
+
+    got = np.asarray(ctx.spmd(prog, seg))
+    for n in range(8):
+        np.testing.assert_allclose(got[n, 2:6], (n - 1) % 8)
+        np.testing.assert_allclose(got[n, :2], 0)
+    print("put OK")
+
+    # ---- put with Perm pattern ------------------------------------------
+    perm = (3, 0, 7, 1, 2, 6, 5, 4)
+
+    def prog_perm(node, seg):
+        data = jnp.full((4,), node.my_id, jnp.float32)
+        return node.put(seg, data, to=gasnet.Perm(perm), index=0)
+
+    got = np.asarray(ctx.spmd(prog_perm, seg))
+    for s, d in enumerate(perm):
+        np.testing.assert_allclose(got[d, :4], s)
+    print("perm put OK")
+
+    # ---- one-sided get ----------------------------------------------------
+    seg2 = ctx.spmd(prog, seg)
+
+    def prog_get(node, seg):
+        return node.get(seg, frm=gasnet.Shift(3), index=2, size=4)[None]
+
+    out = np.asarray(ctx.spmd(prog_get, seg2, out_specs=P("node")))
+    for n in range(8):
+        np.testing.assert_allclose(out[n], (n + 3 - 1) % 8)
+    print("get OK")
+
+    # ---- ring collectives vs natives --------------------------------------
+    x = jnp.arange(8.0 * 16).reshape(8, 16)
+
+    def prog_coll(node, x):
+        e = node.engine
+        ag = collectives.ring_all_gather(e, node.local(x))
+        rs = collectives.ring_reduce_scatter(e, ag)
+        ar = collectives.ring_all_reduce(e, node.local(x) * 1.0)
+        return ag[None], rs[None], ar[None]
+
+    ag, rs, ar = ctx.spmd(
+        prog_coll, x, out_specs=(P("node"), P("node"), P("node"))
+    )
+    ag, rs, ar = map(np.asarray, (ag, rs, ar))
+    xg = np.asarray(x)
+    for n in range(8):
+        np.testing.assert_allclose(ag[n], xg.reshape(-1))
+        np.testing.assert_allclose(rs[n], 8 * xg.reshape(8, 16)[n])
+    np.testing.assert_allclose(ar, np.tile(xg.sum(0), (8, 1)))
+    print("ring collectives OK")
+
+    # ---- hierarchical all-reduce (2 pods x 4) -----------------------------
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+    xx = jnp.arange(8.0 * 16).reshape(2, 4, 16) / 7.0
+
+    def prog_hier(x_l):
+        inner = make_engine("xla", "data", 4)
+        outer = make_engine("xla", "pod", 2)
+        return collectives.hierarchical_all_reduce(inner, outer, x_l[0, 0])[
+            None, None
+        ]
+
+    hier = jax.jit(
+        jax.shard_map(
+            prog_hier, mesh=mesh2, in_specs=(P("pod", "data"),),
+            out_specs=P("pod", "data"), check_vma=False,
+        )
+    )(xx)
+    np.testing.assert_allclose(
+        np.asarray(hier), np.tile(np.asarray(xx).sum((0, 1)), (2, 4, 1)),
+        rtol=1e-6,
+    )
+    print("hierarchical all-reduce OK")
+
+    # ---- active messages: counters + AMLong writes -------------------------
+    handlers = ctx.handlers
+
+    @handlers.handler("count")
+    def h_count(state, payload, args):
+        out = dict(state)
+        out["cnt"] = state["cnt"] + args[0]
+        return out
+
+    handlers.register("write", am.long_write_handler("buf"))
+
+    def prog_am(node, seg):
+        state = {"cnt": jnp.zeros((), jnp.int32), "buf": node.local(seg)}
+        d1 = jnp.asarray((node.my_id + 2) % 8, jnp.int32)
+        node.am_short(d1, "count", args=(3,))
+        node.am_short(d1, "count", args=(4,))
+        node.am_long(
+            jnp.asarray((node.my_id + 1) % 8, jnp.int32), "write",
+            payload=jnp.full((4,), 100 + node.my_id, jnp.float32),
+            dst_index=8,
+        )
+        state = node.am_flush(state)
+        return state["cnt"][None], state["buf"][None]
+
+    cnt, buf = ctx.spmd(prog_am, seg, out_specs=(P("node"), P("node")))
+    cnt, buf = np.asarray(cnt), np.asarray(buf)
+    np.testing.assert_array_equal(cnt, 7)
+    for n in range(8):
+        np.testing.assert_allclose(buf[n, 8:12], 100 + (n - 1) % 8)
+    print("active messages OK")
+
+    # ---- AM overflow accounting -------------------------------------------
+    ctx2 = gasnet.Context(mesh, node_axis="node", backend="xla",
+                          am_payload_width=4, am_capacity=4,
+                          am_per_peer_capacity=1)
+    ctx2.handlers.register("count", h_count)
+
+    def prog_over(node, seg):
+        state = {"cnt": jnp.zeros((), jnp.int32)}
+        d = jnp.asarray((node.my_id + 1) % 8, jnp.int32)
+        for _ in range(3):  # 3 messages to the same peer, capacity 1
+            node.am_short(d, "count", args=(1,))
+        state = node.am_flush(state)
+        return state["cnt"][None], node.dropped[None]
+
+    cnt, dropped = ctx2.spmd(prog_over, seg, out_specs=(P("node"), P("node")))
+    np.testing.assert_array_equal(np.asarray(cnt), 1)
+    np.testing.assert_array_equal(np.asarray(dropped), 2)
+    print("AM overflow accounting OK")
+
+    print("GAS_SUITE_PASS")
+
+
+if __name__ == "__main__":
+    main()

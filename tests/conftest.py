@@ -1,0 +1,41 @@
+# NOTE: deliberately does NOT set --xla_force_host_platform_device_count —
+# the main pytest process must see 1 CPU device (smoke tests and benches run
+# single-device; the dry-run and the multi-device suites manage their own
+# device counts in subprocesses).
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+def run_suite(module: str, devices: int, timeout: int = 1200) -> str:
+    """Run a repro.testing suite in a subprocess with N host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", module],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+        cwd=ROOT,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{module} failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def suite_runner():
+    return run_suite

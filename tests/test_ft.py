@@ -1,0 +1,79 @@
+"""Fault-tolerance control-plane logic (injectable clock, no devices)."""
+import numpy as np
+
+from repro.runtime.ft import (
+    HeartbeatMonitor,
+    StragglerTracker,
+    elastic_plan,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_failure_detection():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(range(4), timeout_s=5.0, clock=clk)
+    clk.t = 3.0
+    for n in (0, 1, 2):
+        mon.beat(n)
+    clk.t = 7.0
+    assert mon.check() == [3]  # node 3 silent since t=0
+    assert mon.failed == [3]
+    assert mon.alive == [0, 1, 2]
+    # failed stays failed even if a stale beat arrives
+    mon.beat(3)
+    clk.t = 8.0
+    assert mon.check() == []
+    assert mon.failed == [3]
+    # rejoin via admit
+    mon.admit(3)
+    assert mon.alive == [0, 1, 2, 3]
+
+
+def test_heartbeat_monotone_multiple():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(range(6), timeout_s=1.0, clock=clk)
+    clk.t = 2.0
+    mon.beat(0)
+    mon.beat(5)
+    assert sorted(mon.check()) == [1, 2, 3, 4]
+
+
+def test_straggler_quarantine_after_patience():
+    tr = StragglerTracker(range(4), alpha=1.0, threshold=1.5, patience=2)
+    for step in range(3):
+        for n in range(3):
+            tr.record(n, 1.0)
+        tr.record(3, 3.0)  # 3x median
+        decisions = tr.assess()
+        flagged = {d.node_id: d.action for d in decisions}
+        assert 3 in flagged
+        if step == 0:
+            assert flagged[3] == "observe"
+        else:
+            assert flagged[3] == "quarantine"
+
+
+def test_straggler_recovers():
+    tr = StragglerTracker(range(3), alpha=1.0, threshold=1.5, patience=2)
+    tr.record(0, 1.0); tr.record(1, 1.0); tr.record(2, 5.0)
+    assert tr.assess()[0].action == "observe"
+    tr.record(2, 1.0)  # back to normal -> strikes reset
+    assert tr.assess() == []
+    assert tr.strikes[2] == 0
+
+
+def test_elastic_plan_shrinks_dp_first():
+    assert elastic_plan(512, 16, prefer_pods=2) == (2, 16, 16)
+    # losing one node: collapsing pods preserves more DP groups (496 > 480)
+    assert elastic_plan(511, 16, prefer_pods=2) == (1, 31, 16)
+    # equal usable nodes -> prefer keeping the pod structure
+    assert elastic_plan(260, 16, prefer_pods=2) == (2, 8, 16)
+    assert elastic_plan(255, 16, prefer_pods=2) == (1, 15, 16)
+    assert elastic_plan(15, 16) is None

@@ -1,0 +1,32 @@
+"""Multi-device suites (subprocesses with forced host device counts).
+
+The main pytest process keeps 1 CPU device; each suite sets its own
+XLA_FLAGS before importing jax.  See src/repro/testing/*.
+"""
+import pytest
+
+
+@pytest.mark.slow
+def test_gas_suite(suite_runner):
+    out = suite_runner("repro.testing.gas_suite", devices=8)
+    assert "GAS_SUITE_PASS" in out
+
+
+@pytest.mark.slow
+def test_gascore_suite(suite_runner):
+    out = suite_runner("repro.testing.gascore_suite", devices=4)
+    assert "GASCORE_SUITE_PASS" in out
+
+
+@pytest.mark.slow
+def test_dist_suite(suite_runner):
+    out = suite_runner("repro.testing.dist_suite", devices=8, timeout=1800)
+    assert "DIST_SUITE_PASS" in out
+
+
+@pytest.mark.slow
+def test_hlostats_collective_trip_multiplication(suite_runner):
+    """Collective bytes inside scanned loops are multiplied by trip count —
+    the property the roofline collective term depends on."""
+    out = suite_runner("repro.testing.hlostats_coll_suite", devices=4)
+    assert "HLOSTATS_COLL_PASS" in out
