@@ -72,6 +72,7 @@ print("Act 3: disaggregated serving — prefill node puts a KV cache into the")
 print("decode node's memory with ONE one-sided GAScore transfer")
 
 from repro.kernels import gascore
+from repro.compat import shard_map
 
 S, KH, Dh = 32, 2, 16
 kv = jnp.asarray(
@@ -89,7 +90,7 @@ def handoff(seg, kv_l):
 
 
 seg = jax.jit(
-    jax.shard_map(handoff, mesh=mesh, in_specs=(P("node"), P("node")),
+    shard_map(handoff, mesh=mesh, in_specs=(P("node"), P("node")),
                   out_specs=P("node"), check_vma=False)
 )(empty, kv)
 got = np.asarray(seg)

@@ -1,9 +1,10 @@
 """Quickstart: the GASNet-style PGAS API in five minutes.
 
 Eight "nodes" (CPU host devices standing in for TPU chips), one partitioned
-global address space, one-sided puts/gets, Active Messages with handlers,
-and a ring all-reduce built from neighbor puts — the paper's programming
-model end to end.
+global address space, one-sided puts/gets — blocking (Core API) and
+split-phase non-blocking (Extended API) with comm/compute overlap — Active
+Messages with handlers, and a ring all-reduce built from neighbor puts —
+the paper's programming model end to end.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -47,7 +48,24 @@ def get_demo(node, seg):
 got = ctx.spmd(get_demo, seg, out_specs=P("node"))
 print("node 0 got (from node 2):", np.asarray(got)[0])
 
-# --- 4. Active Messages: handler runs at the receiver ---------------------
+# --- 4. Extended API: split-phase non-blocking put/get with overlap -------
+# put_nb initiates the transfer and returns a handle; independent compute
+# issued before node.sync(h) overlaps the wire (gasnet_put_nb semantics).
+def overlap_demo(node, seg):
+    h = node.put_nb(seg, jnp.full((4,), 70.0 + node.my_id, jnp.float32),
+                    to=gasnet.Shift(1), index=20)
+    local = node.local(seg)[:16]
+    stat = jnp.tanh(local) @ jnp.ones((16,))     # overlaps the transfer
+    seg = node.sync(h)                           # split-phase completion
+    g = node.get_nb(seg, frm=gasnet.Shift(1), index=20, size=4)
+    fetched = node.sync(g)                       # completes the get
+    return seg, (fetched + 0.0 * stat)[None]
+
+seg, fetched = ctx.spmd(overlap_demo, seg, out_specs=(P("node"), P("node")))
+print("node 0 put_nb'd to node 1, then get_nb'd it back:",
+      np.asarray(fetched)[0])
+
+# --- 5. Active Messages: handler runs at the receiver ---------------------
 @ctx.handlers.handler("accumulate")
 def h_acc(state, payload, args):
     out = dict(state)
@@ -66,13 +84,20 @@ acc = ctx.spmd(am_demo, seg, out_specs=P("node"))
 print("AM handler results (each node got one message, 4*1*2):",
       np.asarray(acc))
 
-# --- 5. collectives from one-sided puts ------------------------------------
-def ring_demo(node, x):
-    return collectives.ring_all_reduce(node.engine, node.local(x))[None]
+# --- 6. collectives from one-sided puts (incl. broadcast + exchange) -------
+# All rings are built on the split-phase primitives internally: each hop's
+# put is initiated before the previous hop's local work.
+def coll_demo(node, x):
+    e = node.engine
+    ar = collectives.ring_all_reduce(e, node.local(x))
+    bc = collectives.broadcast(e, node.local(x), root=2)
+    ex = collectives.exchange(e, node.local(x))  # all-to-all, fully in flight
+    return ar[None], bc[None], ex[None]
 
 x = jnp.arange(float(N * 16)).reshape(N, 16)
-red = ctx.spmd(ring_demo, x, out_specs=P("node"))
-assert np.allclose(np.asarray(red)[0], np.asarray(x).sum(0))
-print("ring all-reduce over one-sided puts: OK")
+ar, bc, ex = ctx.spmd(coll_demo, x, out_specs=(P("node"),) * 3)
+assert np.allclose(np.asarray(ar)[0], np.asarray(x).sum(0))
+assert np.allclose(np.asarray(bc)[5], np.asarray(x)[2])
+print("ring all-reduce / broadcast / exchange over one-sided puts: OK")
 print("\nSwap backend='gascore' in the Context to run the same program on")
 print("the Pallas remote-DMA engine (see examples/heterogeneous_pipeline.py).")

@@ -36,6 +36,7 @@ from repro.models.build import build_model
 from repro.optim import adamw, compression
 from repro.parallel.ctx import RunCtx
 from repro.runtime.ft import elastic_plan
+from repro.compat import shard_map
 
 
 def make_step(model, opt_cfg, mesh, n_nodes, reduce_mode):
@@ -77,7 +78,7 @@ def make_step(model, opt_cfg, mesh, n_nodes, reduce_mode):
         return jax.tree.map(lambda _: P("node"), b)
 
     def step(params, opt_state, err, batch):
-        return jax.shard_map(
+        return shard_map(
             node_program,
             mesh=mesh,
             in_specs=(rep, rep, rep, batch_specs(batch)),

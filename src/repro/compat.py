@@ -1,0 +1,75 @@
+"""Version compatibility shims for the jax API surface we depend on.
+
+The repo targets the modern jax API; older releases spell several entry
+points differently.  Route the affected calls through this module so both
+work unchanged:
+
+- :func:`shard_map` — ``jax.shard_map(..., check_vma=...)`` vs
+  ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+- :func:`tpu_compiler_params` — ``pltpu.CompilerParams`` vs the older
+  ``pltpu.TPUCompilerParams``.
+- :func:`tpu_interpret` — ``pltpu.InterpretParams()`` (the richer
+  TPU-interpret mode with DMA/semaphore emulation) vs the plain boolean
+  ``interpret=True`` accepted everywhere.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["shard_map", "tpu_compiler_params", "tpu_interpret"]
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: jax.sharding.Mesh,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+) -> Callable:
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def tpu_compiler_params(**kwargs) -> Any:
+    """Construct Pallas TPU compiler params under either API name."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def tpu_interpret(interpret: bool) -> Any:
+    """Value for ``pallas_call(..., interpret=...)`` selecting TPU interpret
+    mode when available (CPU emulation of DMAs + semaphores) and falling
+    back to plain interpret mode otherwise."""
+    if not interpret:
+        return False
+    from jax.experimental.pallas import tpu as pltpu
+
+    params = getattr(pltpu, "InterpretParams", None)
+    return params() if params is not None else True
+
+
+def dma_device_id(idx: Any) -> Any:
+    """``device_id`` operand for ``pltpu.make_async_remote_copy`` with
+    ``DeviceIdType.MESH``.  Modern jax takes a tuple of per-mesh-axis
+    coordinates; the older interpret-mode discharge rule only handles a
+    bare scalar (it all-gathers the operand directly).  All our kernels
+    run on a 1-D node axis, so the two are interchangeable."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return (idx,) if hasattr(pltpu, "InterpretParams") else idx

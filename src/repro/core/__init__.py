@@ -3,12 +3,21 @@
 - ``addrspace``   — partitioned global address space segments.
 - ``am``          — Active Messages (short/medium/long + handler dispatch).
 - ``engine``      — interchangeable transports: XLA software node vs
-                    GAScore Pallas hardware node.
+                    GAScore Pallas hardware node (blocking + split-phase).
+- ``extended``    — GASNet Extended API: non-blocking put/get handles.
 - ``collectives`` — ring/hierarchical collectives over one-sided puts.
-- ``gasnet``      — the GASNet-like user API (Context / Node / put / get).
+- ``gasnet``      — the GASNet-like user API (Context / Node / put / get /
+                    put_nb / get_nb / sync).
 """
 from repro.core.addrspace import AddressSpace, GlobalAddress, SegmentSpec
-from repro.core.engine import CommEngine, GascoreEngine, XlaEngine, make_engine
+from repro.core.engine import (
+    CommEngine,
+    GascoreEngine,
+    Pending,
+    XlaEngine,
+    make_engine,
+)
+from repro.core.extended import GetHandle, Handle, PutHandle
 from repro.core.gasnet import Context, Node, Perm, Shift
 
 __all__ = [
@@ -16,9 +25,13 @@ __all__ = [
     "GlobalAddress",
     "SegmentSpec",
     "CommEngine",
+    "Pending",
     "XlaEngine",
     "GascoreEngine",
     "make_engine",
+    "Handle",
+    "PutHandle",
+    "GetHandle",
     "Context",
     "Node",
     "Shift",

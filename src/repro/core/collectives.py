@@ -6,6 +6,12 @@ collectives are then *algorithms over puts*.  These implementations take a
 software node (XLA ppermute transport) or the hardware node (Pallas
 remote-DMA transport) — engine parity is tested.
 
+All rings are built on the **split-phase** primitives
+(``engine.shift_nb`` → ``Pending.wait``, the Extended-API transport): each
+hop's put is initiated *before* the local work of the previous hop
+(slice/accumulate/store), so per-hop compute overlaps the wire — the
+double-buffered schedule a GAScore drains from its command FIFO.
+
 All functions must be called inside ``shard_map`` over ``engine.axis``.
 
 Ring algorithms (bandwidth-optimal, n-1 hops of 1/n of the data):
@@ -13,6 +19,9 @@ Ring algorithms (bandwidth-optimal, n-1 hops of 1/n of the data):
 - :func:`ring_all_gather`     local (m, ...)        -> (n*m, ...)
 - :func:`ring_reduce_scatter` (n*m, ...)            -> summed (m, ...)
 - :func:`ring_all_reduce`     (n*m, ...)            -> summed (n*m, ...)
+- :func:`broadcast`           root's (m, ...)       -> same on every node
+- :func:`exchange`            (n*m, ...)            -> all-to-all, all n-1
+  puts in flight simultaneously (fully overlapped personalized exchange)
 
 Hierarchical (pod-aware — the paper's on-chip network vs OCCC split):
 
@@ -35,6 +44,8 @@ __all__ = [
     "ring_all_gather",
     "ring_reduce_scatter",
     "ring_all_reduce",
+    "broadcast",
+    "exchange",
     "hierarchical_all_reduce",
     "ring_all_to_all",
 ]
@@ -44,16 +55,20 @@ def ring_all_gather(engine: CommEngine, x: jax.Array) -> jax.Array:
     """All-gather via n-1 neighbor puts.
 
     Round k: every node puts the chunk it received in round k-1 to its right
-    neighbor.  After n-1 rounds everyone holds all chunks, ordered by source
-    node id.
+    neighbor.  Split-phase schedule: the hop-(k+1) put of a received chunk
+    is initiated *before* that chunk is stored into the local output slot,
+    so the store overlaps the next transfer (the chunk itself is forwarded
+    untouched — the store is off the forwarding path).
     """
     n = engine.n_nodes
     me = engine.my_id()
     out = jnp.zeros((n,) + x.shape, x.dtype)
     out = lax.dynamic_update_slice_in_dim(out, x[None], me, axis=0)
-    cur = x
+    pending = engine.shift_nb(x, 1)  # hop 1 in flight before any local work
     for k in range(1, n):
-        cur = engine.shift(cur, 1)  # one-sided put to right neighbor
+        cur = pending.wait()
+        if k < n - 1:
+            pending = engine.shift_nb(cur, 1)  # forward before storing
         src = lax.rem(me - k + n, n)
         out = lax.dynamic_update_slice_in_dim(out, cur[None], src, axis=0)
     return out.reshape((n * x.shape[0],) + x.shape[1:]) if x.ndim else out
@@ -74,6 +89,10 @@ def ring_reduce_scatter(engine: CommEngine, x: jax.Array) -> jax.Array:
     ``me-(n-1)-1 ≡ me (mod n)`` — its own — having just added its own
     contribution on the final accumulate.  Verified against
     ``lax.psum_scatter`` in tests.
+
+    Split-phase: each hop's put is initiated first; the slice of the local
+    contribution for the incoming chunk is computed while the packet is on
+    the wire, and only the final add waits on delivery.
     """
     n = engine.n_nodes
     if x.shape[0] % n != 0:
@@ -84,10 +103,10 @@ def ring_reduce_scatter(engine: CommEngine, x: jax.Array) -> jax.Array:
     # packet leaving me is for chunk (me - 1) mod n; seed with my contribution
     cur = lax.dynamic_slice_in_dim(blocks, lax.rem(me - 1 + n, n), 1, axis=0)[0]
     for h in range(1, n):
-        cur = engine.shift(cur, 1)  # put partial sum to right neighbor
-        c = lax.rem(me - h - 1 + 2 * n, n)  # chunk id of the packet now here
-        mine = lax.dynamic_slice_in_dim(blocks, c, 1, axis=0)[0]
-        cur = cur + mine
+        pending = engine.shift_nb(cur, 1)  # put partial sum to right neighbor
+        c = lax.rem(me - h - 1 + 2 * n, n)  # chunk id of the incoming packet
+        mine = lax.dynamic_slice_in_dim(blocks, c, 1, axis=0)[0]  # overlapped
+        cur = pending.wait() + mine
     return cur
 
 
@@ -103,6 +122,59 @@ def ring_all_reduce(engine: CommEngine, x: jax.Array) -> jax.Array:
         cur = engine.shift(cur, 1)
         acc = acc + cur
     return acc
+
+
+def broadcast(engine: CommEngine, x: jax.Array, *, root: int = 0) -> jax.Array:
+    """Broadcast the root node's ``x`` to every node (ring pipeline).
+
+    Every node forwards what it received on the previous hop; node
+    ``(root + k) % n`` receives the root's value at hop ``k`` and selects
+    it into its output.  Split-phase: hop k+1 is initiated before the
+    hop-k select, so the select overlaps the wire.
+    """
+    n = engine.n_nodes
+    if n == 1:
+        return x
+    me = engine.my_id()
+    out = x  # root already holds its own value; others get overwritten
+    cur = x
+    pending = engine.shift_nb(cur, 1)
+    for k in range(1, n):
+        cur = pending.wait()
+        if k < n - 1:
+            pending = engine.shift_nb(cur, 1)  # forward before selecting
+        out = jnp.where(me == (root + k) % n, cur, out)
+    return out
+
+
+def exchange(engine: CommEngine, x: jax.Array) -> jax.Array:
+    """All-to-all personalized exchange built from non-blocking puts.
+
+    Viewing (n*m, ...) as n blocks, block ``d`` of node ``s`` lands as
+    block ``s`` of node ``d``.  All n-1 one-sided puts (block for node
+    ``me+k`` travels as one distance-k put) are *initiated before any
+    completion is consumed* — the maximally overlapped schedule: with a
+    GAScore transport every DMA is in flight simultaneously, with the XLA
+    transport the async collective-permutes pipeline back-to-back.
+    """
+    n = engine.n_nodes
+    if x.shape[0] % n != 0:
+        raise ValueError(f"exchange dim0 {x.shape[0]} not divisible by {n}")
+    m = x.shape[0] // n
+    blocks = x.reshape((n, m) + x.shape[1:])
+    me = engine.my_id()
+    out = jnp.zeros_like(blocks)
+    own = lax.dynamic_slice_in_dim(blocks, me, 1, axis=0)
+    out = lax.dynamic_update_slice_in_dim(out, own, me, axis=0)
+    pendings = []
+    for k in range(1, n):
+        send = lax.dynamic_slice_in_dim(blocks, lax.rem(me + k, n), 1, axis=0)
+        pendings.append((k, engine.shift_nb(send, k)))  # initiate all
+    for k, p in pendings:  # then drain completions
+        recv = p.wait()
+        src = lax.rem(me - k + n, n)
+        out = lax.dynamic_update_slice_in_dim(out, recv, src, axis=0)
+    return out.reshape(x.shape)
 
 
 def ring_all_to_all(engine: CommEngine, x: jax.Array) -> jax.Array:

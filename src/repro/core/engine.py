@@ -25,13 +25,50 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["CommEngine", "XlaEngine", "GascoreEngine", "make_engine"]
+__all__ = ["CommEngine", "Pending", "XlaEngine", "GascoreEngine", "make_engine"]
 
 
 def ring_pairs(n: int, k: int) -> List[Tuple[int, int]]:
     """Permutation pairs for 'every node sends to (me + k) mod n'."""
     k = k % n
     return [(i, (i + k) % n) for i in range(n)]
+
+
+class Pending:
+    """An in-flight transport operation (the engine half of split-phase).
+
+    ``shift_nb``/``permute_nb`` return a ``Pending`` at *initiation*;
+    ``wait()`` is the *sync point* that yields the delivered value.  Any
+    compute traced between initiation and ``wait()`` has no data dependence
+    on the transfer, so the scheduler is free to overlap it:
+
+    - ``XlaEngine``: the ppermute lowers to an async ``collective-permute``
+      start/done pair; XLA's latency-hiding scheduler slides independent
+      compute between them (double-buffered scheduling).
+    - ``GascoreEngine``: the Pallas kernel's DMA *recv-semaphore wait* is
+      the sync point; the DMA itself progresses in the background exactly
+      like the paper's GAScore engine draining its command FIFO.
+    """
+
+    __slots__ = ("_value", "_waited")
+
+    def __init__(self, value: jax.Array):
+        self._value = value
+        self._waited = False
+
+    def wait(self) -> jax.Array:
+        """Complete the transfer and return the delivered value (a
+        transfer completes exactly once, like ``gasnet_wait_syncnb``)."""
+        if self._waited:
+            raise RuntimeError("Pending transfer already waited on")
+        self._waited = True
+        return self._value
+
+    def ready(self) -> bool:
+        """Poll (``gasnet_try_syncnb``).  The static SPMD schedule
+        guarantees delivery of every initiated transfer, so this is
+        constant-``True`` — kept for API fidelity."""
+        return True
 
 
 class CommEngine:
@@ -56,10 +93,30 @@ class CommEngine:
         Non-destinations receive zeros."""
         raise NotImplementedError
 
+    # -- split-phase point-to-point (Extended API transport) ------------- #
+    def shift_nb(self, x: jax.Array, k: int = 1) -> Pending:
+        """Non-blocking :meth:`shift`: initiate the transfer of ``x`` to
+        node ``(me + k) % n`` and return a :class:`Pending` whose
+        ``wait()`` is the sync point.  Compute traced between the two
+        overlaps with the transfer."""
+        return Pending(self.shift(x, k))
+
+    def permute_nb(self, x: jax.Array, dst: Sequence[int]) -> Pending:
+        """Non-blocking :meth:`permute` (split-phase, see :meth:`shift_nb`)."""
+        return Pending(self.permute(x, dst))
+
     # -- collectives ----------------------------------------------------- #
     def all_to_all(self, x: jax.Array) -> jax.Array:
-        """x: (n_nodes * m, ...) tiled exchange along dim 0."""
-        raise NotImplementedError
+        """x: (n_nodes * m, ...) tiled exchange along dim 0.
+
+        Default implementation: the fully overlapped split-phase exchange
+        (all n-1 one-sided puts initiated before any completion is
+        consumed, see ``collectives.exchange``).  Engines with a native
+        all-to-all (XLA) override this."""
+        # lazy import, mirroring _k(): collectives imports this module.
+        from repro.core import collectives
+
+        return collectives.exchange(self, x)
 
     def all_gather(self, x: jax.Array) -> jax.Array:
         """x: local (m, ...) -> (n_nodes * m, ...)."""
@@ -168,29 +225,8 @@ class GascoreEngine(CommEngine):
             acc = acc + cur
         return acc
 
-    def all_to_all(self, x: jax.Array) -> jax.Array:
-        # Ring a2a: block destined to (me + k) travels k hops; n-1 rounds of
-        # one-sided puts.  Block b of the output comes from source node b.
-        n = self.n_nodes
-        if x.shape[0] % n != 0:
-            raise ValueError(f"all_to_all dim0 {x.shape[0]} not divisible by {n}")
-        m = x.shape[0] // n
-        blocks = x.reshape((n, m) + x.shape[1:])
-        me = self.my_id()
-        out = jnp.zeros_like(blocks)
-        # my own block to myself
-        own = lax.dynamic_slice_in_dim(blocks, me, 1, axis=0)
-        out = lax.dynamic_update_slice_in_dim(out, own, me, axis=0)
-        for k in range(1, n):
-            # send the block addressed to node (me + k); it arrives at that
-            # node as the block from source (me), i.e. slot (me_recv - k).
-            send = lax.dynamic_slice_in_dim(
-                blocks, lax.rem(me + k, n), 1, axis=0
-            )
-            recv = self.shift(send, k)
-            src = lax.rem(me - k + n, n)
-            out = lax.dynamic_update_slice_in_dim(out, recv, src, axis=0)
-        return out.reshape(x.shape)
+    # all_to_all: inherited split-phase exchange over shift_nb (each of the
+    # n-1 remote DMAs is in flight before any recv-semaphore wait).
 
 
 def make_engine(

@@ -1,0 +1,138 @@
+"""GASNet Extended API: split-phase non-blocking one-sided operations.
+
+The Core API's ``put``/``get`` are *blocking*: the call returns the fully
+transferred value, so every subsequent statement is ordered after the wire.
+Real GASNet applications (and the paper's GAScore clients) instead use the
+Extended API — explicit-handle non-blocking ops — so the runtime can overlap
+communication with independent compute.  This module reproduces that layer:
+
+======================  ====================================================
+GASNet Extended          here
+======================  ====================================================
+gasnet_put_nb            ``node.put_nb(seg, data, to=..., index=...)``
+gasnet_get_nb            ``node.get_nb(seg, frm=..., index=..., size=...)``
+gasnet_handle_t          :class:`PutHandle` / :class:`GetHandle`
+gasnet_wait_syncnb       ``node.sync(handle)``
+gasnet_try_syncnb        ``node.try_sync(handle)``
+gasnet_wait_syncnb_all   ``node.sync_all()``
+======================  ====================================================
+
+Split-phase semantics under XLA/Pallas: *initiation* (``put_nb``/``get_nb``)
+traces the transport — the ``XlaEngine``'s async ``collective-permute``
+start, or the ``GascoreEngine``'s remote DMA whose recv-semaphore wait is
+the completion event.  The *sync* (``node.sync``) traces the landing of the
+data into its destination (segment update for puts, reply value for gets).
+Any compute traced between the two has no data dependence on the transfer
+and therefore overlaps with it — the comm/compute overlap the paper's
+hardware nodes exploit to hide OCCC latency.
+
+Example (overlap a matmul with a neighbor put)::
+
+    def program(node, seg, w):
+        h = node.put_nb(seg, node.local(seg)[:16], to=gasnet.Shift(1))
+        acc = w @ w.T          # independent compute: overlaps the wire
+        seg = node.sync(h)     # split-phase completion
+        return seg, acc
+
+Handles are trace-time Python objects (like the engines themselves); they
+never cross a ``jit`` boundary.  Completion order for ``sync_all`` is FIFO
+(issue order), matching the deterministic static schedule.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["Handle", "PutHandle", "GetHandle"]
+
+
+class Handle:
+    """Base explicit handle (``gasnet_handle_t``) of one non-blocking op.
+
+    Subclasses carry the in-flight values captured at initiation; the
+    owning :class:`~repro.core.gasnet.Node` completes them via
+    ``node.sync(handle)``.
+    """
+
+    op: str = "nop"
+
+    def __init__(self) -> None:
+        self.done = False
+
+    def _complete(self) -> Any:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def complete(self) -> Any:
+        """Finish the op (idempotent error: a handle syncs exactly once)."""
+        if self.done:
+            raise RuntimeError(f"{self.op} handle already synced")
+        self.done = True
+        return self._complete()
+
+
+class PutHandle(Handle):
+    """In-flight ``put_nb``: the payload, target offset and arrival flag
+    have been shipped (transport initiated); :meth:`complete` lands them in
+    the receiver's partition of the segment and returns the updated
+    segment.
+
+    ``key`` identifies the segment object the put was issued against, so
+    the owning Node can chain several outstanding puts on the same segment
+    (each sync applies onto the latest synced version, not the stale
+    snapshot taken at initiation — GASNet permits multiple outstanding
+    puts)."""
+
+    op = "put"
+
+    def __init__(
+        self,
+        local: jax.Array,
+        moved: jax.Array,
+        midx: jax.Array,
+        received: jax.Array,
+        restore,
+        key: int = 0,
+    ):
+        super().__init__()
+        self._local = local
+        self._moved = moved
+        self._midx = midx
+        self._received = received
+        self._restore = restore
+        self.key = key
+
+    def apply(self, local: jax.Array) -> jax.Array:
+        """Land the in-flight data into ``local`` (a segment partition of
+        the same shape as the one snapshotted at initiation)."""
+        flat = local.reshape(-1)
+        cur = lax.dynamic_slice(flat, (self._midx,), (self._moved.shape[0],))
+        new = lax.dynamic_update_slice(
+            flat,
+            jnp.where(self._received, self._moved, cur),
+            (self._midx,),
+        )
+        return new.reshape(local.shape)
+
+    def restore(self, local: jax.Array) -> jax.Array:
+        return self._restore(local)
+
+    def _complete(self) -> jax.Array:
+        return self._restore(self.apply(self._local))
+
+
+class GetHandle(Handle):
+    """In-flight ``get_nb``: the request (offset) has travelled to the
+    source and the reply is on the wire; :meth:`complete` returns the
+    fetched data."""
+
+    op = "get"
+
+    def __init__(self, reply: jax.Array):
+        super().__init__()
+        self._reply = reply
+
+    def _complete(self) -> jax.Array:
+        return self._reply

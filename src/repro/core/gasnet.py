@@ -2,22 +2,32 @@
 
 This is the unified API the paper argues for: the *same* calls are made by
 "software nodes" and "hardware nodes"; only the engine differs.  Mapping to
-GASNet Core/Extended:
+GASNet Core and Extended:
 
-====================  =====================================================
-GASNet                 here
-====================  =====================================================
-gasnet_init/attach     ``Context(mesh, node_axis, backend)`` + AddressSpace
-gasnet_mynode          ``node.my_id``
-gasnet_nodes           ``node.n_nodes``
-gasnet_put             ``node.put(seg, data, to=..., index=...)``
-gasnet_get             ``node.get(seg, frm=..., index=..., size=...)``
-gasnet_AMRequestShort  ``node.am_short(dest, handler, args)``
-gasnet_AMRequestMedium ``node.am_medium(dest, handler, payload, args)``
-gasnet_AMRequestLong   ``node.am_long(dest, handler, payload, dst_index)``
-(poll + handler run)   ``node.am_flush(state)``
-gasnet_barrier         ``node.barrier()``
-====================  =====================================================
+======================  ===================================================
+GASNet Core              here
+======================  ===================================================
+gasnet_init/attach       ``Context(mesh, node_axis, backend)`` + AddressSpace
+gasnet_mynode            ``node.my_id``
+gasnet_nodes             ``node.n_nodes``
+gasnet_put               ``node.put(seg, data, to=..., index=...)``
+gasnet_get               ``node.get(seg, frm=..., index=..., size=...)``
+gasnet_AMRequestShort    ``node.am_short(dest, handler, args)``
+gasnet_AMRequestMedium   ``node.am_medium(dest, handler, payload, args)``
+gasnet_AMRequestLong     ``node.am_long(dest, handler, payload, dst_index)``
+(poll + handler run)     ``node.am_flush(state)``
+gasnet_barrier           ``node.barrier()``
+======================  ===================================================
+
+======================  ===================================================
+GASNet Extended          here (split-phase, see ``repro.core.extended``)
+======================  ===================================================
+gasnet_put_nb            ``node.put_nb(seg, data, to=..., index=...)``
+gasnet_get_nb            ``node.get_nb(seg, frm=..., index=..., size=...)``
+gasnet_wait_syncnb       ``node.sync(handle)``
+gasnet_try_syncnb        ``node.try_sync(handle)``
+gasnet_wait_syncnb_all   ``node.sync_all()``
+======================  ===================================================
 
 One-sided semantics under SPMD: every node executes the same program, so a
 "one-sided put" is a *pattern* of puts — :class:`Shift` (every node targets
@@ -51,8 +61,10 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import am as am_lib
+from repro.core import extended
 from repro.core.addrspace import AddressSpace
 from repro.core.engine import CommEngine, make_engine
+from repro.compat import shard_map
 
 __all__ = ["Shift", "Perm", "Context", "Node"]
 
@@ -99,6 +111,13 @@ class Node:
         self._am_payload_width = am_payload_width
         self._am_per_peer = am_per_peer_capacity
         self._batch: Optional[am_lib.AMBatch] = None
+        self._outstanding: list[extended.Handle] = []
+        # id(seg) -> latest synced local partition, so several outstanding
+        # puts against the same segment object chain instead of each
+        # applying to the stale snapshot taken at initiation.  Pinning the
+        # seg objects keeps the ids stable for the node's lifetime.
+        self._seg_latest: dict[int, jax.Array] = {}
+        self._seg_pins: list[jax.Array] = []
         self.dropped = jnp.zeros((), jnp.int32)
 
     # ----------------------------------------------------------------- #
@@ -153,19 +172,11 @@ class Node:
 
         Returns the updated segment.  ``data`` is flattened; the write is
         contiguous in the flattened local partition.
+
+        Blocking = ``put_nb`` + immediate ``sync`` (GASNet defines
+        ``gasnet_put`` exactly this way).
         """
-        local = self.local(seg)
-        flat = local.reshape(-1)
-        payload = data.reshape(-1).astype(flat.dtype)
-        idx = jnp.asarray(index, jnp.int32)
-        moved = self._move(payload, to)
-        midx = self._move(idx, to)
-        received = self._move(jnp.ones((), bool), to)
-        cur = lax.dynamic_slice(flat, (midx,), (payload.shape[0],))
-        new = lax.dynamic_update_slice(
-            flat, jnp.where(received, moved, cur), (midx,)
-        )
-        return self._restore(seg, new.reshape(local.shape))
+        return self.sync(self.put_nb(seg, data, to=to, index=index))
 
     def get(
         self,
@@ -180,6 +191,55 @@ class Node:
 
         GASNet gets are request/reply; so is this: the offset travels to the
         source (inverse pattern), the source slices, the reply travels back.
+        Blocking = ``get_nb`` + immediate ``sync``.
+        """
+        return self.sync(self.get_nb(seg, frm=frm, index=index, size=size))
+
+    # ----------------------------------------------------------------- #
+    # Extended API: split-phase non-blocking RMA (see repro.core.extended)
+    # ----------------------------------------------------------------- #
+    def put_nb(
+        self,
+        seg: jax.Array,
+        data: jax.Array,
+        *,
+        to: Pattern = Shift(1),
+        index: jax.Array | int = 0,
+    ) -> extended.PutHandle:
+        """Initiate a non-blocking one-sided put (``gasnet_put_nb``).
+
+        The payload, target offset and arrival flag are shipped at the call
+        (transport initiation); the returned handle lands them in the
+        segment when synced: ``seg = node.sync(h)``.  Compute issued
+        between the two overlaps with the transfer.
+        """
+        local = self.local(seg)
+        payload = data.reshape(-1).astype(local.dtype)
+        idx = jnp.asarray(index, jnp.int32)
+        moved = self._move(payload, to)
+        midx = self._move(idx, to)
+        received = self._move(jnp.ones((), bool), to)
+        self._seg_pins.append(seg)
+        h = extended.PutHandle(
+            local, moved, midx, received,
+            functools.partial(self._restore, seg),
+            key=id(seg),
+        )
+        self._outstanding.append(h)
+        return h
+
+    def get_nb(
+        self,
+        seg: jax.Array,
+        *,
+        frm: Pattern = Shift(1),
+        index: jax.Array | int = 0,
+        size: int = 1,
+    ) -> extended.GetHandle:
+        """Initiate a non-blocking one-sided get (``gasnet_get_nb``).
+
+        Request and reply legs are both initiated here; ``node.sync(h)``
+        returns the fetched ``(size,)`` vector.
         """
         n = self.n_nodes
         inv = _inverse(frm, n)
@@ -189,7 +249,59 @@ class Node:
         req = self._move(idx, frm)
         data = lax.dynamic_slice(local, (req,), (size,))
         # reply: data travels back from the source to me
-        return self._move(data, inv)
+        h = extended.GetHandle(self._move(data, inv))
+        self._outstanding.append(h)
+        return h
+
+    def sync(self, handle: extended.Handle) -> jax.Array:
+        """Complete one handle (``gasnet_wait_syncnb``): returns the
+        updated segment for puts, the fetched data for gets.
+
+        Several *outstanding* puts against the same segment object compose:
+        each sync applies onto the result of the previous one (FIFO), so no
+        write is lost (GASNet permits multiple puts in flight).  Once the
+        last outstanding put on a segment completes the chain is dropped,
+        so a later independent ``put``/``put_nb`` of the same array starts
+        from its own snapshot again.
+        """
+        if handle in self._outstanding:
+            self._outstanding.remove(handle)
+        if isinstance(handle, extended.PutHandle):
+            if handle.done:
+                raise RuntimeError(f"{handle.op} handle already synced")
+            handle.done = True
+            base = self._seg_latest.get(handle.key, handle._local)
+            new_local = handle.apply(base)
+            still_open = any(
+                isinstance(h, extended.PutHandle) and h.key == handle.key
+                for h in self._outstanding
+            )
+            if still_open:
+                self._seg_latest[handle.key] = new_local
+            else:
+                self._seg_latest.pop(handle.key, None)
+            return handle.restore(new_local)
+        return handle.complete()
+
+    def try_sync(
+        self, handle: extended.Handle
+    ) -> Tuple[bool, Optional[jax.Array]]:
+        """Poll one handle (``gasnet_try_syncnb``): ``(done, value)``.
+
+        Under the static SPMD schedule every initiated transfer is
+        guaranteed to complete, so the poll always succeeds; the method is
+        kept for GASNet API fidelity and returns ``(True, value)``.
+        """
+        return True, self.sync(handle)
+
+    def sync_all(self) -> list:
+        """Complete every outstanding handle in issue order
+        (``gasnet_wait_syncnb_all``); returns their results FIFO.
+        Outstanding puts on the same segment compose (see :meth:`sync`)."""
+        results = []
+        while self._outstanding:
+            results.append(self.sync(self._outstanding[0]))
+        return results
 
     # ----------------------------------------------------------------- #
     # Active Messages
@@ -324,7 +436,7 @@ class Context:
             node = self.make_node()
             return program(node, *local_args)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             body,
             mesh=self.mesh,
             in_specs=in_specs,

@@ -26,6 +26,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["flash_attention"]
 
 NEG_INF = -1e30
@@ -189,10 +191,10 @@ def flash_attention(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        interpret=compat.tpu_interpret(interpret),
         name="flash_attention_fwd",
     )(q, k, v)
     if return_lse:

@@ -32,6 +32,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 from repro.kernels.flash_attention import flash_attention
 
 __all__ = ["flash_attention_vjp"]
@@ -254,10 +256,10 @@ def _bwd(causal, window, scale, block_q, block_k, interpret, res, dout):
             pltpu.VMEM((bk, D), jnp.float32),
             pltpu.VMEM((bk, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        interpret=compat.tpu_interpret(interpret),
         name="flash_attention_dkv",
     )(qg, k, v, dog, lseg, deltag)
     dk, dv = dkv
@@ -282,10 +284,10 @@ def _bwd(causal, window, scale, block_q, block_k, interpret, res, dout):
         out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi: (b, h, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
         scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        interpret=compat.tpu_interpret(interpret),
         name="flash_attention_dq",
     )(q, kx, vx, dout, lse, delta)
 

@@ -43,6 +43,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = [
     "ring_shift",
     "perm_put",
@@ -53,7 +55,7 @@ __all__ = [
 
 
 def _interp(interpret: bool):
-    return pltpu.InterpretParams() if interpret else False
+    return compat.tpu_interpret(interpret)
 
 
 def _any_spec() -> pl.BlockSpec:
@@ -79,7 +81,7 @@ def ring_shift(
             dst_ref=o_ref,
             send_sem=send_sem,
             recv_sem=recv_sem,
-            device_id=(dst,),
+            device_id=compat.dma_device_id(dst),
             device_id_type=pltpu.DeviceIdType.MESH,
         )
         rdma.start()
@@ -122,7 +124,7 @@ def perm_put(
             dst_ref=o_ref,
             send_sem=send_sem,
             recv_sem=recv_sem,
-            device_id=(target,),
+            device_id=compat.dma_device_id(target),
             device_id_type=pltpu.DeviceIdType.MESH,
         )
         rdma.start()
@@ -177,7 +179,7 @@ def offset_put(
             dst_ref=seg_ref.at[pl.ds(off_ref[0], L)],
             send_sem=send_sem,
             recv_sem=recv_sem,
-            device_id=(dst,),
+            device_id=compat.dma_device_id(dst),
             device_id_type=pltpu.DeviceIdType.MESH,
         )
         rdma.start()
@@ -236,7 +238,7 @@ def ring_all_gather(
                 dst_ref=o_ref.at[slot],
                 send_sem=send_sems.at[h],
                 recv_sem=recv_sems.at[h],
-                device_id=(right,),
+                device_id=compat.dma_device_id(right),
                 device_id_type=pltpu.DeviceIdType.MESH,
             )
             rdma.start()
@@ -303,7 +305,7 @@ def ring_reduce_scatter(
                 dst_ref=recv2.at[slot],
                 send_sem=send_sems.at[h - 1],
                 recv_sem=recv_sems.at[h - 1],
-                device_id=(right,),
+                device_id=compat.dma_device_id(right),
                 device_id_type=pltpu.DeviceIdType.MESH,
             )
             rdma.start()

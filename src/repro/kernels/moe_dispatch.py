@@ -31,6 +31,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["moe_router"]
 
 NEG_INF = -1e30
@@ -146,9 +148,9 @@ def moe_router(
         out_specs=tuple(pl.BlockSpec((block_t, k), blk) for _ in range(4)),
         out_shape=out_shapes,
         scratch_shapes=[pltpu.VMEM((1, E), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        interpret=compat.tpu_interpret(interpret),
         name="moe_router",
     )(logits)

@@ -20,6 +20,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["gated_linear_scan"]
 
 
@@ -75,9 +77,9 @@ def gated_linear_scan(
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((B, S, D), b.dtype),
         scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        interpret=compat.tpu_interpret(interpret),
         name="rglru_gated_linear_scan",
     )(a, b)

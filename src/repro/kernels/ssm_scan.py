@@ -25,6 +25,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["selective_scan"]
 
 
@@ -120,9 +122,9 @@ def selective_scan(
         ),
         out_shape=jax.ShapeDtypeStruct((B, S, Di), x.dtype),
         scratch_shapes=[pltpu.VMEM((N, block_d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        interpret=compat.tpu_interpret(interpret),
         name="mamba1_selective_scan",
     )(x, dt, at, b, c, drow)

@@ -36,6 +36,7 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import ops
 from repro.models.common import ArchConfig
 from repro.parallel.ctx import RunCtx, shard, use_weight
+from repro.compat import shard_map
 
 Params = Dict[str, Any]
 
@@ -466,7 +467,7 @@ def _moe_ep(p, cfg: ArchConfig, ctx: RunCtx, x2d: jax.Array):
 
     tok_spec = P(tok_axes, None)
     expert_spec = P(tp, "data", None)  # matches moe_init specs (FSDP dim 1)
-    out = jax.shard_map(
+    out = shard_map(
         body,
         mesh=mesh,
         in_specs=(

@@ -8,10 +8,15 @@ or gradient traffic.
 
 Implementation: layers are already scan-stacked, so a stage is simply a
 shard of the layer-stack dimension.  ``gpipe`` runs inside ``shard_map``
-over the pipeline axis; stage boundaries are one-sided neighbor puts
-(``lax.ppermute`` — or the GAScore engine, same interface).  Autodiff
-through ppermute gives the reverse-direction backward schedule for free;
-remat on the stage body bounds activation memory.
+over the pipeline axis; stage boundaries are *split-phase* one-sided
+neighbor puts through a :class:`~repro.core.engine.CommEngine`
+(``engine.shift_nb`` — the software XLA node by default, the GAScore
+Pallas node via ``engine=``): the activation put to stage s+1 is initiated
+as soon as the stage body finishes, and the output bookkeeping of the
+current tick overlaps the transfer (Extended-API comm/compute overlap at
+the stage boundary).  Autodiff through the XLA engine's ppermute gives the
+reverse-direction backward schedule for free; remat on the stage body
+bounds activation memory.
 
 Schedule (S stages, M microbatches, T = M + S - 1 ticks):
 
@@ -31,6 +36,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core.engine import CommEngine, XlaEngine
+from repro.compat import shard_map
+
 __all__ = ["gpipe", "pipelined"]
 
 
@@ -42,6 +50,7 @@ def gpipe(
     axis: str,
     n_stages: int,
     broadcast_out: bool = True,
+    engine: Optional[CommEngine] = None,
 ) -> jax.Array:
     """Run ``stage_fn`` as a GPipe pipeline inside shard_map over ``axis``.
 
@@ -50,14 +59,29 @@ def gpipe(
     the result is psum-broadcast to every stage (cheap relative to the
     steady-state activation traffic, and lets the loss epilogue run
     replicated); otherwise it is valid on the last stage only.
+
+    ``engine`` is the stage-boundary transport (default: the software
+    ``XlaEngine``; pass a ``GascoreEngine`` to ship activations with the
+    Pallas remote-DMA kernels — forward only, the Pallas path defines no
+    VJP).  On the XLA engine the boundary put is a chain permute
+    (s -> s+1, no wrap — no dead traffic); the GAScore transport requires
+    a bijection (every recv semaphore signalled exactly once), so there
+    the put is a ring ``Shift(1)`` whose wrap edge (S-1 -> 0) is dead:
+    stage 0 always injects fresh microbatches and ignores its carry.
     """
     S = n_stages
     M = x_micro.shape[0]
-    stage = lax.axis_index(axis)
+    eng = engine or XlaEngine(axis, S)
+    chain = tuple(range(1, S)) + (None,)  # s -> s+1, last stage sends nowhere
+    use_chain = isinstance(eng, XlaEngine)
+
+    def boundary_put_nb(y):
+        return eng.permute_nb(y, chain) if use_chain else eng.shift_nb(y, 1)
+
+    stage = eng.my_id()
     mb_shape = x_micro.shape[1:]
     carry_in = jnp.zeros(mb_shape, x_micro.dtype)
     outputs = jnp.zeros_like(x_micro)
-    pairs = [(i, i + 1) for i in range(S - 1)]  # forward chain (no wrap)
 
     for t in range(M + S - 1):
         # stage 0 injects microbatch t; others consume the neighbor put
@@ -68,15 +92,17 @@ def gpipe(
         active = (t - stage >= 0) & (t - stage < M)
         y = stage_fn(stage_params, x_in)
         y = jnp.where(active, y, jnp.zeros_like(y))
-        # last stage records its result
+        # split-phase put of activations to the next stage: initiate as
+        # soon as y exists, record outputs while the transfer is in flight
+        pending = boundary_put_nb(y)
+        # last stage records its result (overlaps the boundary put)
         outputs = lax.cond(
             active & (stage == S - 1),
             lambda o: lax.dynamic_update_index_in_dim(o, y, mb_idx, 0),
             lambda o: o,
             outputs,
         )
-        # one-sided put of activations to the next stage
-        carry_in = lax.ppermute(y, axis, pairs)
+        carry_in = pending.wait()
     if broadcast_out:
         outputs = lax.psum(outputs, axis)  # only the last stage is nonzero
     return outputs
@@ -92,23 +118,26 @@ def pipelined(
     x_spec: P,
     out_spec: Optional[P] = None,
     remat: bool = True,
+    engine: Optional[CommEngine] = None,
 ) -> Callable:
     """Wrap a stage function into a jit-able pipelined forward.
 
     ``params_spec`` must shard the layer-stack dimension over ``axis``;
     ``x_spec``/``out_spec`` shard the microbatch dimension over nothing
     (microbatches stream through stages, data-parallel axes can shard the
-    per-microbatch batch dim as usual).
+    per-microbatch batch dim as usual).  ``engine`` selects the
+    stage-boundary transport (see :func:`gpipe`).
     """
     n_stages = mesh.shape[axis]
     body = jax.checkpoint(stage_fn) if remat else stage_fn
 
     def fn(stage_params, x_micro):
         return gpipe(
-            body, stage_params, x_micro, axis=axis, n_stages=n_stages
+            body, stage_params, x_micro, axis=axis, n_stages=n_stages,
+            engine=engine,
         )
 
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(params_spec, x_spec),

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 
 
 def main() -> None:
@@ -35,7 +36,7 @@ def main() -> None:
         return red[None]
 
     red = jax.jit(
-        jax.shard_map(prog, mesh=mesh8, in_specs=(P("node"),),
+        shard_map(prog, mesh=mesh8, in_specs=(P("node"),),
                       out_specs=P("node"), check_vma=False)
     )(x)
     want = np.asarray(x).sum(0)
@@ -53,7 +54,7 @@ def main() -> None:
         return jnp.tanh(xx @ wl[0])
 
     out = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda wl, xs: gpipe(stage, wl, xs, axis="node", n_stages=8),
             mesh=mesh8, in_specs=(P("node"), P(None)), out_specs=P(None),
             check_vma=False,
@@ -66,7 +67,7 @@ def main() -> None:
 
     # GPipe backward: grads of sum(out) wrt w match sequential reference
     def pipe_loss(wl, xs):
-        o = jax.shard_map(
+        o = shard_map(
             lambda wl, xs: gpipe(stage, wl, xs, axis="node", n_stages=8),
             mesh=mesh8, in_specs=(P("node"), P(None)), out_specs=P(None),
             check_vma=False,

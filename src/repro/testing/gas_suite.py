@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 
 
 def main() -> None:
@@ -92,7 +93,7 @@ def main() -> None:
         ]
 
     hier = jax.jit(
-        jax.shard_map(
+        shard_map(
             prog_hier, mesh=mesh2, in_specs=(P("pod", "data"),),
             out_specs=P("pod", "data"), check_vma=False,
         )
@@ -152,6 +153,78 @@ def main() -> None:
     np.testing.assert_array_equal(np.asarray(cnt), 1)
     np.testing.assert_array_equal(np.asarray(dropped), 2)
     print("AM overflow accounting OK")
+
+    # ---- Extended API: split-phase non-blocking put/get --------------------
+    def prog_nb(node, seg):
+        # initiate, overlap independent compute, then sync
+        h = node.put_nb(seg, jnp.full((4,), node.my_id, jnp.float32),
+                        to=gasnet.Shift(1), index=2)
+        overlapped = jnp.sum(node.local(seg) * 2.0)  # no dep on the transfer
+        seg = node.sync(h)
+        g = node.get_nb(seg, frm=gasnet.Shift(3), index=2, size=4)
+        done, got = node.try_sync(g)
+        assert done
+        return seg, got[None] + 0.0 * overlapped
+
+    seg_nb, got = ctx.spmd(prog_nb, seg, out_specs=(P("node"), P("node")))
+    seg_blk = ctx.spmd(prog, seg)  # the blocking version of the same put
+    np.testing.assert_allclose(np.asarray(seg_nb), np.asarray(seg_blk))
+    for n in range(8):
+        np.testing.assert_allclose(np.asarray(got)[n], (n + 3 - 1) % 8)
+    print("nb put/get OK")
+
+    def prog_nb_all(node, seg):
+        node.put_nb(seg, jnp.full((2,), 1.0, jnp.float32),
+                    to=gasnet.Shift(1), index=0)
+        node.get_nb(seg, frm=gasnet.Shift(1), index=2, size=2)
+        seg2, got = node.sync_all()  # FIFO completion
+        return seg2, got[None]
+
+    seg_all, _ = ctx.spmd(prog_nb_all, seg, out_specs=(P("node"), P("node")))
+    np.testing.assert_allclose(np.asarray(seg_all)[:, :2], 1.0)
+    print("sync_all OK")
+
+    # ---- new collectives: broadcast + exchange (all-to-all) ----------------
+    def prog_bcex(node, x):
+        e = node.engine
+        bc = collectives.broadcast(e, node.local(x), root=5)
+        ex = collectives.exchange(e, node.local(x))
+        return bc[None], ex[None]
+
+    bc, ex = ctx.spmd(prog_bcex, x, out_specs=(P("node"), P("node")))
+    bc, ex = np.asarray(bc), np.asarray(ex)
+    for n in range(8):
+        np.testing.assert_allclose(bc[n], xg[5])
+    np.testing.assert_allclose(
+        ex.reshape(8, 8, 2), xg.reshape(8, 8, 2).transpose(1, 0, 2)
+    )
+    print("broadcast/exchange OK")
+
+    # ---- engine parity (xla vs gascore) for every Extended op --------------
+    ctx_hw = gasnet.Context(mesh, node_axis="node", backend="gascore")
+    xk = jnp.arange(8.0 * 8 * 128).reshape(8, 8, 128)
+    aspace_hw = ctx_hw.address_space()
+    aspace_hw.register("kbuf", (8, 128), jnp.float32)
+    segk = aspace_hw.alloc("kbuf")
+
+    def prog_ext(node, seg, x):
+        h = node.put_nb(seg, jnp.full((128,), 1.0 + node.my_id, jnp.float32),
+                        to=gasnet.Shift(1), index=128)
+        seg = node.sync(h)
+        g = node.get_nb(seg, frm=gasnet.Shift(1), index=128, size=128)
+        got = node.sync(g)
+        e = node.engine
+        bc = collectives.broadcast(e, node.local(x), root=2)
+        ex = collectives.exchange(e, node.local(x))
+        return seg, got[None], bc[None], ex[None]
+
+    specs = (P("node"),) * 4
+    sw = ctx.spmd(prog_ext, segk, xk, out_specs=specs)
+    hw = ctx_hw.spmd(prog_ext, segk, xk, out_specs=specs)
+    for name, a, b in zip(("put_nb/sync", "get_nb", "broadcast", "exchange"),
+                          sw, hw):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    print("extended engine parity OK")
 
     print("GAS_SUITE_PASS")
 

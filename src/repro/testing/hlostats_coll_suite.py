@@ -7,6 +7,7 @@ if __name__ == "__main__":
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 
 
 def main() -> None:
@@ -22,7 +23,7 @@ def main() -> None:
         y, _ = jax.lax.scan(body, x, ws)
         return y
 
-    fn = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+    fn = shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
                        check_vma=False)
     comp = jax.jit(fn).lower(
         jax.ShapeDtypeStruct((M, M), jnp.float32),

@@ -1,7 +1,16 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Requires the optional ``hypothesis`` test dependency (declared in
+pyproject.toml's ``test`` extra); the whole module skips cleanly when it
+is not installed.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
