@@ -1,9 +1,15 @@
 """GASNet-style microbenchmarks (the paper's evaluation lineage, cf. [4]):
-AM round-trip latency, one-sided put bandwidth, collective comparison, and
-blocking vs split-phase (Extended API) comm/compute overlap.
+AM round-trip latency, one-sided put bandwidth, collective comparison,
+blocking vs split-phase (Extended API) comm/compute overlap, and the
+scheduler's segmented-vs-monolithic ring pipeline.
 
 Run as __main__ in a subprocess with 8 host devices (benchmarks/run.py does
-this).  Prints ``name,us_per_call,derived`` CSV rows.
+this).  Prints ``name,us_per_call,derived`` CSV rows; with ``--json PATH``
+(default ``BENCH_gas.json`` when the flag is given bare) it also writes a
+machine-readable artifact: every row, per-op bytes/sec, the overlap gap,
+the segmented-vs-monolithic speedups per payload tier, and the measured
+per-engine cost constants (``engine_costs``) that ``repro.core.sched``
+can load back as its planning model.
 """
 import os
 
@@ -12,6 +18,9 @@ if __name__ == "__main__":
         "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
     )
 
+import argparse
+import functools
+import json
 import time
 
 import jax
@@ -19,6 +28,24 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
+
+RESULT: dict = {"schema": 1, "rows": []}
+
+
+def report(name: str, value: float, derived: str = "", unit: str = "us",
+           **extra) -> None:
+    """One CSV row on stdout + one record in the JSON artifact.
+
+    ``unit`` keys the JSON field ("us" for timings, "x" for ratios,
+    "us_per_kib" for slopes) so artifact consumers never mix units."""
+    digits = 1 if unit == "us" else 3
+    text = f"{name},{value:.{digits}f}"
+    print(f"{text},{derived}" if derived else text)
+    row = {"name": name, unit: round(float(value), digits)}
+    if derived:
+        row["derived"] = derived
+    row.update(extra)
+    RESULT["rows"].append(row)
 
 
 def timeit(fn, *args, iters=20, warmup=3):
@@ -31,7 +58,22 @@ def timeit(fn, *args, iters=20, warmup=3):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def main() -> None:
+def interleaved_us(fns, iters=9, warmup=3):
+    """Interleaved A/B/... medians: host-device timings drift, and a
+    sequential comparison aliases that drift into the gap."""
+    for f in fns:
+        for _ in range(warmup):
+            jax.block_until_ready(f())
+    t = [[] for _ in fns]
+    for _ in range(iters):
+        for i, f in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f())
+            t[i].append(time.perf_counter() - t0)
+    return [float(np.median(ti)) * 1e6 for ti in t]
+
+
+def main(json_path: str | None = None) -> None:
     from repro.core import gasnet
     from repro.core.engine import make_engine
     from repro.core import collectives
@@ -71,7 +113,8 @@ def main() -> None:
         aspace.register("b", (max(width, 8),), jnp.float32)
         seg = aspace.alloc("b", init_fn=jnp.ones)
         us = timeit(am_rt, seg)
-        print(f"am_roundtrip_w{width},{us:.1f},payload={width * 4}B")
+        report(f"am_roundtrip_w{width}", us, f"payload={width * 4}B",
+               op="am_roundtrip", payload_bytes=width * 4)
 
     # ---- one-sided put bandwidth vs size ---------------------------------- #
     ctx = gasnet.Context(mesh, node_axis="node", backend="xla")
@@ -88,7 +131,9 @@ def main() -> None:
 
         us = timeit(lambda s: ctx.spmd(put_prog, s), seg)
         gbps = size / (us * 1e-6) / 1e9
-        print(f"put_{size}B,{us:.1f},{gbps:.3f}GB/s/node")
+        report(f"put_{size}B", us, f"{gbps:.3f}GB/s/node",
+               op="put", payload_bytes=size,
+               bytes_per_sec=round(size / (us * 1e-6), 1))
 
     # ---- collectives: GAS ring (xla engine) vs lax natives ---------------- #
     M = 1 << 16  # 64k f32 per node contribution
@@ -105,8 +150,10 @@ def main() -> None:
         f = jax.jit(shard_map(fn, mesh=mesh, in_specs=(P("node"),),
                                   out_specs=P("node"), check_vma=False))
         us = timeit(f, x)
-        print(f"{nm}_{M * 4}B,{us:.1f},sum_ok="
-              f"{bool(jnp.allclose(f(x)[0], N))}")
+        report(f"{nm}_{M * 4}B", us,
+               f"sum_ok={bool(jnp.allclose(f(x)[0], N))}",
+               op=nm, payload_bytes=M * 4,
+               bytes_per_sec=round(M * 4 / (us * 1e-6), 1))
 
     # ---- int8 EF compressed ring vs f32 ring ------------------------------ #
     err = jnp.zeros((M,), jnp.float32)
@@ -123,8 +170,9 @@ def main() -> None:
     us = timeit(f, x)
     wire_f32 = 2 * (N - 1) / N * M * 4
     wire_int8 = 2 * (N - 1) / N * (M * 1 + 4)
-    print(f"compressed_ring_{M * 4}B,{us:.1f},"
-          f"wire_bytes {wire_int8 / wire_f32:.2f}x_of_f32")
+    report(f"compressed_ring_{M * 4}B", us,
+           f"wire_bytes {wire_int8 / wire_f32:.2f}x_of_f32",
+           op="compressed_ring", payload_bytes=M * 4)
 
     # ---- blocking vs split-phase: comm/compute overlap (Extended API) ----- #
     # Ring pipeline, one heavy transform per received chunk (the transform
@@ -209,31 +257,165 @@ def main() -> None:
     us_T = timeit(f_T, xs, w_ov, iters=10)
     us_C = timeit(f_C, xs, w_ov, iters=10)
     bound = (us_T + us_C) / max(us_T, us_C)
-    print(f"hop_transfer_{B * D * 4}B,{us_T:.1f},T")
-    print(f"hop_transform_{B * D * 4}B,{us_C:.1f},C")
-    print(f"overlap_gain_bound,{bound:.3f},x=(T+C)/max(T:C)_hw_comm_engine")
+    report(f"hop_transfer_{B * D * 4}B", us_T, "T")
+    report(f"hop_transform_{B * D * 4}B", us_C, "C")
+    report("overlap_gain_bound", bound, "x=(T+C)/max(T:C)_hw_comm_engine",
+           unit="x")
 
-    # interleaved A/B rounds + medians: host-device timings drift, and a
-    # sequential A-then-B comparison aliases that drift into the gap
-    for f in (f_blk, f_ovl):
-        for _ in range(3):
-            jax.block_until_ready(f(xs, w_ov))
-    t_blk, t_ovl = [], []
-    for _ in range(9):
-        t0 = time.perf_counter()
-        jax.block_until_ready(f_blk(xs, w_ov))
-        t_blk.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        jax.block_until_ready(f_ovl(xs, w_ov))
-        t_ovl.append(time.perf_counter() - t0)
-    us_blk = float(np.median(t_blk)) * 1e6
-    us_ovl = float(np.median(t_ovl)) * 1e6
-    print(f"blocking_ring_{B * D * 4}B,{us_blk:.1f},per_hop=T+C")
-    print(f"splitphase_ring_{B * D * 4}B,{us_ovl:.1f},per_hop=max(T:C)")
-    print(f"overlap_gain_measured,{us_blk / us_ovl:.3f},x_on_shared_cpu_cores")
+    us_blk, us_ovl = interleaved_us(
+        (lambda: f_blk(xs, w_ov), lambda: f_ovl(xs, w_ov))
+    )
+    report(f"blocking_ring_{B * D * 4}B", us_blk, "per_hop=T+C")
+    report(f"splitphase_ring_{B * D * 4}B", us_ovl, "per_hop=max(T:C)")
+    report("overlap_gain_measured", us_blk / us_ovl, "x_on_shared_cpu_cores",
+           unit="x")
+    RESULT["overlap"] = {
+        "gain_bound": round(bound, 3),
+        "gain_measured": round(us_blk / us_ovl, 3),
+    }
+
+    # ---- scheduler: segmented vs monolithic ring all-reduce per tier ------ #
+    # The scheduler chunks each ring payload into n_segments slices with
+    # ``depth`` puts in flight, so segment k+1's wire overlaps segment k's
+    # accumulate epilogue (the GAScore command-FIFO drain).  Two numbers
+    # per payload tier, mirroring the overlap section above:
+    #
+    #   speedup_comm_engine — per-hop pipeline model from individually
+    #       measured wire (T) and epilogue (C) costs:
+    #       (T+C) / (max(T,C) + min(T,C)/G) — what a node with a dedicated
+    #       communication engine realizes, since its DMAs burn no compute
+    #       cycles.  > 1 whenever the plan segments (G > 1).
+    #   speedup_measured    — interleaved-median wall clock on THIS host,
+    #       where "wire" is the same CPU cores as the epilogue — the
+    #       software-node bottleneck the paper builds hardware nodes to
+    #       remove (tends toward 1.0 on oversubscribed machines).
+    from repro.core import collectives, sched
+
+    RESULT["segmented_allreduce"] = {}
+    for Mseg in (1 << 18, 1 << 20, 1 << 22):  # 1/4/16 MiB f32 per node
+        xseg = jnp.ones((N, Mseg), jnp.float32)
+        plan = sched.plan_collective(
+            "all_reduce", nbytes=Mseg * 4, n_nodes=N,
+            engine=make_engine("xla", "node", N),
+        )
+        G, D_ = plan.n_segments, plan.depth
+        if G == 1:
+            G, D_ = 4, 2  # pin segmentation on tiers the model leaves whole
+
+        def mono_ar(xl):
+            eng = make_engine("xla", "node", N)
+            return collectives.ring_all_reduce(eng, xl[0])[None]
+
+        def seg_ar(xl, G=G, D_=D_):
+            eng = make_engine("xla", "node", N)
+            return collectives.segmented_ring_all_reduce(
+                eng, xl[0], n_segments=G, depth=D_
+            )[None]
+
+        f_mono = jax.jit(shard_map(mono_ar, mesh=mesh, in_specs=(P("node"),),
+                                   out_specs=P("node"), check_vma=False))
+        f_seg = jax.jit(shard_map(seg_ar, mesh=mesh, in_specs=(P("node"),),
+                                  out_specs=P("node"), check_vma=False))
+        assert bool(jnp.allclose(f_mono(xseg), f_seg(xseg)))
+
+        # per-hop wire (T) and accumulate-epilogue (C) costs, in isolation
+        chunk = Mseg // N
+
+        def hop_wire(xl):
+            eng = make_engine("xla", "node", N)
+            return eng.shift(xl[0, :chunk], 1)[None]
+
+        def hop_epilogue(xl):
+            return (xl[0, :chunk] + xl[0, chunk : 2 * chunk])[None]
+
+        f_T2 = jax.jit(shard_map(hop_wire, mesh=mesh, in_specs=(P("node"),),
+                                 out_specs=P("node"), check_vma=False))
+        f_C2 = jax.jit(shard_map(hop_epilogue, mesh=mesh,
+                                 in_specs=(P("node"),),
+                                 out_specs=P("node"), check_vma=False))
+        t_wire = timeit(f_T2, xseg, iters=8)
+        t_epi = timeit(f_C2, xseg, iters=8)
+        pipe = max(t_wire, t_epi) + min(t_wire, t_epi) / G
+        speedup_engine = (t_wire + t_epi) / pipe
+        us_mono, us_seg = interleaved_us(
+            (lambda: f_mono(xseg), lambda: f_seg(xseg)), iters=7
+        )
+        measured = us_mono / us_seg
+        nb = Mseg * 4
+        report(f"monolithic_allreduce_{nb}B", us_mono,
+               f"ring_{2 * (N - 1)}hops", op="allreduce_monolithic",
+               payload_bytes=nb, bytes_per_sec=round(nb / (us_mono * 1e-6), 1))
+        report(f"segmented_allreduce_{nb}B", us_seg,
+               f"speedup_vs_monolithic={speedup_engine:.3f}x_with_comm_engine"
+               f"(measured={measured:.3f}x_shared_cores)_plan={G}x{D_}",
+               op="allreduce_segmented", payload_bytes=nb,
+               bytes_per_sec=round(nb / (us_seg * 1e-6), 1))
+        RESULT["segmented_allreduce"][str(nb)] = {
+            "monolithic_us": round(us_mono, 1),
+            "segmented_us": round(us_seg, 1),
+            "n_segments": G,
+            "depth": D_,
+            "hop_wire_us": round(t_wire, 1),
+            "hop_epilogue_us": round(t_epi, 1),
+            "speedup_comm_engine": round(speedup_engine, 3),
+            "speedup_measured": round(measured, 3),
+        }
+
+    # ---- measured engine cost constants (the scheduler's planning model) -- #
+    # Per engine: alpha from a tiny hop, beta from the large-hop slope;
+    # gamma (the local accumulate epilogue) is engine-independent.
+    # repro.core.sched.load_costs() reads these back, including for the
+    # worst-member planning of heterogeneous EngineMaps.
+    kib = (chunk * 4) / 1024.0
+    gamma = max(0.0, t_epi / kib)
+    RESULT["engine_costs"] = {}
+    # gascore hops run in Pallas TPU-interpret mode: keep shapes modest
+    # ((rows, 128) trailing-dim-128 f32) so the measurement stays cheap
+    probe = {
+        "xla": (256, 8192),     # rows of 128 f32: 128 KiB / 4 MiB hops
+        "gascore": (2, 256),    # 1 KiB / 128 KiB hops
+    }
+    xprobe = jnp.ones((N, 8192, 128), jnp.float32)
+    for backend, (rows_a, rows_b) in probe.items():
+        def hop(xl, backend=backend, rows=None):
+            eng = make_engine(backend, "node", N, interpret=True)
+            return eng.shift(xl[0, :rows], 1)[None]
+
+        def make_f(rows):
+            return jax.jit(shard_map(
+                functools.partial(hop, rows=rows), mesh=mesh,
+                in_specs=(P("node"),), out_specs=P("node"), check_vma=False,
+            ))
+
+        iters = 10 if backend == "xla" else 3
+        alpha = timeit(make_f(rows_a), xprobe, iters=iters)
+        t_big = timeit(make_f(rows_b), xprobe, iters=iters)
+        big_kib = rows_b * 128 * 4 / 1024.0
+        beta = max(0.0, (t_big - alpha) / big_kib)
+        RESULT["engine_costs"][backend] = {
+            "alpha_us": round(alpha, 2),
+            "beta_us_per_kib": round(beta, 4),
+            "gamma_us_per_kib": round(gamma, 4),
+        }
+        report(f"engine_cost_alpha_{backend}", alpha, "us_per_hop")
+        report(f"engine_cost_beta_{backend}", beta, "us_per_kib_wire",
+               unit="us_per_kib")
+    report("engine_cost_gamma", gamma, "us_per_kib_epilogue",
+           unit="us_per_kib")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(RESULT, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
 
     print("GAS_BENCH_DONE")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--json", nargs="?", const="BENCH_gas.json", default=None,
+        metavar="PATH",
+        help="write the machine-readable artifact (default: BENCH_gas.json)",
+    )
+    main(json_path=ap.parse_args().json)

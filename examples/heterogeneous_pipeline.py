@@ -68,6 +68,18 @@ np.testing.assert_allclose(sw, hw, rtol=1e-6)
 print("  identical results — zero application changes.")
 
 # --------------------------------------------------------------------------- #
+print("Act 2b: MIX them — a heterogeneous node map, software and hardware")
+print("nodes cooperating in ONE job (the paper's cluster, §II)")
+
+from repro.launch.mesh import node_backends
+
+backends = node_backends(N, pattern="alternating")  # sw, hw, sw, hw
+print("  node map:", dict(enumerate(backends)))
+mixed = run(",".join(backends))
+np.testing.assert_allclose(sw, mixed, rtol=1e-6)
+print("  identical results again — each rank on its own engine, one API.")
+
+# --------------------------------------------------------------------------- #
 print("Act 3: disaggregated serving — prefill node puts a KV cache into the")
 print("decode node's memory with ONE one-sided GAScore transfer")
 

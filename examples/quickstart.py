@@ -99,5 +99,24 @@ ar, bc, ex = ctx.spmd(coll_demo, x, out_specs=(P("node"),) * 3)
 assert np.allclose(np.asarray(ar)[0], np.asarray(x).sum(0))
 assert np.allclose(np.asarray(bc)[5], np.asarray(x)[2])
 print("ring all-reduce / broadcast / exchange over one-sided puts: OK")
-print("\nSwap backend='gascore' in the Context to run the same program on")
-print("the Pallas remote-DMA engine (see examples/heterogeneous_pipeline.py).")
+
+# --- 7. the collective scheduler: size-aware plans + segmented rings -------
+# sched picks the algorithm (tree / recursive doubling / segmented ring)
+# from payload bytes, node count, and the engine cost model, then runs it.
+from repro.core import sched
+
+for size in (1 << 10, 1 << 20, 1 << 24):  # 1 KiB, 1 MiB, 16 MiB
+    print(" ", sched.plan_collective("all_reduce", nbytes=size,
+                                     n_nodes=N).describe())
+
+def seg_demo(node, x):  # segmented ring all-reduce, 4 slices x depth 2
+    return collectives.segmented_ring_all_reduce(
+        node.engine, node.local(x), n_segments=4, depth=2)[None]
+
+seg_ar = ctx.spmd(seg_demo, x, out_specs=P("node"))
+assert np.array_equal(np.asarray(seg_ar), np.asarray(ar))  # bit-identical
+print("segmented ring all-reduce == monolithic (pipelined wire): OK")
+
+print("\nSwap backend='gascore' (or a mixed map like 'xla,gascore') in the")
+print("Context to run the same program on the Pallas remote-DMA engine")
+print("(see examples/heterogeneous_pipeline.py).")

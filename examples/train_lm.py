@@ -29,7 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import ckpt
 from repro.configs.registry import SMOKE
-from repro.core import collectives
+from repro.core import collectives, sched
 from repro.core.engine import make_engine
 from repro.data.synthetic import SyntheticLM
 from repro.models.build import build_model
@@ -57,7 +57,9 @@ def make_step(model, opt_cfg, mesh, n_nodes, reduce_mode):
             )
             pad = (-flat.shape[0]) % n_nodes
             flat = jnp.pad(flat, (0, pad))
-            red = collectives.ring_all_reduce(eng, flat) / n_nodes
+            # plan-driven: size-aware algorithm selection + segmentation
+            # (ring for these payload sizes, recursive doubling for tiny)
+            red = sched.all_reduce(eng, flat) / n_nodes
             out, off = [], 0
             for x in leaves:
                 out.append(red[off : off + x.size].reshape(x.shape).astype(x.dtype))

@@ -3,32 +3,45 @@
 - ``addrspace``   — partitioned global address space segments.
 - ``am``          — Active Messages (short/medium/long + handler dispatch).
 - ``engine``      — interchangeable transports: XLA software node vs
-                    GAScore Pallas hardware node (blocking + split-phase).
+                    GAScore Pallas hardware node (blocking + split-phase),
+                    plus heterogeneous per-rank ``EngineMap`` node maps.
 - ``extended``    — GASNet Extended API: non-blocking put/get handles.
-- ``collectives`` — ring/hierarchical collectives over one-sided puts.
+- ``collectives`` — ring/hierarchical/segmented collectives over one-sided
+                    puts, plus latency-optimal tree/recursive-doubling.
+- ``sched``       — the collective scheduler: size-aware algorithm
+                    selection + segmentation plans over the engine map.
 - ``gasnet``      — the GASNet-like user API (Context / Node / put / get /
                     put_nb / get_nb / sync).
 """
 from repro.core.addrspace import AddressSpace, GlobalAddress, SegmentSpec
 from repro.core.engine import (
+    AlreadyWaitedError,
     CommEngine,
+    EngineMap,
     GascoreEngine,
     Pending,
     XlaEngine,
     make_engine,
+    parse_backend_spec,
+    wait_all,
 )
 from repro.core.extended import GetHandle, Handle, PutHandle
 from repro.core.gasnet import Context, Node, Perm, Shift
+from repro.core.sched import CollectivePlan, EngineCost, plan_collective
 
 __all__ = [
     "AddressSpace",
     "GlobalAddress",
     "SegmentSpec",
+    "AlreadyWaitedError",
     "CommEngine",
     "Pending",
     "XlaEngine",
     "GascoreEngine",
+    "EngineMap",
     "make_engine",
+    "parse_backend_spec",
+    "wait_all",
     "Handle",
     "PutHandle",
     "GetHandle",
@@ -36,4 +49,7 @@ __all__ = [
     "Node",
     "Shift",
     "Perm",
+    "CollectivePlan",
+    "EngineCost",
+    "plan_collective",
 ]

@@ -229,12 +229,16 @@ def route(
     n_nodes: int,
     per_peer_capacity: int,
     all_to_all_fn: Callable[[jax.Array], jax.Array] | None = None,
+    engine=None,
 ) -> Tuple[AMBatch, jax.Array]:
     """Exchange all nodes' batches; returns each node's *incoming* messages.
 
-    Must be called inside ``shard_map`` over ``axis``.  ``all_to_all_fn``
-    lets a CommEngine supply the transport (XLA collective or GAScore ring);
-    default is ``lax.all_to_all``.
+    Must be called inside ``shard_map`` over ``axis``.  The transport is,
+    in order of preference: ``engine`` (a CommEngine — the exchange is then
+    *plan-driven*: ``repro.core.sched`` picks native vs direct-put
+    all-to-all from the buffer size and the engine's cost model, so a
+    GAScore or mixed node map routes AMs over its own puts), then
+    ``all_to_all_fn`` (an explicit callable), then ``lax.all_to_all``.
 
     The incoming batch has capacity ``n_nodes * K``; slot ``s*K + r`` holds
     the r-th message from source node s.  ``dest`` of received messages is
@@ -245,6 +249,10 @@ def route(
     packed, dropped = build_send_buffer(batch, n_nodes, K)
 
     def a2a(x: jax.Array) -> jax.Array:
+        if engine is not None:
+            from repro.core import sched
+
+            return sched.all_to_all(engine, x)
         if all_to_all_fn is not None:
             return all_to_all_fn(x)
         return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)

@@ -23,6 +23,29 @@ Ring algorithms (bandwidth-optimal, n-1 hops of 1/n of the data):
 - :func:`exchange`            (n*m, ...)            -> all-to-all, all n-1
   puts in flight simultaneously (fully overlapped personalized exchange)
 
+Segmented/pipelined rings (the scheduler's bulk tier — see
+``repro.core.sched``): the payload is chunked into ``n_segments`` slices
+with up to ``depth`` puts in flight, so segment k+1's wire time overlaps
+segment k's slice/accumulate/store epilogue — the GAScore command-FIFO
+drain made software-visible:
+
+- :func:`segmented_ring_all_gather`
+- :func:`segmented_ring_reduce_scatter`
+- :func:`segmented_ring_all_reduce`
+
+Segmentation is bit-transparent: every segment follows the exact hop and
+accumulate order of the monolithic ring, so results match the monolithic
+call bit for bit (property-tested for int dtypes over arbitrary
+``n_segments``/``depth``).
+
+Latency-optimal algorithms (the scheduler's small-payload tier):
+
+- :func:`recursive_doubling_all_reduce` — log2(n) exchange rounds carrying
+  the full payload (n must be a power of two); beats the ring when the
+  per-hop latency α dominates the wire term.
+- :func:`tree_broadcast` — binomial tree, ceil(log2 n) rounds (requires an
+  engine with partial-permute support, i.e. software nodes).
+
 Hierarchical (pod-aware — the paper's on-chip network vs OCCC split):
 
 - :func:`hierarchical_all_reduce` — reduce-scatter on the cheap inner axis,
@@ -32,7 +55,9 @@ Hierarchical (pod-aware — the paper's on-chip network vs OCCC split):
 """
 from __future__ import annotations
 
-from typing import Callable
+import math
+from collections import deque
+from typing import Callable, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,10 +69,16 @@ __all__ = [
     "ring_all_gather",
     "ring_reduce_scatter",
     "ring_all_reduce",
+    "segmented_ring_all_gather",
+    "segmented_ring_reduce_scatter",
+    "segmented_ring_all_reduce",
+    "recursive_doubling_all_reduce",
+    "tree_broadcast",
     "broadcast",
     "exchange",
     "hierarchical_all_reduce",
     "ring_all_to_all",
+    "segment_bounds",
 ]
 
 
@@ -180,6 +211,225 @@ def exchange(engine: CommEngine, x: jax.Array) -> jax.Array:
 def ring_all_to_all(engine: CommEngine, x: jax.Array) -> jax.Array:
     """All-to-all over the engine's transport (see CommEngine.all_to_all)."""
     return engine.all_to_all(x)
+
+
+# --------------------------------------------------------------------------- #
+# Segmented / pipelined rings
+# --------------------------------------------------------------------------- #
+def segment_bounds(m: int, n_segments: int) -> List[Tuple[int, int]]:
+    """Contiguous ``[lo, hi)`` slices splitting ``m`` rows into at most
+    ``n_segments`` near-equal segments (first remainder segments one larger,
+    like ``np.array_split``)."""
+    g = max(1, min(int(n_segments), m))
+    base, rem = divmod(m, g)
+    bounds = []
+    lo = 0
+    for i in range(g):
+        hi = lo + base + (1 if i < rem else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
+def _drain_pipeline(states: List[dict], depth: int, step: Callable) -> None:
+    """Software pipeline over per-segment ring state machines.
+
+    At most ``depth`` segments have a put in flight at any point; segments
+    are serviced round-robin FIFO, so the wait of the oldest in-flight
+    segment is followed by (a) initiating its next hop and (b) its local
+    epilogue — the epilogue of segment k overlapping the wire of the other
+    in-flight segments.  ``step(st)`` waits st's pending, runs the epilogue,
+    initiates the next hop, and returns False once the segment retired.
+    """
+    depth = max(1, int(depth))
+    inflight: deque = deque()
+    pending_start = deque(states)
+    while pending_start and len(inflight) < depth:
+        st = pending_start.popleft()
+        st["start"](st)
+        inflight.append(st)
+    while inflight:
+        st = inflight.popleft()
+        if step(st):
+            inflight.append(st)
+        elif pending_start:
+            nxt = pending_start.popleft()
+            nxt["start"](nxt)
+            inflight.append(nxt)
+
+
+def segmented_ring_all_gather(
+    engine: CommEngine, x: jax.Array, *, n_segments: int = 1, depth: int = 2
+) -> jax.Array:
+    """:func:`ring_all_gather`, payload chunked into ``n_segments`` slices
+    with up to ``depth`` puts in flight.
+
+    Each segment runs the exact monolithic hop schedule over its slice, so
+    the result is bit-identical to the monolithic call; segmentation only
+    changes *when* wire time happens relative to the store epilogues (the
+    pipelining a GAScore realizes by draining its command FIFO while the
+    receiver lands earlier packets).
+    """
+    n = engine.n_nodes
+    if x.ndim == 0 or n_segments <= 1 or x.shape[0] < 2 or n == 1:
+        return ring_all_gather(engine, x)
+    m = x.shape[0]
+    me = engine.my_id()
+    bounds = segment_bounds(m, n_segments)
+    if len(bounds) == 1:
+        return ring_all_gather(engine, x)
+
+    def start(st):
+        seg = lax.slice_in_dim(x, st["lo"], st["hi"], axis=0)
+        out = jnp.zeros((n,) + seg.shape, seg.dtype)
+        st["out"] = lax.dynamic_update_slice_in_dim(out, seg[None], me, axis=0)
+        st["pending"] = engine.shift_nb(seg, 1)
+        st["k"] = 1
+
+    def step(st):
+        cur = st["pending"].wait()
+        k = st["k"]
+        alive = k < n - 1
+        if alive:
+            st["pending"] = engine.shift_nb(cur, 1)  # forward before storing
+        src = lax.rem(me - k + n, n)
+        st["out"] = lax.dynamic_update_slice_in_dim(
+            st["out"], cur[None], src, axis=0
+        )
+        st["k"] = k + 1
+        return alive
+
+    states = [dict(lo=lo, hi=hi, start=start) for lo, hi in bounds]
+    _drain_pipeline(states, depth, step)
+    # stitch segments back: (n, m_g, ...) concat over the row axis
+    full = jnp.concatenate([st["out"] for st in states], axis=1)
+    return full.reshape((n * m,) + x.shape[1:])
+
+
+def segmented_ring_reduce_scatter(
+    engine: CommEngine, x: jax.Array, *, n_segments: int = 1, depth: int = 2
+) -> jax.Array:
+    """:func:`ring_reduce_scatter`, payload chunked into ``n_segments``
+    slices with up to ``depth`` put+accumulate pipelines in flight.
+
+    Per segment the hop order and accumulation order are exactly the
+    monolithic ring's, so results are bit-identical (for floats too: the
+    same additions happen in the same order on the same values).
+    """
+    n = engine.n_nodes
+    if x.shape[0] % n != 0:
+        raise ValueError(f"reduce_scatter dim0 {x.shape[0]} not divisible by {n}")
+    m = x.shape[0] // n
+    if n_segments <= 1 or m < 2 or n == 1:
+        return ring_reduce_scatter(engine, x)
+    bounds = segment_bounds(m, n_segments)
+    if len(bounds) == 1:
+        return ring_reduce_scatter(engine, x)
+    blocks = x.reshape((n, m) + x.shape[1:])
+    me = engine.my_id()
+
+    def start(st):
+        seg_blocks = lax.slice_in_dim(blocks, st["lo"], st["hi"], axis=1)
+        st["blocks"] = seg_blocks  # (n, m_g, ...)
+        cur = lax.dynamic_slice_in_dim(
+            seg_blocks, lax.rem(me - 1 + n, n), 1, axis=0
+        )[0]
+        st["pending"] = engine.shift_nb(cur, 1)
+        st["h"] = 1
+
+    def step(st):
+        h = st["h"]
+        c = lax.rem(me - h - 1 + 2 * n, n)
+        mine = lax.dynamic_slice_in_dim(st["blocks"], c, 1, axis=0)[0]
+        cur = st["pending"].wait() + mine
+        alive = h < n - 1
+        if alive:
+            st["pending"] = engine.shift_nb(cur, 1)
+        else:
+            st["cur"] = cur
+        st["h"] = h + 1
+        return alive
+
+    states = [dict(lo=lo, hi=hi, start=start) for lo, hi in bounds]
+    _drain_pipeline(states, depth, step)
+    return jnp.concatenate([st["cur"] for st in states], axis=0)
+
+
+def segmented_ring_all_reduce(
+    engine: CommEngine, x: jax.Array, *, n_segments: int = 1, depth: int = 2
+) -> jax.Array:
+    """Segmented :func:`ring_all_reduce` (RS + AG, both pipelined).
+
+    Bit-identical to the monolithic call for any ``n_segments``/``depth``
+    (property-tested for int dtypes)."""
+    n = engine.n_nodes
+    if x.ndim and x.shape[0] % n == 0 and x.shape[0] > 0:
+        shard = segmented_ring_reduce_scatter(
+            engine, x, n_segments=n_segments, depth=depth
+        )
+        return segmented_ring_all_gather(
+            engine, shard, n_segments=n_segments, depth=depth
+        )
+    return ring_all_reduce(engine, x)
+
+
+# --------------------------------------------------------------------------- #
+# Latency-optimal algorithms (the scheduler's small-payload tier)
+# --------------------------------------------------------------------------- #
+def recursive_doubling_all_reduce(engine: CommEngine, x: jax.Array) -> jax.Array:
+    """All-reduce in log2(n) pairwise-exchange rounds (full payload each).
+
+    Round r exchanges with the partner at XOR distance 2^r — a bijection,
+    so it runs on every engine (including the GAScore transport).  Total
+    cost log2(n)·(α + β·S): beats the ring's 2(n-1)·(α + β·S/n) when α
+    dominates, i.e. for small payloads.  Requires power-of-two n.
+    """
+    n = engine.n_nodes
+    if n & (n - 1):
+        raise ValueError(f"recursive doubling needs power-of-two nodes, got {n}")
+    cur = x
+    d = 1
+    while d < n:
+        dst = [i ^ d for i in range(n)]
+        pending = engine.permute_nb(cur, dst)
+        cur = cur + pending.wait()
+        d *= 2
+    return cur
+
+
+def tree_broadcast(
+    engine: CommEngine, x: jax.Array, *, root: int = 0
+) -> jax.Array:
+    """Binomial-tree broadcast: ceil(log2 n) rounds instead of n-1 hops.
+
+    Round r: ranks (relative to root) in [0, 2^r) send to rank+2^r.  The
+    send set is partial, so this needs ``engine.can_permute_partial``
+    (software nodes); the scheduler falls back to the ring pipeline
+    otherwise."""
+    n = engine.n_nodes
+    if n == 1:
+        return x
+    if not engine.can_permute_partial:
+        raise ValueError(
+            f"tree_broadcast needs partial permute; engine {engine.name!r} "
+            "only supports bijections (use broadcast())"
+        )
+    me = engine.my_id()
+    rel = lax.rem(me - root + n, n)
+    out = x
+    rounds = max(1, math.ceil(math.log2(n)))
+    for r in range(rounds):
+        span = 1 << r
+        dst = [None] * n
+        for i in range(n):
+            i_rel = (i - root) % n
+            if i_rel < span and i_rel + span < n:
+                dst[i] = (i + span) % n
+        pending = engine.permute_nb(out, dst)
+        recv = pending.wait()
+        is_recv = (rel >= span) & (rel < 2 * span)
+        out = jnp.where(is_recv, recv, out)
+    return out
 
 
 def hierarchical_all_reduce(

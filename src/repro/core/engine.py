@@ -25,13 +25,32 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["CommEngine", "Pending", "XlaEngine", "GascoreEngine", "make_engine"]
+__all__ = [
+    "CommEngine",
+    "Pending",
+    "AlreadyWaitedError",
+    "wait_all",
+    "XlaEngine",
+    "GascoreEngine",
+    "EngineMap",
+    "make_engine",
+    "parse_backend_spec",
+]
 
 
 def ring_pairs(n: int, k: int) -> List[Tuple[int, int]]:
     """Permutation pairs for 'every node sends to (me + k) mod n'."""
     k = k % n
     return [(i, (i + k) % n) for i in range(n)]
+
+
+class AlreadyWaitedError(RuntimeError):
+    """A split-phase handle was synced twice.
+
+    A transfer completes exactly once (``gasnet_wait_syncnb`` semantics);
+    the message always names the offending op so batch waits
+    (:func:`wait_all`, ``node.sync_all``) are debuggable.
+    """
 
 
 class Pending:
@@ -48,19 +67,30 @@ class Pending:
     - ``GascoreEngine``: the Pallas kernel's DMA *recv-semaphore wait* is
       the sync point; the DMA itself progresses in the background exactly
       like the paper's GAScore engine draining its command FIFO.
+
+    ``op`` labels the operation for error messages (``shift(k=1)``,
+    ``permute``, ...), so a double-wait — including one buried inside a
+    :func:`wait_all` batch — names the op instead of raising bare.
     """
 
-    __slots__ = ("_value", "_waited")
+    __slots__ = ("_value", "_waited", "op")
 
-    def __init__(self, value: jax.Array):
+    def __init__(self, value: jax.Array, op: str = "transfer"):
         self._value = value
         self._waited = False
+        self.op = op
+
+    @property
+    def waited(self) -> bool:
+        return self._waited
 
     def wait(self) -> jax.Array:
         """Complete the transfer and return the delivered value (a
         transfer completes exactly once, like ``gasnet_wait_syncnb``)."""
         if self._waited:
-            raise RuntimeError("Pending transfer already waited on")
+            raise AlreadyWaitedError(
+                f"Pending {self.op} transfer already waited on"
+            )
         self._waited = True
         return self._value
 
@@ -71,17 +101,49 @@ class Pending:
         return True
 
 
+def wait_all(pendings: Sequence["Pending"]) -> List[jax.Array]:
+    """Complete a batch of pendings in issue order (``gasnet_wait_syncnb_all``).
+
+    Idempotence is checked up front: if any entry was already waited on,
+    raise one clear error naming the op and its position *before* consuming
+    any of the others, so the batch is not left half-drained.
+    """
+    stale = [
+        (i, p.op) for i, p in enumerate(pendings) if p.waited
+    ]
+    if stale:
+        desc = ", ".join(f"#{i} ({op})" for i, op in stale)
+        raise AlreadyWaitedError(
+            f"wait_all: pending transfer(s) already waited on: {desc}"
+        )
+    return [p.wait() for p in pendings]
+
+
 class CommEngine:
     """Transport primitives of one GASNet node.
 
     ``axis`` is the mesh axis enumerating the nodes; ``n_nodes`` its size.
+
+    ``can_permute_partial`` advertises whether :meth:`permute` accepts
+    ``None`` destinations (nodes that send nowhere).  The XLA transport
+    can (a chain collective-permute); the GAScore transport cannot — every
+    recv semaphore must be signalled exactly once, so only bijections are
+    legal.  The scheduler consults this instead of engine ``isinstance``
+    checks when choosing tree vs ring algorithms and chain vs ring
+    pipeline boundaries.
     """
 
     name = "abstract"
+    can_permute_partial = False
 
     def __init__(self, axis: str, n_nodes: int):
         self.axis = axis
         self.n_nodes = n_nodes
+
+    def backend_of(self, rank: int) -> str:
+        """Backend name serving ``rank`` (uniform for homogeneous engines;
+        :class:`EngineMap` overrides per rank)."""
+        return self.name
 
     # -- point-to-point (one-sided put transport) ----------------------- #
     def shift(self, x: jax.Array, k: int = 1) -> jax.Array:
@@ -99,11 +161,11 @@ class CommEngine:
         node ``(me + k) % n`` and return a :class:`Pending` whose
         ``wait()`` is the sync point.  Compute traced between the two
         overlaps with the transfer."""
-        return Pending(self.shift(x, k))
+        return Pending(self.shift(x, k), op=f"shift(k={k})")
 
     def permute_nb(self, x: jax.Array, dst: Sequence[int]) -> Pending:
         """Non-blocking :meth:`permute` (split-phase, see :meth:`shift_nb`)."""
-        return Pending(self.permute(x, dst))
+        return Pending(self.permute(x, dst), op="permute")
 
     # -- collectives ----------------------------------------------------- #
     def all_to_all(self, x: jax.Array) -> jax.Array:
@@ -145,6 +207,7 @@ class XlaEngine(CommEngine):
     """Software GASNet node: XLA collectives as the transport."""
 
     name = "xla"
+    can_permute_partial = True
 
     def shift(self, x: jax.Array, k: int = 1) -> jax.Array:
         if k % self.n_nodes == 0:
@@ -229,11 +292,163 @@ class GascoreEngine(CommEngine):
     # n-1 remote DMAs is in flight before any recv-semaphore wait).
 
 
-def make_engine(
-    backend: str, axis: str, n_nodes: int, interpret: bool = True
+class EngineMap(CommEngine):
+    """Heterogeneous node map: each rank is backed by its own engine.
+
+    The paper's cluster mixes software nodes (x86/ARM GASNet) and hardware
+    nodes (GAScore) in one job; here ``backends[r]`` names the engine
+    serving rank ``r`` (``"xla"`` = software node, ``"gascore"`` = hardware
+    node).  Point-to-point transport is carried *per edge* by the sender's
+    engine: every member engine moves the payload (all ranks participate in
+    both transports — the SPMD analogue of a packet crossing engine
+    domains), and each receiver keeps the copy delivered by its sender's
+    backend.  Collectives are the ring/put algorithms from
+    ``repro.core.collectives`` running over that mixed edge transport, so
+    mixed jobs run unmodified — and match both homogeneous engines bit for
+    bit (parity is asserted in the testing suites).
+
+    A partial permute (``None`` destinations) is only legal when every
+    member engine supports it.
+    """
+
+    name = "map"
+
+    def __init__(
+        self,
+        axis: str,
+        backends: Sequence[str],
+        interpret: bool = True,
+        engines: dict | None = None,
+    ):
+        super().__init__(axis, len(backends))
+        self.backends = tuple(backends)
+        uniq: List[str] = []
+        for b in self.backends:
+            if b not in uniq:
+                uniq.append(b)
+        if engines is None:
+            engines = {
+                b: _make_single_engine(b, axis, self.n_nodes, interpret)
+                for b in uniq
+            }
+        self._engines = engines
+        self._uniq = tuple(uniq)
+        # bool mask per backend: which ranks it serves (host constants)
+        self._masks = {
+            b: jnp.asarray([be == b for be in self.backends])
+            for b in self._uniq
+        }
+        self.can_permute_partial = all(
+            self._engines[b].can_permute_partial for b in self._uniq
+        )
+
+    def backend_of(self, rank: int) -> str:
+        return self.backends[rank % self.n_nodes]
+
+    def member(self, backend: str) -> CommEngine:
+        return self._engines[backend]
+
+    @property
+    def is_heterogeneous(self) -> bool:
+        return len(self._uniq) > 1
+
+    # -- per-edge transport selection ----------------------------------- #
+    def _select_by_src(self, outs: dict, src: jax.Array) -> jax.Array:
+        """Each receiver keeps the copy carried by its *sender's* engine."""
+        acc = outs[self._uniq[0]]
+        for b in self._uniq[1:]:
+            acc = jnp.where(self._masks[b][src], outs[b], acc)
+        return acc
+
+    def shift(self, x: jax.Array, k: int = 1) -> jax.Array:
+        if k % self.n_nodes == 0:
+            return x
+        if not self.is_heterogeneous:
+            return self._engines[self._uniq[0]].shift(x, k)
+        outs = {b: self._engines[b].shift(x, k) for b in self._uniq}
+        src = lax.rem(self.my_id() - k + 2 * self.n_nodes, self.n_nodes)
+        return self._select_by_src(outs, src)
+
+    def permute(self, x: jax.Array, dst: Sequence[int]) -> jax.Array:
+        if not self.is_heterogeneous:
+            return self._engines[self._uniq[0]].permute(x, dst)
+        has_none = any(d is None for d in dst)
+        if has_none and not self.can_permute_partial:
+            raise ValueError(
+                "partial permute (None destinations) unsupported by "
+                f"engine map {self.backends}"
+            )
+        outs = {b: self._engines[b].permute(x, dst) for b in self._uniq}
+        # receiver j's sender is inv[j]; non-destinations receive zeros
+        # from every member engine, so any branch is correct for them.
+        inv = [0] * self.n_nodes
+        for s, d in enumerate(dst):
+            if d is not None:
+                inv[int(d)] = s
+        src = jnp.asarray(inv, jnp.int32)[self.my_id()]
+        return self._select_by_src(outs, src)
+
+    # -- collectives: the put algorithms over the mixed edge transport --- #
+    def all_gather(self, x: jax.Array) -> jax.Array:
+        from repro.core import collectives
+
+        return collectives.ring_all_gather(self, x)
+
+    def reduce_scatter(self, x: jax.Array) -> jax.Array:
+        from repro.core import collectives
+
+        return collectives.ring_reduce_scatter(self, x)
+
+    def all_reduce(self, x: jax.Array) -> jax.Array:
+        from repro.core import collectives
+
+        return collectives.ring_all_reduce(self, x)
+
+    # all_to_all: inherited split-phase exchange over shift_nb.
+
+
+def _make_single_engine(
+    backend: str, axis: str, n_nodes: int, interpret: bool
 ) -> CommEngine:
     if backend == "xla":
         return XlaEngine(axis, n_nodes)
     if backend == "gascore":
         return GascoreEngine(axis, n_nodes, interpret=interpret)
     raise ValueError(f"unknown engine backend {backend!r}")
+
+
+def parse_backend_spec(backend, n_nodes: int) -> Tuple[str, ...]:
+    """Normalize a backend spec to one name per rank.
+
+    Accepts a single name (``"xla"``), a comma-separated per-rank pattern
+    (``"xla,gascore"`` — tiled around the ring when shorter than
+    ``n_nodes``), or a sequence of names.
+    """
+    if isinstance(backend, str):
+        names = [b.strip() for b in backend.split(",") if b.strip()]
+    else:
+        names = [str(b) for b in backend]
+    if not names:
+        raise ValueError("empty engine backend spec")
+    if n_nodes % len(names):
+        raise ValueError(
+            f"backend pattern {names} (len {len(names)}) does not tile "
+            f"{n_nodes} nodes"
+        )
+    return tuple(names[i % len(names)] for i in range(n_nodes))
+
+
+def make_engine(
+    backend, axis: str, n_nodes: int, interpret: bool = True
+) -> CommEngine:
+    """Build the engine (or heterogeneous :class:`EngineMap`) for a mesh axis.
+
+    ``backend`` is a single engine name, a comma-separated per-rank pattern,
+    or a sequence of per-rank names — ``make_engine("xla,gascore", ...)``
+    gives alternating software/hardware nodes, the paper's mixed cluster.
+    """
+    ranks = parse_backend_spec(backend, n_nodes)
+    uniq = set(ranks)
+    if len(uniq) == 1:
+        return _make_single_engine(ranks[0], axis, n_nodes, interpret)
+    return EngineMap(axis, ranks, interpret=interpret)

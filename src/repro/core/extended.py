@@ -46,7 +46,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["Handle", "PutHandle", "GetHandle"]
+from repro.core.engine import AlreadyWaitedError
+
+__all__ = ["Handle", "PutHandle", "GetHandle", "AlreadyWaitedError"]
 
 
 class Handle:
@@ -66,9 +68,13 @@ class Handle:
         raise NotImplementedError
 
     def complete(self) -> Any:
-        """Finish the op (idempotent error: a handle syncs exactly once)."""
+        """Finish the op (idempotent error: a handle syncs exactly once).
+
+        Raises :class:`AlreadyWaitedError` naming the op, so batch waits
+        (``node.sync_all``) over a list containing an already-synced
+        handle fail with a debuggable message."""
         if self.done:
-            raise RuntimeError(f"{self.op} handle already synced")
+            raise AlreadyWaitedError(f"{self.op} handle already synced")
         self.done = True
         return self._complete()
 

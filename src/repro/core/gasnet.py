@@ -268,7 +268,9 @@ class Node:
             self._outstanding.remove(handle)
         if isinstance(handle, extended.PutHandle):
             if handle.done:
-                raise RuntimeError(f"{handle.op} handle already synced")
+                raise extended.AlreadyWaitedError(
+                    f"{handle.op} handle already synced"
+                )
             handle.done = True
             base = self._seg_latest.get(handle.key, handle._local)
             new_local = handle.apply(base)
@@ -353,14 +355,19 @@ class Node:
 
     def am_flush(self, state: Any) -> Any:
         """Route all queued messages and run handlers at the receivers.
-        Returns the updated receiver state.  (The poll loop of GASNet.)"""
+        Returns the updated receiver state.  (The poll loop of GASNet.)
+
+        The router's all-to-all is plan-driven: ``repro.core.sched``
+        chooses native vs direct-put exchange from the buffer size and
+        this node's engine cost model (heterogeneous maps route over
+        their mixed puts)."""
         batch = self._ensure_batch()
         recv, dropped = am_lib.route(
             batch,
             axis=self.engine.axis,
             n_nodes=self.n_nodes,
             per_peer_capacity=self._am_per_peer,
-            all_to_all_fn=self.engine.all_to_all,
+            engine=self.engine,
         )
         self.dropped = self.dropped + dropped
         self._batch = None
@@ -368,7 +375,14 @@ class Node:
 
 
 class Context:
-    """Session object: mesh + node axis + engine backend + handler table."""
+    """Session object: mesh + node axis + engine backend + handler table.
+
+    ``backend`` is a single engine name (``"xla"`` — software nodes,
+    ``"gascore"`` — hardware nodes), a comma-separated per-rank pattern
+    (``"xla,gascore"`` — the paper's heterogeneous cluster: alternating
+    software/hardware nodes in one job), or a sequence of per-rank names;
+    see :func:`repro.core.engine.make_engine`.
+    """
 
     def __init__(
         self,

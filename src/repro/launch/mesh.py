@@ -10,14 +10,24 @@ Axis roles:
           by default, pipeline stages with ``--pipeline``.
   data  — intra-pod FSDP/data-parallel (batch + parameter dim 0).
   model — tensor/expert parallel (heads, d_ff columns, experts, vocab).
+
+Heterogeneous node maps: a mesh axis can mix software and hardware GASNet
+nodes (the paper's x86/ARM + GAScore cluster).  :func:`node_backends`
+builds the per-rank backend tuple that ``repro.core.engine.make_engine``
+(or ``gasnet.Context(backend=...)``) turns into an ``EngineMap``.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Iterable, Optional, Tuple
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh", "mesh_axes"]
+__all__ = [
+    "make_production_mesh",
+    "make_mesh",
+    "mesh_axes",
+    "node_backends",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -37,3 +47,38 @@ def mesh_axes(mesh: jax.sharding.Mesh) -> Tuple[Tuple[str, ...], str]:
     tp = "model" if "model" in names else names[-1]
     dp = tuple(n for n in names if n != tp)
     return dp, tp
+
+
+def node_backends(
+    n_nodes: int,
+    *,
+    hw_ranks: Optional[Iterable[int]] = None,
+    pattern: Optional[str] = None,
+    software: str = "xla",
+    hardware: str = "gascore",
+) -> Tuple[str, ...]:
+    """Per-rank engine backends for a heterogeneous node map.
+
+    Either name the hardware ranks explicitly (``hw_ranks={1, 3}``) or
+    pick a ``pattern``:
+
+    - ``"alternating"`` — odd ranks are hardware nodes (the paper's mixed
+      racks: every CPU node paired with an FPGA node),
+    - ``"split"``       — the upper half of the ring is hardware,
+    - ``None``          — all software.
+
+    Feed the result to ``make_engine(...)`` / ``gasnet.Context(backend=...)``.
+    """
+    if hw_ranks is not None and pattern is not None:
+        raise ValueError("pass hw_ranks or pattern, not both")
+    if hw_ranks is not None:
+        hw = {int(r) % n_nodes for r in hw_ranks}
+    elif pattern == "alternating":
+        hw = {r for r in range(n_nodes) if r % 2 == 1}
+    elif pattern == "split":
+        hw = set(range(n_nodes // 2, n_nodes))
+    elif pattern is None:
+        hw = set()
+    else:
+        raise ValueError(f"unknown node-map pattern {pattern!r}")
+    return tuple(hardware if r in hw else software for r in range(n_nodes))

@@ -29,6 +29,7 @@ mesh uses S=2, M>=8 -> <= 11% bubble.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Callable, Optional
 
 import jax
@@ -36,7 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.engine import CommEngine, XlaEngine
+from repro.core.engine import CommEngine, XlaEngine, wait_all
 from repro.compat import shard_map
 
 __all__ = ["gpipe", "pipelined"]
@@ -51,6 +52,7 @@ def gpipe(
     n_stages: int,
     broadcast_out: bool = True,
     engine: Optional[CommEngine] = None,
+    boundary_segments: Optional[int] = None,
 ) -> jax.Array:
     """Run ``stage_fn`` as a GPipe pipeline inside shard_map over ``axis``.
 
@@ -61,22 +63,51 @@ def gpipe(
     replicated); otherwise it is valid on the last stage only.
 
     ``engine`` is the stage-boundary transport (default: the software
-    ``XlaEngine``; pass a ``GascoreEngine`` to ship activations with the
-    Pallas remote-DMA kernels — forward only, the Pallas path defines no
-    VJP).  On the XLA engine the boundary put is a chain permute
-    (s -> s+1, no wrap — no dead traffic); the GAScore transport requires
-    a bijection (every recv semaphore signalled exactly once), so there
-    the put is a ring ``Shift(1)`` whose wrap edge (S-1 -> 0) is dead:
-    stage 0 always injects fresh microbatches and ignores its carry.
+    ``XlaEngine``; pass a ``GascoreEngine`` — or a heterogeneous
+    ``EngineMap`` mixing software and hardware stages — to ship
+    activations with the Pallas remote-DMA kernels; forward only, the
+    Pallas path defines no VJP).  On engines with partial-permute support
+    (``engine.can_permute_partial``) the boundary put is a chain permute
+    (s -> s+1, no wrap — no dead traffic); bijection-only transports
+    (GAScore: every recv semaphore signalled exactly once) use a ring
+    ``Shift(1)`` whose wrap edge (S-1 -> 0) is dead: stage 0 always
+    injects fresh microbatches and ignores its carry.
+
+    The boundary transport is *plan-driven*: ``repro.core.sched.plan_p2p``
+    sizes ``boundary_segments`` from the activation bytes and the engine
+    cost model (pass it explicitly to pin); with >1 segments the
+    activation ships as multiple puts in flight, so the wire overlaps the
+    per-tick output bookkeeping.
     """
     S = n_stages
     M = x_micro.shape[0]
     eng = engine or XlaEngine(axis, S)
     chain = tuple(range(1, S)) + (None,)  # s -> s+1, last stage sends nowhere
-    use_chain = isinstance(eng, XlaEngine)
+    use_chain = eng.can_permute_partial
+    if boundary_segments is None:
+        from repro.core import sched
+
+        mb_bytes = math.prod(x_micro.shape[1:]) * x_micro.dtype.itemsize
+        boundary_segments = sched.plan_p2p(nbytes=mb_bytes, engine=eng).n_segments
+    n_seg = max(1, int(boundary_segments))
+
+    def _one_put_nb(y):
+        return eng.permute_nb(y, chain) if use_chain else eng.shift_nb(y, 1)
 
     def boundary_put_nb(y):
-        return eng.permute_nb(y, chain) if use_chain else eng.shift_nb(y, 1)
+        """Initiate the stage-boundary put as n_seg in-flight segments."""
+        if n_seg == 1 or y.ndim == 0 or y.shape[0] < n_seg:
+            return [_one_put_nb(y)]
+        from repro.core.collectives import segment_bounds
+
+        return [
+            _one_put_nb(lax.slice_in_dim(y, lo, hi, axis=0))
+            for lo, hi in segment_bounds(y.shape[0], n_seg)
+        ]
+
+    def boundary_wait(pendings):
+        parts = wait_all(pendings)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
     stage = eng.my_id()
     mb_shape = x_micro.shape[1:]
@@ -94,7 +125,7 @@ def gpipe(
         y = jnp.where(active, y, jnp.zeros_like(y))
         # split-phase put of activations to the next stage: initiate as
         # soon as y exists, record outputs while the transfer is in flight
-        pending = boundary_put_nb(y)
+        pendings = boundary_put_nb(y)
         # last stage records its result (overlaps the boundary put)
         outputs = lax.cond(
             active & (stage == S - 1),
@@ -102,7 +133,7 @@ def gpipe(
             lambda o: o,
             outputs,
         )
-        carry_in = pending.wait()
+        carry_in = boundary_wait(pendings)
     if broadcast_out:
         outputs = lax.psum(outputs, axis)  # only the last stage is nonzero
     return outputs
@@ -119,6 +150,7 @@ def pipelined(
     out_spec: Optional[P] = None,
     remat: bool = True,
     engine: Optional[CommEngine] = None,
+    boundary_segments: Optional[int] = None,
 ) -> Callable:
     """Wrap a stage function into a jit-able pipelined forward.
 
@@ -126,7 +158,8 @@ def pipelined(
     ``x_spec``/``out_spec`` shard the microbatch dimension over nothing
     (microbatches stream through stages, data-parallel axes can shard the
     per-microbatch batch dim as usual).  ``engine`` selects the
-    stage-boundary transport (see :func:`gpipe`).
+    stage-boundary transport and ``boundary_segments`` its segmentation
+    (default: planned from the activation size, see :func:`gpipe`).
     """
     n_stages = mesh.shape[axis]
     body = jax.checkpoint(stage_fn) if remat else stage_fn
@@ -134,7 +167,7 @@ def pipelined(
     def fn(stage_params, x_micro):
         return gpipe(
             body, stage_params, x_micro, axis=axis, n_stages=n_stages,
-            engine=engine,
+            engine=engine, boundary_segments=boundary_segments,
         )
 
     return shard_map(

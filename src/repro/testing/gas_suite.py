@@ -226,6 +226,50 @@ def main() -> None:
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
     print("extended engine parity OK")
 
+    # ---- heterogeneous EngineMap: mixed sw/hw nodes, same parity suite -----
+    # Alternating software (XLA) and hardware (GAScore) ranks in ONE mesh:
+    # the paper's mixed cluster.  The identical Extended-API program must
+    # produce identical results.
+    ctx_mix = gasnet.Context(mesh, node_axis="node", backend="xla,gascore")
+    mix = ctx_mix.spmd(prog_ext, segk, xk, out_specs=specs)
+    for name, a, b in zip(("put_nb/sync", "get_nb", "broadcast", "exchange"),
+                          sw, mix):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-6,
+            err_msg=f"mixed-map parity: {name}",
+        )
+    print("heterogeneous EngineMap parity OK")
+
+    # ---- scheduler: segmented rings match monolithic; plans dispatch -------
+    from repro.core import sched
+
+    xi = jnp.arange(8 * 16, dtype=jnp.int32).reshape(8, 16) * 7 - 300
+
+    def prog_seg(node, x):
+        e = node.engine
+        xl = node.local(x)
+        mono = collectives.ring_all_reduce(e, xl)
+        seg = collectives.segmented_ring_all_reduce(
+            e, xl, n_segments=3, depth=2
+        )
+        agm = collectives.ring_all_gather(e, xl)
+        ags = collectives.segmented_ring_all_gather(
+            e, xl, n_segments=4, depth=3
+        )
+        planned = sched.all_reduce(e, xl)
+        return mono[None], seg[None], agm[None], ags[None], planned[None]
+
+    for c in (ctx, ctx_mix):
+        mono, seg, agm, ags, planned = map(
+            np.asarray, c.spmd(prog_seg, xi, out_specs=(P("node"),) * 5)
+        )
+        np.testing.assert_array_equal(mono, seg)
+        np.testing.assert_array_equal(agm, ags)
+        np.testing.assert_array_equal(
+            planned, np.tile(np.asarray(xi).sum(0), (8, 1))
+        )
+    print("segmented + planned collectives OK")
+
     print("GAS_SUITE_PASS")
 
 

@@ -78,6 +78,10 @@ def main() -> None:
     print("ring_reduce_scatter OK")
 
     # ---- engine parity: the paper's software<->hardware migration claim ----
+    # "xla,gascore" is the heterogeneous EngineMap — alternating software
+    # and hardware ranks in one mesh — and must pass the same parity suite
+    # as each homogeneous engine.
+    BACKENDS = ("xla", "gascore", "xla,gascore")
     for op in ("all_reduce", "all_to_all", "all_gather", "reduce_scatter"):
         def make_prog(backend, op=op):
             def prog(a):
@@ -86,22 +90,48 @@ def main() -> None:
                 return getattr(e, op)(arg)[None]
             return prog
 
-        sw = np.asarray(run(make_prog("xla"), xf, in_specs=(P("node"),)))
-        hw = np.asarray(run(make_prog("gascore"), xf, in_specs=(P("node"),)))
-        np.testing.assert_allclose(sw, hw, rtol=1e-6)
-    print("engine parity OK")
+        outs = [
+            np.asarray(run(make_prog(b), xf, in_specs=(P("node"),)))
+            for b in BACKENDS
+        ]
+        for b, o in zip(BACKENDS[1:], outs[1:]):
+            np.testing.assert_allclose(
+                outs[0], o, rtol=1e-6, err_msg=f"{op} parity vs {b}"
+            )
+    print("engine parity OK (incl. heterogeneous map)")
 
-    # ring algorithms built on top run on BOTH engines identically
+    # ring algorithms built on top run on EVERY engine identically,
+    # monolithic and segmented/pipelined (the scheduler's bulk tier)
+    from repro.core import sched
+
     def coll_prog(backend):
         def prog(a):
             e = make_engine(backend, "node", N, interpret=True)
-            return collectives.ring_all_reduce(e, a[0])[None]
+            mono = collectives.ring_all_reduce(e, a[0])
+            seg = collectives.segmented_ring_all_reduce(
+                e, a[0], n_segments=3, depth=2
+            )
+            planned = sched.all_reduce(e, a[0])
+            return mono[None], seg[None], planned[None]
         return prog
 
-    sw = np.asarray(run(coll_prog("xla"), xf, in_specs=(P("node"),)))
-    hw = np.asarray(run(coll_prog("gascore"), xf, in_specs=(P("node"),)))
-    np.testing.assert_allclose(sw, hw, rtol=1e-6)
-    print("collectives-on-engines parity OK")
+    outs = {
+        b: tuple(
+            np.asarray(y)
+            for y in run(coll_prog(b), xf, in_specs=(P("node"),),
+                         out_specs=(P("node"),) * 3)
+        )
+        for b in BACKENDS
+    }
+    for b in BACKENDS:
+        mono, seg, planned = outs[b]
+        np.testing.assert_allclose(mono, seg, rtol=1e-6,
+                                   err_msg=f"segmented != monolithic on {b}")
+        np.testing.assert_allclose(mono, planned, rtol=1e-5,
+                                   err_msg=f"planned != monolithic on {b}")
+        np.testing.assert_allclose(mono, outs["xla"][0], rtol=1e-6,
+                                   err_msg=f"ring parity vs {b}")
+    print("collectives-on-engines parity OK (monolithic/segmented/planned)")
 
     # split-phase primitives + the collectives built on them (Extended API)
     def nb_prog(backend):

@@ -15,13 +15,18 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import am
+from repro.core import collectives as coll
+from repro.core import sched
 from repro.kernels import ref
 from repro.models.common import build_layer_program
 from repro.optim import adamw, compression
 from repro.parallel.sharding import sanitize
 from repro.runtime.ft import elastic_plan
+from repro.testing.sim import run_spmd
 
 SET = settings(max_examples=25, deadline=None)
+# lockstep-simulator tests run every rank to fixpoint; keep them lean
+SET_SIM = settings(max_examples=10, deadline=None)
 
 
 # --------------------------------------------------------------------------- #
@@ -105,6 +110,150 @@ def test_am_send_buffer_invariants(cap, n_nodes, k, seed):
     sent_per_dest = np.bincount(dests, minlength=n_nodes)
     expect_dropped = np.maximum(sent_per_dest - k, 0).sum()
     assert int(dropped) == expect_dropped
+
+
+# --------------------------------------------------------------------------- #
+# segmented collectives: bit-exact vs monolithic for ANY n_segments/depth
+# (the scheduler's pipelining must be semantics-transparent)
+# --------------------------------------------------------------------------- #
+def _rank_arrays(rng, n, rows, cols, lo=-1000, hi=1000):
+    return [
+        jnp.asarray(rng.integers(lo, hi, size=(rows, cols)), jnp.int32)
+        for _ in range(n)
+    ]
+
+
+@SET_SIM
+@given(
+    n=st.integers(2, 5),
+    rows=st.integers(1, 6),
+    cols=st.integers(1, 3),
+    n_segments=st.integers(1, 9),
+    depth=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_segmented_all_gather_bitexact(n, rows, cols, n_segments, depth, seed):
+    xs = _rank_arrays(np.random.default_rng(seed), n, rows, cols)
+    seg = run_spmd(
+        lambda e: coll.segmented_ring_all_gather(
+            e, xs[e.rank], n_segments=n_segments, depth=depth
+        ),
+        n,
+    )
+    mono = run_spmd(lambda e: coll.ring_all_gather(e, xs[e.rank]), n)
+    oracle = np.concatenate([np.asarray(x) for x in xs], axis=0)
+    for a, b in zip(seg, mono):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), oracle)
+
+
+@SET_SIM
+@given(
+    n=st.integers(2, 5),
+    m=st.integers(1, 5),
+    cols=st.integers(1, 3),
+    n_segments=st.integers(1, 9),
+    depth=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_segmented_reduce_scatter_bitexact(n, m, cols, n_segments, depth, seed):
+    xs = _rank_arrays(np.random.default_rng(seed), n, n * m, cols)
+    seg = run_spmd(
+        lambda e: coll.segmented_ring_reduce_scatter(
+            e, xs[e.rank], n_segments=n_segments, depth=depth
+        ),
+        n,
+    )
+    mono = run_spmd(lambda e: coll.ring_reduce_scatter(e, xs[e.rank]), n)
+    total = np.sum([np.asarray(x) for x in xs], axis=0)
+    for r, (a, b) in enumerate(zip(seg, mono)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(
+            np.asarray(a), total[r * m : (r + 1) * m]
+        )
+
+
+@SET_SIM
+@given(
+    n=st.integers(2, 4),
+    m=st.integers(1, 4),
+    n_segments=st.integers(1, 7),
+    depth=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_segmented_all_reduce_bitexact(n, m, n_segments, depth, seed):
+    xs = _rank_arrays(np.random.default_rng(seed), n, n * m, 2)
+    seg = run_spmd(
+        lambda e: coll.segmented_ring_all_reduce(
+            e, xs[e.rank], n_segments=n_segments, depth=depth
+        ),
+        n,
+    )
+    mono = run_spmd(lambda e: coll.ring_all_reduce(e, xs[e.rank]), n)
+    total = np.sum([np.asarray(x) for x in xs], axis=0)
+    for a, b in zip(seg, mono):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), total)
+
+
+@SET_SIM
+@given(
+    logn=st.integers(1, 3),
+    width=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_recursive_doubling_matches_sum(logn, width, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    xs = [
+        jnp.asarray(rng.integers(-1000, 1000, size=(width,)), jnp.int32)
+        for _ in range(n)
+    ]
+    outs = run_spmd(
+        lambda e: coll.recursive_doubling_all_reduce(e, xs[e.rank]), n
+    )
+    total = np.sum([np.asarray(x) for x in xs], axis=0)
+    for o in outs:
+        np.testing.assert_array_equal(np.asarray(o), total)
+
+
+@SET_SIM
+@given(
+    n=st.integers(2, 8),
+    root=st.integers(0, 7),
+    width=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tree_broadcast_delivers_root(n, root, width, seed):
+    root = root % n
+    rng = np.random.default_rng(seed)
+    xs = [
+        jnp.asarray(rng.integers(-99, 99, size=(width,)), jnp.int32)
+        for _ in range(n)
+    ]
+    outs = run_spmd(lambda e: coll.tree_broadcast(e, xs[e.rank], root=root), n)
+    for o in outs:
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(xs[root]))
+
+
+@SET
+@given(
+    op=st.sampled_from(["all_reduce", "all_gather", "reduce_scatter",
+                        "broadcast", "all_to_all"]),
+    nbytes=st.integers(1, 1 << 28),
+    n_nodes=st.integers(1, 64),
+)
+def test_planner_total_and_deterministic(op, nbytes, n_nodes):
+    p = sched.plan_collective(op, nbytes=nbytes, n_nodes=n_nodes)
+    q = sched.plan_collective(op, nbytes=nbytes, n_nodes=n_nodes)
+    assert p == q  # planning is pure
+    assert p.algorithm in ("ring", "recursive_doubling", "tree", "direct",
+                           "native")
+    assert 1 <= p.n_segments <= sched.MAX_SEGMENTS
+    assert p.depth >= 1
+    assert p.est_us >= 0.0
+    if p.algorithm == "recursive_doubling":
+        assert n_nodes & (n_nodes - 1) == 0
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,262 @@
+"""Collective scheduler: planner, cost model, engine map, batch waits.
+
+Single-device tests: the planner and the engine map are host-side
+objects; execution paths are covered by the lockstep simulator here and
+by the multi-device suites (``tests/test_multidev.py``).
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collectives, sched
+from repro.core.engine import (
+    AlreadyWaitedError,
+    EngineMap,
+    GascoreEngine,
+    Pending,
+    XlaEngine,
+    make_engine,
+    parse_backend_spec,
+    wait_all,
+)
+from repro.testing.sim import run_spmd
+
+
+# --------------------------------------------------------------------------- #
+# size-aware algorithm selection
+# --------------------------------------------------------------------------- #
+def test_small_allreduce_takes_recursive_doubling():
+    p = sched.plan_collective("all_reduce", nbytes=1 << 10, n_nodes=8)
+    assert p.algorithm == "recursive_doubling"
+    assert "latency" in p.reason
+
+
+def test_large_allreduce_takes_segmented_ring():
+    p = sched.plan_collective("all_reduce", nbytes=64 << 20, n_nodes=8)
+    assert p.algorithm == "ring"
+    assert p.n_segments > 1
+    assert p.depth >= 2
+
+
+def test_non_pow2_never_recursive_doubling():
+    for nbytes in (64, 1 << 14, 1 << 24):
+        p = sched.plan_collective("all_reduce", nbytes=nbytes, n_nodes=6)
+        assert p.algorithm == "ring"
+
+
+def test_small_broadcast_takes_tree_only_with_partial_permute():
+    sw = XlaEngine("node", 8)
+    hw = GascoreEngine("node", 8)
+    assert sched.plan_collective(
+        "broadcast", nbytes=256, n_nodes=8, engine=sw
+    ).algorithm == "tree"
+    assert sched.plan_collective(
+        "broadcast", nbytes=256, n_nodes=8, engine=hw
+    ).algorithm == "ring"
+
+
+def test_all_to_all_native_vs_direct():
+    sw = XlaEngine("node", 8)
+    hw = GascoreEngine("node", 8)
+    assert sched.plan_collective(
+        "all_to_all", nbytes=1 << 12, n_nodes=8, engine=sw
+    ).algorithm == "native"
+    assert sched.plan_collective(
+        "all_to_all", nbytes=1 << 12, n_nodes=8, engine=hw
+    ).algorithm == "direct"
+
+
+def test_explicit_segments_pin_the_plan():
+    p = sched.plan_collective(
+        "all_gather", nbytes=1 << 24, n_nodes=4, n_segments=5, depth=3
+    )
+    assert (p.n_segments, p.depth) == (5, 3)
+
+
+def test_pinned_segments_force_the_ring_algorithm():
+    # a caller asking for segments is asking for the segmented ring, even
+    # at payload sizes where the latency tier would otherwise win
+    p = sched.plan_collective(
+        "all_reduce", nbytes=32, n_nodes=4, n_segments=2, depth=2
+    )
+    assert p.algorithm == "ring"
+    assert (p.n_segments, p.depth) == (2, 2)
+    b = sched.plan_collective("broadcast", nbytes=32, n_nodes=4, depth=2)
+    assert b.algorithm == "ring"
+
+
+def test_single_node_plan_is_free():
+    p = sched.plan_collective("all_reduce", nbytes=1 << 20, n_nodes=1)
+    assert p.est_us == 0.0
+
+
+def test_plan_describe_names_algorithm_and_size():
+    p = sched.plan_collective("all_reduce", nbytes=4096, n_nodes=8)
+    s = p.describe()
+    assert p.algorithm in s and "4096B" in s
+
+
+def test_plan_p2p_segments_large_boundary():
+    small = sched.plan_p2p(nbytes=4 << 10)
+    large = sched.plan_p2p(nbytes=8 << 20)
+    assert small.n_segments == 1
+    assert large.n_segments > 1
+
+
+def test_unknown_op_rejected():
+    with pytest.raises(ValueError):
+        sched.plan_collective("scan", nbytes=1, n_nodes=2)
+
+
+# --------------------------------------------------------------------------- #
+# cost model
+# --------------------------------------------------------------------------- #
+def test_load_costs_roundtrip(tmp_path):
+    path = tmp_path / "BENCH_gas.json"
+    path.write_text(json.dumps({
+        "engine_costs": {
+            "xla": {"alpha_us": 7.0, "beta_us_per_kib": 0.5,
+                    "gamma_us_per_kib": 0.25},
+        }
+    }))
+    costs = sched.load_costs(str(path))
+    assert costs["xla"].alpha_us == 7.0
+    assert "gascore" in costs  # defaults retained
+
+
+def test_load_costs_missing_file_falls_back(tmp_path):
+    costs = sched.load_costs(str(tmp_path / "nope.json"))
+    assert costs == sched.DEFAULT_COSTS
+
+
+def test_engine_map_plans_against_worst_member():
+    m = EngineMap("node", ("xla", "gascore", "xla", "gascore"))
+    c = sched.cost_of(m)
+    cx, cg = sched.DEFAULT_COSTS["xla"], sched.DEFAULT_COSTS["gascore"]
+    assert c.alpha_us == max(cx.alpha_us, cg.alpha_us)
+
+
+# --------------------------------------------------------------------------- #
+# heterogeneous node map construction
+# --------------------------------------------------------------------------- #
+def test_parse_backend_spec_tiles_patterns():
+    assert parse_backend_spec("xla", 4) == ("xla",) * 4
+    assert parse_backend_spec("xla,gascore", 4) == (
+        "xla", "gascore", "xla", "gascore"
+    )
+    assert parse_backend_spec(["gascore", "xla"], 2) == ("gascore", "xla")
+    with pytest.raises(ValueError):
+        parse_backend_spec("xla,gascore,xla", 4)  # does not tile
+    with pytest.raises(ValueError):
+        parse_backend_spec("", 4)
+
+
+def test_make_engine_returns_map_only_when_mixed():
+    assert isinstance(make_engine("xla", "node", 4), XlaEngine)
+    assert isinstance(make_engine("gascore,gascore", "node", 4), GascoreEngine)
+    m = make_engine("xla,gascore", "node", 4)
+    assert isinstance(m, EngineMap)
+    assert m.is_heterogeneous
+    assert m.backend_of(0) == "xla" and m.backend_of(1) == "gascore"
+
+
+def test_engine_map_capabilities_are_conjunction():
+    mixed = EngineMap("node", ("xla", "gascore"))
+    soft = EngineMap("node", ("xla", "xla"))
+    assert not mixed.can_permute_partial  # gascore is bijection-only
+    assert soft.can_permute_partial
+
+
+def test_node_backends_patterns():
+    from repro.launch.mesh import node_backends
+
+    assert node_backends(4) == ("xla",) * 4
+    assert node_backends(4, pattern="alternating") == (
+        "xla", "gascore", "xla", "gascore"
+    )
+    assert node_backends(4, pattern="split") == (
+        "xla", "xla", "gascore", "gascore"
+    )
+    assert node_backends(4, hw_ranks=[0]) == (
+        "gascore", "xla", "xla", "xla"
+    )
+    with pytest.raises(ValueError):
+        node_backends(4, hw_ranks=[0], pattern="split")
+    with pytest.raises(ValueError):
+        node_backends(4, pattern="zebra")
+
+
+# --------------------------------------------------------------------------- #
+# Pending / batch waits (Extended API engine half)
+# --------------------------------------------------------------------------- #
+def test_pending_double_wait_names_op():
+    p = Pending(jnp.ones(3), op="shift(k=2)")
+    p.wait()
+    with pytest.raises(AlreadyWaitedError, match=r"shift\(k=2\)"):
+        p.wait()
+
+
+def test_wait_all_rejects_stale_handle_before_draining():
+    p1 = Pending(jnp.ones(2), op="shift(k=1)")
+    p2 = Pending(jnp.ones(2), op="permute")
+    p1.wait()
+    with pytest.raises(AlreadyWaitedError, match=r"#0 \(shift\(k=1\)\)"):
+        wait_all([p1, p2])
+    assert not p2.waited  # batch left intact, not half-drained
+    got = wait_all([p2])
+    assert len(got) == 1
+
+
+def test_extended_handle_error_is_same_type():
+    from repro.core import extended
+
+    h = extended.GetHandle(jnp.zeros(1))
+    h.complete()
+    with pytest.raises(AlreadyWaitedError, match="get"):
+        h.complete()
+
+
+# --------------------------------------------------------------------------- #
+# segment bounds
+# --------------------------------------------------------------------------- #
+def test_segment_bounds_partition_exactly():
+    for m in (1, 2, 7, 16, 33):
+        for g in (1, 2, 3, 8, 64):
+            bounds = collectives.segment_bounds(m, g)
+            assert bounds[0][0] == 0 and bounds[-1][1] == m
+            for (lo, hi), (lo2, _) in zip(bounds, bounds[1:]):
+                assert hi == lo2 and hi > lo
+            assert len(bounds) == min(g, m)
+            sizes = [hi - lo for lo, hi in bounds]
+            assert max(sizes) - min(sizes) <= 1
+
+
+# --------------------------------------------------------------------------- #
+# planned execution through the lockstep simulator (single device)
+# --------------------------------------------------------------------------- #
+def test_sched_all_reduce_dispatch_matches_sum():
+    n = 4
+    xs = [jnp.asarray(np.arange(8) + 10 * r, jnp.int32) for r in range(n)]
+    want = np.sum([np.asarray(x) for x in xs], axis=0)
+    # small payload on pow2 sim engine -> recursive doubling path
+    outs = run_spmd(lambda e: sched.all_reduce(e, xs[e.rank]), n)
+    for o in outs:
+        np.testing.assert_array_equal(np.asarray(o), want)
+    # pinned segmented-ring path (pins force the ring algorithm)
+    ring_plan = sched.plan_collective(
+        "all_reduce", nbytes=32, n_nodes=n, n_segments=2, depth=2
+    )
+    assert ring_plan.algorithm == "ring"
+    outs = run_spmd(lambda e: sched.all_reduce(e, xs[e.rank], plan=ring_plan), n)
+    for o in outs:
+        np.testing.assert_array_equal(np.asarray(o), want)
+
+
+def test_sched_broadcast_tree_path():
+    n = 8
+    xs = [jnp.full((5,), r, jnp.int32) for r in range(n)]
+    outs = run_spmd(lambda e: sched.broadcast(e, xs[e.rank], root=3), n)
+    for o in outs:
+        np.testing.assert_array_equal(np.asarray(o), 3)
