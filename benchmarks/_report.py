@@ -1,0 +1,42 @@
+"""Shared CSV-row + JSON-artifact reporting for the bench scripts.
+
+``gas_microbench.py`` and ``train_serve_bench.py`` emit the same shape:
+one ``name,value[,derived]`` CSV row per measurement on stdout plus a
+record in a machine-readable artifact (``BENCH_gas.json`` /
+``BENCH_serve.json``) that CI uploads and ``sched.load_costs`` & friends
+consume.  Keeping the writer here keeps the two artifact schemas from
+forking.
+"""
+import json
+
+
+def new_result() -> dict:
+    return {"schema": 1, "rows": []}
+
+
+def make_report(result: dict):
+    """Bind a ``report(name, value, derived="", unit="us", **extra)``
+    function to ``result``.
+
+    ``unit`` keys the JSON field ("us" for timings, "x" for ratios,
+    "us_per_kib" for slopes, ...) so artifact consumers never mix units.
+    """
+
+    def report(name: str, value: float, derived: str = "", unit: str = "us",
+               **extra) -> None:
+        digits = 1 if unit == "us" else 3
+        text = f"{name},{value:.{digits}f}"
+        print(f"{text},{derived}" if derived else text)
+        row = {"name": name, unit: round(float(value), digits)}
+        if derived:
+            row["derived"] = derived
+        row.update(extra)
+        result["rows"].append(row)
+
+    return report
+
+
+def write_artifact(result: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")

@@ -20,7 +20,6 @@ if __name__ == "__main__":
 
 import argparse
 import functools
-import json
 import time
 
 import jax
@@ -29,23 +28,10 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 
-RESULT: dict = {"schema": 1, "rows": []}
+from _report import make_report, new_result, write_artifact
 
-
-def report(name: str, value: float, derived: str = "", unit: str = "us",
-           **extra) -> None:
-    """One CSV row on stdout + one record in the JSON artifact.
-
-    ``unit`` keys the JSON field ("us" for timings, "x" for ratios,
-    "us_per_kib" for slopes) so artifact consumers never mix units."""
-    digits = 1 if unit == "us" else 3
-    text = f"{name},{value:.{digits}f}"
-    print(f"{text},{derived}" if derived else text)
-    row = {"name": name, unit: round(float(value), digits)}
-    if derived:
-        row["derived"] = derived
-    row.update(extra)
-    RESULT["rows"].append(row)
+RESULT = new_result()
+report = make_report(RESULT)
 
 
 def timeit(fn, *args, iters=20, warmup=3):
@@ -156,8 +142,6 @@ def main(json_path: str | None = None) -> None:
                bytes_per_sec=round(M * 4 / (us * 1e-6), 1))
 
     # ---- int8 EF compressed ring vs f32 ring ------------------------------ #
-    err = jnp.zeros((M,), jnp.float32)
-
     def comp_ar(xl):
         eng = make_engine("xla", "node", N)
         red, _ = compression.compressed_ring_all_reduce(
@@ -404,9 +388,7 @@ def main(json_path: str | None = None) -> None:
            unit="us_per_kib")
 
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(RESULT, f, indent=2, sort_keys=True)
-        print(f"wrote {json_path}")
+        write_artifact(RESULT, json_path)
 
     print("GAS_BENCH_DONE")
 

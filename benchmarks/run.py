@@ -43,7 +43,7 @@ def main() -> None:
     # (d) compute kernels: oracle timings + Pallas parity (1 device)
     _sub("kernel_bench.py", devices=1)
     # end-to-end: train-step throughput + serving decode (1 device)
-    _sub("train_serve_bench.py", devices=1)
+    _sub("train_serve_bench.py", devices=4)  # 4: disaggregated serve section
 
 
 if __name__ == "__main__":

@@ -1,13 +1,36 @@
-"""End-to-end benchmarks: train-step throughput + decode tokens/s
-(single device, smoke configs).  CSV: name,us_per_call,derived."""
+"""End-to-end benchmarks: train-step throughput + decode tokens/s +
+disaggregated serving (smoke configs).
+
+Prints ``name,us_per_call,derived`` CSV rows; with ``--json PATH``
+(default ``BENCH_serve.json`` when the flag is given bare) it also writes
+a machine-readable artifact: serve throughput, p50/p99 request latency,
+TTFT, and the KV-transfer goodput (bytes/sec) of the disaggregated
+cluster — the serving-side numbers CI tracks next to ``BENCH_gas``.
+
+The disaggregated section needs several host devices, so the device count
+is forced before the first JAX import (like gas_microbench).
+"""
+import os
+
+if __name__ == "__main__":
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=4"
+    )
+
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from _report import make_report, new_result, write_artifact
 
-def main() -> None:
+RESULT = new_result()
+report = make_report(RESULT)
+
+
+def main(json_path: str | None = None) -> None:
     from repro.configs.registry import SMOKE
     from repro.data.synthetic import SyntheticLM
     from repro.models.build import build_model
@@ -35,9 +58,10 @@ def main() -> None:
         jax.block_until_ready(m["loss"])
         us = (time.perf_counter() - t0) / iters * 1e6
         tok_s = B * S / (us * 1e-6)
-        print(f"train_step_{arch},{us:.0f},{tok_s:.0f}tok/s")
+        report(f"train_step_{arch}", us, f"{tok_s:.0f}tok/s",
+               op="train_step", arch=arch, tok_per_s=round(tok_s, 1))
 
-    # decode throughput
+    # ---- colocated decode throughput (continuous batching) --------------- #
     from repro.launch.serve import Request, Server
 
     cfg = SMOKE["qwen3-4b"]
@@ -51,11 +75,57 @@ def main() -> None:
                               max_new=16))
     stats = server.run_until_drained()
     us = stats["wall_s"] / max(stats["decoded_tokens"], 1) * 1e6
-    print(f"serve_decode_qwen3,{us:.0f},{stats['tok_per_s']:.1f}tok/s")
-    print(f"serve_p50_ttft,{stats['p50_ttft_s'] * 1e6:.0f},"
-          f"{stats['requests']}req")
+    report("serve_decode_qwen3", us, f"{stats['tok_per_s']:.1f}tok/s",
+           op="serve_decode", tok_per_s=round(stats["tok_per_s"], 1),
+           p50_latency_s=round(stats["p50_latency_s"], 4))
+    report("serve_p50_ttft", stats["p50_ttft_s"] * 1e6,
+           f"{stats['requests']}req", op="serve_ttft",
+           requests=stats["requests"])
+
+    # ---- disaggregated serving: prefill pool -> KV put -> decode pool ----- #
+    # (only when the forced host device count allows >= 2 ranks)
+    if jax.device_count() >= 4:
+        from repro.serving.disagg import DisaggCluster
+
+        cluster = DisaggCluster(
+            model, ctx, params, n_prefill=2, n_decode=2,
+            decode_batch=4, cache_len=64,
+        )
+        rng = np.random.default_rng(1)
+        for rid in range(12):
+            cluster.submit(Request(
+                rid=rid, prompt=rng.integers(0, cfg.vocab, 16).tolist(),
+                max_new=12,
+            ))
+        d = cluster.run_until_drained()
+        us = d["wall_s"] / max(d["decoded_tokens"], 1) * 1e6
+        report("serve_disagg_decode", us, f"{d['tok_per_s']:.1f}tok/s",
+               op="serve_disagg", tok_per_s=round(d["tok_per_s"], 1),
+               requests=d["requests"],
+               p50_latency_s=round(d["p50_latency_s"], 4),
+               p99_latency_s=round(d["p99_latency_s"], 4),
+               p50_ttft_s=round(d["p50_ttft_s"], 4))
+        report("serve_disagg_kv_goodput", d["kv_bytes_per_s"] / 1e6,
+               f"{d['kv_transfers']}x{d['kv_block_bytes']}B", unit="mb_s",
+               op="serve_disagg_kv",
+               kv_bytes_per_sec=round(d["kv_bytes_per_s"], 1),
+               kv_transfers=d["kv_transfers"],
+               kv_block_bytes=d["kv_block_bytes"],
+               kv_plan=d["kv_plan"], acked=d["kv_acked"])
+        assert d["kv_acked"] == d["kv_transfers"]
+    else:
+        print("serve_disagg skipped: needs >= 4 host devices")
+
+    if json_path:
+        write_artifact(RESULT, json_path)
     print("TRAIN_SERVE_BENCH_DONE")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--json", nargs="?", const="BENCH_serve.json", default=None,
+        metavar="PATH",
+        help="write the machine-readable artifact (default: BENCH_serve.json)",
+    )
+    main(json_path=ap.parse_args().json)

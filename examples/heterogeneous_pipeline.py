@@ -23,7 +23,6 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import gasnet
-from repro.core.engine import make_engine
 
 N = 4
 mesh = jax.make_mesh((N,), ("node",))

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import am, collectives, gasnet
+from repro.core import collectives, gasnet
 
 N = 8
 mesh = jax.make_mesh((N,), ("node",))

@@ -29,7 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import ckpt
 from repro.configs.registry import SMOKE
-from repro.core import collectives, sched
+from repro.core import sched
 from repro.core.engine import make_engine
 from repro.data.synthetic import SyntheticLM
 from repro.models.build import build_model

@@ -26,6 +26,16 @@ Message categories follow GASNet:
   (``args[0]``); the built-in :func:`long_write_handler` reproduces the
   GAScore remote-DMA write.
 
+**Request/reply** (GASNet Core rule: every AM is a *request* whose handler
+may issue exactly one *reply* back to the requester, and reply handlers may
+not reply again).  A handler registered with ``replies=True`` returns
+``(state, AMReply)``; :func:`deliver_with_replies` collects the replies of
+all landed requests into a second :class:`AMBatch` addressed at the sender
+tokens, and :func:`request_reply` routes that batch in a second
+:func:`route` hop and delivers it — the two-hop schedule is static, so the
+whole round trip traces under ``jit`` + ``shard_map``.  Build replies with
+:func:`reply_short` / :func:`reply_medium` (or :func:`no_reply` to decline).
+
 Everything here is pure-functional and shape-static, so it traces/lowers
 under ``jit`` + ``shard_map`` and is property-testable with hypothesis.
 """
@@ -40,12 +50,18 @@ from jax import lax
 
 __all__ = [
     "AMBatch",
+    "AMReply",
     "HandlerTable",
     "empty_batch",
     "push",
     "build_send_buffer",
     "route",
     "deliver",
+    "deliver_with_replies",
+    "request_reply",
+    "no_reply",
+    "reply_short",
+    "reply_medium",
     "long_write_handler",
 ]
 
@@ -63,24 +79,32 @@ class HandlerTable:
     ``payload`` is a flat ``(payload_size,)`` vector and ``args`` a
     ``(MAX_ARGS,)`` int32 vector.  Handlers must be pure and return a pytree
     of identical structure (they are branches of one ``lax.switch``).
+
+    A handler registered with ``replies=True`` is a GASNet *request*
+    handler: it returns ``(state, AMReply)`` and its reply is routed back
+    to the requester by :func:`request_reply`.  Reply handlers themselves
+    must be plain (``replies=False``) — GASNet forbids replying to a reply,
+    and :func:`request_reply` enforces this by discarding nested replies.
     """
 
     def __init__(self) -> None:
         self._names: List[str] = []
         self._fns: List[Callable] = []
+        self._replies: List[bool] = []
 
-    def register(self, name: str, fn: Callable) -> int:
+    def register(self, name: str, fn: Callable, replies: bool = False) -> int:
         if name in self._names:
             raise ValueError(f"handler {name!r} already registered")
         self._names.append(name)
         self._fns.append(fn)
+        self._replies.append(bool(replies))
         return len(self._names) - 1
 
-    def handler(self, name: str) -> Callable:
+    def handler(self, name: str, replies: bool = False) -> Callable:
         """Decorator form of :meth:`register`."""
 
         def deco(fn: Callable) -> Callable:
-            self.register(name, fn)
+            self.register(name, fn, replies=replies)
             return fn
 
         return deco
@@ -88,9 +112,20 @@ class HandlerTable:
     def id_of(self, name: str) -> int:
         return self._names.index(name)
 
+    def replies_of(self, name: str) -> bool:
+        return self._replies[self.id_of(name)]
+
     @property
     def fns(self) -> Tuple[Callable, ...]:
         return tuple(self._fns)
+
+    @property
+    def reply_flags(self) -> Tuple[bool, ...]:
+        return tuple(self._replies)
+
+    @property
+    def has_replies(self) -> bool:
+        return any(self._replies)
 
     def __len__(self) -> int:
         return len(self._names)
@@ -135,6 +170,73 @@ jax.tree_util.register_pytree_node(
 )
 
 
+@dataclasses.dataclass
+class AMReply:
+    """Shape-static reply descriptor returned by a request handler.
+
+    Attributes (payload width Pw of the delivering batch):
+      send:    ()  bool    whether a reply is actually issued.
+      handler: ()  int32   reply handler id (must be ``replies=False``).
+      args:    (MAX_ARGS,) int32 reply handler arguments (AMReplyShort).
+      payload: (Pw,)       reply payload (AMReplyMedium; zeros for Short).
+    """
+
+    send: jax.Array
+    handler: jax.Array
+    args: jax.Array
+    payload: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    AMReply,
+    lambda r: ((r.send, r.handler, r.args, r.payload), None),
+    lambda _, xs: AMReply(*xs),
+)
+
+
+def _arg_vec(args: Sequence[Any]) -> jax.Array:
+    vec = jnp.zeros((MAX_ARGS,), jnp.int32)
+    for k, a in enumerate(args):
+        vec = vec.at[k].set(jnp.asarray(a, jnp.int32))
+    return vec
+
+
+def no_reply(payload_width: int, dtype: Any = jnp.float32) -> AMReply:
+    """The declined reply (the request handler stays one-way)."""
+    return AMReply(
+        send=jnp.zeros((), bool),
+        handler=jnp.zeros((), jnp.int32),
+        args=jnp.zeros((MAX_ARGS,), jnp.int32),
+        payload=jnp.zeros((payload_width,), dtype),
+    )
+
+
+def reply_short(
+    handler: int, args: Sequence[Any] = (), *, like: jax.Array
+) -> AMReply:
+    """AMReplyShort: handler id + args, no payload.  ``like`` is the request
+    payload (or any ``(Pw,)`` vector of the batch dtype) fixing the reply
+    payload shape — all ``lax.switch`` branches must agree on it."""
+    return AMReply(
+        send=jnp.ones((), bool),
+        handler=jnp.asarray(handler, jnp.int32),
+        args=_arg_vec(args),
+        payload=jnp.zeros_like(like),
+    )
+
+
+def reply_medium(
+    handler: int, payload: jax.Array, args: Sequence[Any] = ()
+) -> AMReply:
+    """AMReplyMedium: payload travels back to the requester."""
+    return AMReply(
+        send=jnp.ones((), bool),
+        handler=jnp.asarray(handler, jnp.int32),
+        args=_arg_vec(args),
+        payload=payload,
+    )
+
+
 def empty_batch(capacity: int, payload_width: int, dtype: Any = jnp.float32) -> AMBatch:
     return AMBatch(
         dest=jnp.zeros((capacity,), jnp.int32),
@@ -152,15 +254,20 @@ def push(
     handler: int,
     args: Sequence[Any] = (),
     payload: jax.Array | None = None,
+    pred: jax.Array | bool | None = None,
 ) -> AMBatch:
     """Enqueue one message (functional).  Overflow beyond capacity is dropped
     silently here and surfaced by :func:`build_send_buffer` as a count —
-    matching GASNet back-pressure semantics in a shape-static world."""
+    matching GASNet back-pressure semantics in a shape-static world.
+
+    ``pred`` gates the enqueue (shape-static conditional send): under SPMD
+    every rank traces the same ``push``, and a rank with nothing to say
+    passes ``pred=False`` — the slot is simply not occupied."""
     i = jnp.minimum(batch.count, batch.capacity - 1)
     in_range = batch.count < batch.capacity
-    arg_vec = jnp.zeros((MAX_ARGS,), jnp.int32)
-    for k, a in enumerate(args):
-        arg_vec = arg_vec.at[k].set(jnp.asarray(a, jnp.int32))
+    if pred is not None:
+        in_range = in_range & jnp.asarray(pred, bool)
+    arg_vec = _arg_vec(args)
     if payload is None:
         payload = jnp.zeros((batch.payload_width,), batch.payload.dtype)
     payload = payload.astype(batch.payload.dtype).reshape(-1)
@@ -285,33 +392,111 @@ def route(
 # --------------------------------------------------------------------------- #
 # Delivery (asynchronous handler invocation, fused)
 # --------------------------------------------------------------------------- #
-def deliver(state: Any, recv: AMBatch, handlers: HandlerTable) -> Any:
-    """Apply each landed message's handler to the local state, in slot order.
+def deliver_with_replies(
+    state: Any, recv: AMBatch, handlers: HandlerTable
+) -> Tuple[Any, AMBatch]:
+    """Apply each landed message's handler to the local state, in slot order,
+    and collect the replies of ``replies=True`` handlers.
 
     Exactly-once: every valid slot fires its handler exactly once; invalid
     slots are skipped.  Implemented as a ``lax.scan`` over slots with a
     ``lax.switch`` over handler ids — sequential like the paper's handler
     queue, which also serializes handler execution per node.
+
+    Returns ``(state, reply_batch)``: slot s of the reply batch is the
+    reply (if any) of the request in slot s of ``recv``, addressed at that
+    request's sender token — ready for a second :func:`route` hop.
     """
     fns = handlers.fns
+    flags = handlers.reply_flags
     if not fns:
         raise ValueError("no handlers registered")
+    pw = recv.payload_width
+    pdtype = recv.payload.dtype
 
     def body(st, slot):
         valid, hid, args, payload, token = slot
+        del token  # reply routing uses recv.dest directly
 
         def fire(s):
-            branches = [
-                (lambda f: (lambda ss: f(ss, payload, args)))(f) for f in fns
-            ]
+            branches = []
+            for f, rep in zip(fns, flags):
+                if rep:
+                    branches.append(
+                        (lambda f: (lambda ss: f(ss, payload, args)))(f)
+                    )
+                else:
+                    branches.append(
+                        (lambda f: (
+                            lambda ss: (f(ss, payload, args),
+                                        no_reply(pw, pdtype))
+                        ))(f)
+                    )
             return lax.switch(jnp.clip(hid, 0, len(fns) - 1), branches, s)
 
-        st = lax.cond(valid, fire, lambda s: s, st)
-        return st, None
+        st, rep = lax.cond(
+            valid, fire, lambda s: (s, no_reply(pw, pdtype)), st
+        )
+        return st, rep
 
     slots = (recv.valid, recv.handler, recv.args, recv.payload, recv.dest)
-    state, _ = lax.scan(body, state, slots)
+    state, reps = lax.scan(body, state, slots)
+    valid = recv.valid & reps.send
+    reply = AMBatch(
+        dest=recv.dest,  # the sender token of each request
+        handler=reps.handler,
+        args=reps.args,
+        payload=reps.payload,
+        valid=valid,
+        count=jnp.sum(valid).astype(jnp.int32),
+    )
+    return state, reply
+
+
+def deliver(state: Any, recv: AMBatch, handlers: HandlerTable) -> Any:
+    """One-way delivery (see :func:`deliver_with_replies`); replies of any
+    ``replies=True`` handlers are discarded — this is the reply-hop rule
+    (a reply handler may not reply again)."""
+    state, _ = deliver_with_replies(state, recv, handlers)
     return state
+
+
+def request_reply(
+    state: Any,
+    batch: AMBatch,
+    handlers: HandlerTable,
+    *,
+    axis: str,
+    n_nodes: int,
+    per_peer_capacity: int,
+    all_to_all_fn: Callable[[jax.Array], jax.Array] | None = None,
+    engine=None,
+) -> Tuple[Any, jax.Array]:
+    """The full GASNet request/reply cycle, statically scheduled:
+
+    1. :func:`route` the request batch (hop 1) and deliver it, collecting
+       the ``AMReply`` each request handler returns;
+    2. :func:`route` the reply batch back (hop 2) and deliver it one-way
+       (nested replies are discarded — GASNet's no-reply-to-a-reply rule).
+
+    The reply hop reuses the same per-peer capacity: a node holds at most
+    ``per_peer_capacity`` requests per source, hence at most that many
+    replies per destination, so hop 2 can never drop for capacity.
+    Returns ``(state, dropped)`` with the hop-1 + hop-2 drop count.
+    """
+    recv, dropped = route(
+        batch, axis=axis, n_nodes=n_nodes,
+        per_peer_capacity=per_peer_capacity,
+        all_to_all_fn=all_to_all_fn, engine=engine,
+    )
+    state, replies = deliver_with_replies(state, recv, handlers)
+    recv2, dropped2 = route(
+        replies, axis=axis, n_nodes=n_nodes,
+        per_peer_capacity=per_peer_capacity,
+        all_to_all_fn=all_to_all_fn, engine=engine,
+    )
+    state = deliver(state, recv2, handlers)
+    return state, dropped + dropped2
 
 
 def long_write_handler(seg_key: str) -> Callable:

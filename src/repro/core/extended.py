@@ -40,7 +40,7 @@ never cross a ``jit`` boundary.  Completion order for ``sync_all`` is FIFO
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +48,13 @@ from jax import lax
 
 from repro.core.engine import AlreadyWaitedError
 
-__all__ = ["Handle", "PutHandle", "GetHandle", "AlreadyWaitedError"]
+__all__ = [
+    "Handle",
+    "PutHandle",
+    "GetHandle",
+    "AckHandle",
+    "AlreadyWaitedError",
+]
 
 
 class Handle:
@@ -142,3 +148,38 @@ class GetHandle(Handle):
 
     def _complete(self) -> jax.Array:
         return self._reply
+
+
+class AckHandle(Handle):
+    """A pending remote acknowledgment (the handle half of an AM
+    request/reply round trip — ``Node.am_call``).
+
+    At initiation the request is only *queued*; the acknowledgment value
+    does not exist until ``node.am_flush`` has routed the request, run the
+    remote handler, and routed its ``AMReply`` back.  The flush resolves
+    the handle by applying ``fetch`` to the post-reply handler state;
+    ``node.sync(handle)`` then returns that value.  Syncing before the
+    flush is an ordering error and raises."""
+
+    op = "ack"
+
+    def __init__(self, fetch: Callable[[Any], Any]):
+        super().__init__()
+        self._fetch = fetch
+        self._value: Any = None
+        self._resolved = False
+
+    @property
+    def resolved(self) -> bool:
+        return self._resolved
+
+    def resolve(self, state: Any) -> None:
+        self._value = self._fetch(state)
+        self._resolved = True
+
+    def _complete(self) -> Any:
+        if not self._resolved:
+            raise RuntimeError(
+                "ack handle synced before am_flush delivered the reply"
+            )
+        return self._value

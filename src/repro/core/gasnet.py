@@ -15,7 +15,11 @@ gasnet_get               ``node.get(seg, frm=..., index=..., size=...)``
 gasnet_AMRequestShort    ``node.am_short(dest, handler, args)``
 gasnet_AMRequestMedium   ``node.am_medium(dest, handler, payload, args)``
 gasnet_AMRequestLong     ``node.am_long(dest, handler, payload, dst_index)``
-(poll + handler run)     ``node.am_flush(state)``
+gasnet_AMReplyShort      handler returns ``am.reply_short(...)`` (see below)
+gasnet_AMReplyMedium     handler returns ``am.reply_medium(...)``
+(request expecting ack)  ``node.am_call(dest, handler, ..., ack=fetch)``
+(poll + handler run)     ``node.am_flush(state)`` — two hops when the
+                         table has ``replies=True`` handlers
 gasnet_barrier           ``node.barrier()``
 ======================  ===================================================
 
@@ -112,6 +116,7 @@ class Node:
         self._am_per_peer = am_per_peer_capacity
         self._batch: Optional[am_lib.AMBatch] = None
         self._outstanding: list[extended.Handle] = []
+        self._pending_acks: list[extended.AckHandle] = []
         # id(seg) -> latest synced local partition, so several outstanding
         # puts against the same segment object chain instead of each
         # applying to the stale snapshot taken at initiation.  Pinning the
@@ -165,6 +170,7 @@ class Node:
         *,
         to: Pattern = Shift(1),
         index: jax.Array | int = 0,
+        pred: jax.Array | bool | None = None,
     ) -> jax.Array:
         """One-sided remote write: ``data`` lands in the target node's
         partition of ``seg`` at flat offset ``index`` (sender-specified,
@@ -176,7 +182,7 @@ class Node:
         Blocking = ``put_nb`` + immediate ``sync`` (GASNet defines
         ``gasnet_put`` exactly this way).
         """
-        return self.sync(self.put_nb(seg, data, to=to, index=index))
+        return self.sync(self.put_nb(seg, data, to=to, index=index, pred=pred))
 
     def get(
         self,
@@ -205,6 +211,7 @@ class Node:
         *,
         to: Pattern = Shift(1),
         index: jax.Array | int = 0,
+        pred: jax.Array | bool | None = None,
     ) -> extended.PutHandle:
         """Initiate a non-blocking one-sided put (``gasnet_put_nb``).
 
@@ -212,13 +219,21 @@ class Node:
         (transport initiation); the returned handle lands them in the
         segment when synced: ``seg = node.sync(h)``.  Compute issued
         between the two overlaps with the transfer.
+
+        ``pred`` gates the write (SPMD conditional put): every rank traces
+        the same transfer, but a rank passing ``pred=False`` ships a
+        cleared arrival flag, so the receiver keeps its current contents —
+        the static-schedule analogue of simply not issuing the put.
         """
         local = self.local(seg)
         payload = data.reshape(-1).astype(local.dtype)
         idx = jnp.asarray(index, jnp.int32)
+        flag = (
+            jnp.ones((), bool) if pred is None else jnp.asarray(pred, bool)
+        )
         moved = self._move(payload, to)
         midx = self._move(idx, to)
-        received = self._move(jnp.ones((), bool), to)
+        received = self._move(flag, to)
         self._seg_pins.append(seg)
         h = extended.PutHandle(
             local, moved, midx, received,
@@ -315,10 +330,16 @@ class Node:
             )
         return self._batch
 
-    def am_short(self, dest: jax.Array, handler: str, args: Sequence[Any] = ()):
+    def am_short(
+        self,
+        dest: jax.Array,
+        handler: str,
+        args: Sequence[Any] = (),
+        pred: jax.Array | bool | None = None,
+    ):
         b = self._ensure_batch()
         self._batch = am_lib.push(
-            b, dest, self.handlers.id_of(handler), args=args
+            b, dest, self.handlers.id_of(handler), args=args, pred=pred
         )
 
     def am_medium(
@@ -327,10 +348,12 @@ class Node:
         handler: str,
         payload: jax.Array,
         args: Sequence[Any] = (),
+        pred: jax.Array | bool | None = None,
     ):
         b = self._ensure_batch()
         self._batch = am_lib.push(
-            b, dest, self.handlers.id_of(handler), args=args, payload=payload
+            b, dest, self.handlers.id_of(handler), args=args, payload=payload,
+            pred=pred,
         )
 
     def am_long(
@@ -340,6 +363,7 @@ class Node:
         payload: jax.Array,
         dst_index: jax.Array | int,
         nelem: jax.Array | int = 0,
+        pred: jax.Array | bool | None = None,
     ):
         """AMLong: payload lands at ``dst_index`` (flat) of the handler's
         segment; handler convention is ``long_write_handler``-compatible
@@ -351,7 +375,41 @@ class Node:
             self.handlers.id_of(handler),
             args=(dst_index, nelem),
             payload=payload,
+            pred=pred,
         )
+
+    def am_call(
+        self,
+        dest: jax.Array,
+        handler: str,
+        payload: jax.Array | None = None,
+        args: Sequence[Any] = (),
+        pred: jax.Array | bool | None = None,
+        ack: Callable[[Any], Any] | None = None,
+    ) -> Optional[extended.AckHandle]:
+        """Queue a *request* to a ``replies=True`` handler (the GASNet
+        AMRequest whose handler will send an AMReply back here).
+
+        With ``ack`` (a pure ``state -> value`` fetch), returns an
+        :class:`~repro.core.extended.AckHandle` that the next
+        :meth:`am_flush` resolves against the post-reply state —
+        ``node.sync(h)`` then yields the acknowledgment value.
+        """
+        if not self.handlers.replies_of(handler):
+            raise ValueError(
+                f"am_call target {handler!r} is not a replying handler "
+                "(register it with replies=True)"
+            )
+        if payload is None:
+            self.am_short(dest, handler, args=args, pred=pred)
+        else:
+            self.am_medium(dest, handler, payload, args=args, pred=pred)
+        if ack is None:
+            return None
+        h = extended.AckHandle(ack)
+        self._pending_acks.append(h)
+        self._outstanding.append(h)
+        return h
 
     def am_flush(self, state: Any) -> Any:
         """Route all queued messages and run handlers at the receivers.
@@ -360,18 +418,33 @@ class Node:
         The router's all-to-all is plan-driven: ``repro.core.sched``
         chooses native vs direct-put exchange from the buffer size and
         this node's engine cost model (heterogeneous maps route over
-        their mixed puts)."""
+        their mixed puts).
+
+        When the handler table contains ``replies=True`` handlers the
+        flush is the full request/reply cycle — a second ``route`` hop
+        carries each handler's ``AMReply`` back to its requester and runs
+        the reply handlers — and any :class:`AckHandle` from
+        :meth:`am_call` is resolved against the post-reply state."""
         batch = self._ensure_batch()
-        recv, dropped = am_lib.route(
-            batch,
+        kw = dict(
             axis=self.engine.axis,
             n_nodes=self.n_nodes,
             per_peer_capacity=self._am_per_peer,
             engine=self.engine,
         )
+        if self.handlers.has_replies:
+            state, dropped = am_lib.request_reply(
+                state, batch, self.handlers, **kw
+            )
+        else:
+            recv, dropped = am_lib.route(batch, **kw)
+            state = am_lib.deliver(state, recv, self.handlers)
         self.dropped = self.dropped + dropped
         self._batch = None
-        return am_lib.deliver(state, recv, self.handlers)
+        for h in self._pending_acks:
+            h.resolve(state)
+        self._pending_acks = []
+        return state
 
 
 class Context:

@@ -34,8 +34,7 @@ second-minor a multiple of 8 (f32) / 16 (bf16) for full-speed DMAs — the
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

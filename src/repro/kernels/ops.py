@@ -10,7 +10,6 @@ On CPU the pallas path runs under TPU-interpret mode automatically; pass
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

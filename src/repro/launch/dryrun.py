@@ -32,8 +32,6 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import ARCHS, SHAPES, cell_runnable
 from repro.launch.mesh import make_production_mesh, mesh_axes

@@ -209,7 +209,6 @@ def _trip_from_backend_config(inst: Inst) -> Optional[int]:
     if not m:
         return None
     try:
-        cfgtxt = m.group(1)
         # backend_config JSON may contain nested braces; grab greedily
         start = inst.attrs.index("backend_config=") + len("backend_config=")
         depth = 0

@@ -27,6 +27,8 @@ __all__ = [
     "make_mesh",
     "mesh_axes",
     "node_backends",
+    "serve_roles",
+    "role_backends",
 ]
 
 
@@ -82,3 +84,42 @@ def node_backends(
     else:
         raise ValueError(f"unknown node-map pattern {pattern!r}")
     return tuple(hardware if r in hw else software for r in range(n_nodes))
+
+
+def serve_roles(n_prefill: int, n_decode: int) -> Tuple[str, ...]:
+    """Per-rank roles of a disaggregated serving ring: the first
+    ``n_prefill`` ranks are the prefill pool, the rest the decode pool.
+
+    The convention is load-bearing: `repro.serving.disagg` derives
+    dispatch targets, the KV handoff permutation, and segment slot
+    ownership from rank order alone, so every node agrees on it without
+    any exchange (the SPMD analogue of a static cluster map).
+    """
+    if n_prefill < 1 or n_decode < 1:
+        raise ValueError(
+            f"need at least 1 prefill and 1 decode rank, got "
+            f"{n_prefill}/{n_decode}"
+        )
+    return ("prefill",) * n_prefill + ("decode",) * n_decode
+
+
+def role_backends(
+    roles: Tuple[str, ...],
+    *,
+    prefill: str = "xla",
+    decode: str = "xla",
+) -> Tuple[str, ...]:
+    """Per-rank engine backends keyed by serving role.
+
+    The paper's split maps naturally onto disaggregation: prefill nodes
+    can stay software GASNet nodes (``"xla"``) while the decode pool —
+    whose KV installs are pure remote-DMA traffic — runs on hardware
+    nodes (``"gascore"``), or any other mix.  Feed the result to
+    ``make_engine`` / ``gasnet.Context(backend=...)`` to get an
+    ``EngineMap`` when the pools differ.
+    """
+    table = {"prefill": prefill, "decode": decode}
+    try:
+        return tuple(table[r] for r in roles)
+    except KeyError as e:
+        raise ValueError(f"unknown serving role {e.args[0]!r}") from None

@@ -1,4 +1,4 @@
-"""Batched serving driver: prefill/decode with continuous batching (lite).
+"""Role-based serving launcher: colocated or disaggregated prefill/decode.
 
 Request lifecycle: queued -> prefilled (KV cache slot assigned) -> decoding
 in the fixed-width decode batch -> finished (EOS or max tokens) -> slot
@@ -6,11 +6,20 @@ recycled for the next queued request.
 
 The decode step is one jit'd ``model.decode_step`` over the whole batch;
 per-row positions let rows be at different generation depths (continuous
-batching).  Prefill runs per-request (production would batch prefills and
-overlap them with decode on separate cores; the scheduler hook is where
-disaggregated prefill would hand the KV cache over the GAS layer — see
-examples/heterogeneous_pipeline.py for that transfer demonstrated with
-one-sided puts).
+batching).
+
+Roles (``--role``):
+
+- ``both`` (default) — the disaggregated cluster: a prefill pool and a
+  decode pool as distinct GASNet ranks (``launch.mesh.serve_roles``, each
+  pool optionally on its own engine via ``EngineMap``); finished KV caches
+  cross over the GAS layer with ``sched.plan_p2p``-planned segmented puts
+  and an AM request/reply control plane (``repro.serving.disagg``).
+  Needs >= 2 host devices (set ``XLA_FLAGS`` before JAX imports).
+- ``decode`` — the colocated path: one node prefills and decodes
+  (:class:`Server` continuous batching, unchanged).
+- ``prefill`` — the prefill pool alone: computes prefills and reports KV
+  blocks/s, the feeder-side capacity number.
 
 CPU-scale demo: ``python -m repro.launch.serve --arch qwen3-4b --smoke``.
 """
@@ -91,10 +100,30 @@ class Server:
             self.caches, caches_one,
         )
 
+    def admit_prefilled(
+        self, req: Request, caches_one, first_token: int, position: int
+    ) -> bool:
+        """Install an externally prefilled request (the disaggregated
+        handoff target: the KV cache arrived over the GAS layer, the
+        first token and position rode in the block header).  Returns
+        False when no decode row is free — the caller keeps the block
+        staged and retries next tick."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        if not req.out:
+            req.out.append(int(first_token))
+        if not req.t_first:
+            req.t_first = time.monotonic()
+        self.active[slot] = req
+        self.positions[slot] = position
+        self.last_token[slot, 0] = int(first_token)
+        self._write_row(caches_one, slot)
+        return True
+
     def _admit(self) -> None:
         while self.queue:
-            slot = self._free_slot()
-            if slot is None:
+            if self._free_slot() is None:
                 return
             req = self.queue.pop(0)
             toks = self.jnp.asarray(req.prompt, self.jnp.int32)[None]
@@ -102,12 +131,9 @@ class Server:
                 self.params, {"inputs": toks}
             )
             tok = int(np.argmax(np.asarray(logits)[0]))
-            req.out.append(tok)
-            req.t_first = time.monotonic()
-            self.active[slot] = req
-            self.positions[slot] = len(req.prompt)
-            self.last_token[slot, 0] = tok
-            self._write_row(caches_one, slot)
+            self.admit_prefilled(
+                req, caches_one, first_token=tok, position=len(req.prompt)
+            )
 
     def _retire(self, slot: int) -> None:
         req = self.active[slot]
@@ -166,12 +192,33 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--role", choices=("prefill", "decode", "both"),
+                    default="both",
+                    help="both = disaggregated cluster (prefill pool + "
+                         "decode pool over the GAS layer); decode = "
+                         "colocated continuous batching; prefill = "
+                         "prefill pool alone")
+    ap.add_argument("--n-prefill", type=int, default=1)
+    ap.add_argument("--n-decode", type=int, default=1)
+    ap.add_argument("--prefill-backend", default="xla",
+                    help="engine of the prefill pool (xla|gascore)")
+    ap.add_argument("--decode-backend", default="xla",
+                    help="engine of the decode pool (xla|gascore)")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--cache-len", type=int, default=64)
     args = ap.parse_args()
+
+    if args.role == "both":
+        import os
+
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            "--xla_force_host_platform_device_count="
+            f"{args.n_prefill + args.n_decode}",
+        )
 
     import jax
 
@@ -183,18 +230,54 @@ def main() -> None:
     model = build_model(cfg)
     ctx = RunCtx(mesh=None, remat="none")
     params, _ = model.init(ctx, jax.random.PRNGKey(0))
-    server = Server(model, ctx, params, args.batch, args.cache_len)
 
     rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        server.submit(
-            Request(
-                rid=rid,
-                prompt=rng.integers(0, cfg.vocab, size=args.prompt_len).tolist(),
-                max_new=args.max_new,
-            )
+    reqs = [
+        Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab, size=args.prompt_len).tolist(),
+            max_new=args.max_new,
         )
-    stats = server.run_until_drained()
+        for rid in range(args.requests)
+    ]
+
+    if args.role == "decode":
+        server = Server(model, ctx, params, args.batch, args.cache_len)
+        for req in reqs:
+            server.submit(req)
+        stats = server.run_until_drained()
+    elif args.role == "prefill":
+        prefill = jax.jit(
+            lambda p, b: model.prefill(p, ctx, b, cache_len=args.cache_len)
+        )
+        import jax.numpy as jnp
+
+        t0 = time.monotonic()
+        for req in reqs:
+            logits, _ = prefill(
+                params, {"inputs": jnp.asarray(req.prompt, jnp.int32)[None]}
+            )
+            jax.block_until_ready(logits)
+        dt = time.monotonic() - t0
+        stats = {
+            "requests": len(reqs),
+            "wall_s": dt,
+            "kv_blocks_per_s": len(reqs) / dt if dt else 0.0,
+        }
+    else:
+        from repro.serving.disagg import DisaggCluster
+
+        cluster = DisaggCluster(
+            model, ctx, params,
+            n_prefill=args.n_prefill, n_decode=args.n_decode,
+            decode_batch=args.batch, cache_len=args.cache_len,
+            prefill_backend=args.prefill_backend,
+            decode_backend=args.decode_backend,
+        )
+        for req in reqs:
+            cluster.submit(req)
+        stats = cluster.run_until_drained()
+
     for k, v in stats.items():
         print(f"{k}: {v}")
 

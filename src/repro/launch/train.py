@@ -15,7 +15,6 @@ Examples::
 """
 import argparse
 import os
-import sys
 
 
 def main() -> None:

@@ -5,9 +5,7 @@ against (no allocation — the shannon/kernels stand-in pattern).
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -140,7 +138,6 @@ class Model:
         caches: Any,
     ) -> Tuple[jax.Array, Any]:
         cfg = self.cfg
-        B = token.shape[0]
         pos = positions[:, None]
         x = T.embed(params["io"], cfg, ctx, token)
         x, caches = T.stack_apply(
@@ -202,6 +199,39 @@ class Model:
             )
         _, cache_struct = jax.eval_shape(
             lambda p, b: self.prefill(p, ctx_local(ctx), b, cache_len=S),
+            params_struct, pre_batch,
+        )
+        return cache_struct
+
+    def kv_block_struct(
+        self, ctx: RunCtx, prompt_len: int, cache_len: int, batch: int = 1
+    ) -> Any:
+        """Abstract per-request KV-cache pytree (an ``eval_shape`` of
+        :meth:`prefill`) — the *block layout* a disaggregated serving
+        cluster ships between prefill and decode nodes.
+
+        The shapes depend only on ``(cache_len, batch)`` — prefill pads
+        every cache to ``cache_len`` — so one layout covers all prompt
+        lengths and the GASNet segment slot size is static.
+        """
+        cfg = self.cfg
+        lctx = ctx_local(ctx)
+        params_struct = jax.eval_shape(
+            lambda k: self.init(lctx, k)[0], jax.random.PRNGKey(0)
+        )
+        pre_batch: Dict[str, Any] = {
+            "inputs": jax.ShapeDtypeStruct((batch, prompt_len), jnp.int32)
+        }
+        if cfg.n_enc_layers:
+            pre_batch["frames"] = jax.ShapeDtypeStruct(
+                (batch, prompt_len, cfg.d_model), cfg.dtype
+            )
+        elif cfg.cross_kv_len:
+            pre_batch["xkv"] = jax.ShapeDtypeStruct(
+                (batch, cfg.cross_kv_len, cfg.d_model), cfg.dtype
+            )
+        _, cache_struct = jax.eval_shape(
+            lambda p, b: self.prefill(p, lctx, b, cache_len=cache_len),
             params_struct, pre_batch,
         )
         return cache_struct

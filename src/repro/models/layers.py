@@ -22,20 +22,17 @@ at the *parallelism* level):
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
 from repro.models.common import ArchConfig
-from repro.parallel.ctx import RunCtx, shard, use_weight
+from repro.parallel.ctx import RunCtx, use_weight
 from repro.compat import shard_map
 
 Params = Dict[str, Any]
@@ -598,7 +595,6 @@ def apply_mamba(
     cache: Optional[Params] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     B, S, D = x.shape
-    Di = cfg.resolved_d_inner
     N = cfg.ssm_state
     R = cfg.resolved_dt_rank
     h = apply_norm(p["norm"], x, cfg.norm)

@@ -15,9 +15,6 @@ lowers ``serve_step`` against.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax

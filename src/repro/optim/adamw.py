@@ -7,7 +7,6 @@ GSPMD).  ``state_dtype`` lets the huge archs halve optimizer memory
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable, Optional, Tuple
 
 import jax

@@ -28,7 +28,6 @@ mesh uses S=2, M>=8 -> <= 11% bubble.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any, Callable, Optional
 

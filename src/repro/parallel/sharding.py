@@ -13,7 +13,7 @@ roofline table then shows the replication cost explicitly, e.g. arctic's
 from __future__ import annotations
 
 import math
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Sequence
 
 import jax
 from jax.sharding import NamedSharding

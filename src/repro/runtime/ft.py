@@ -22,7 +22,6 @@ Pieces:
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 

@@ -1,0 +1,25 @@
+"""Disaggregated serving over the GAS layer.
+
+- :mod:`repro.serving.kv` — the KV-cache *data plane*: bit-transparent
+  block flattening plus ``sched.plan_p2p``-planned segmented split-phase
+  puts between prefill and decode nodes.
+- :mod:`repro.serving.disagg` — the cluster: a prefill pool, a decode pool
+  running continuous batching unchanged, and an Active-Message
+  request/reply *control plane* (dispatch, install acks, completions).
+"""
+
+from repro.serving.kv import (
+    KVLayout,
+    handoff_permutation,
+    push_block,
+    segment_bounds,
+    sync_push,
+)
+
+__all__ = [
+    "KVLayout",
+    "handoff_permutation",
+    "push_block",
+    "segment_bounds",
+    "sync_push",
+]

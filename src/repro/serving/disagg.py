@@ -1,0 +1,438 @@
+"""Disaggregated prefill/decode serving over the GAS layer.
+
+The cluster is one GASNet job over a ``node`` mesh axis
+(``launch.mesh.serve_roles``): the first ``n_prefill`` ranks form the
+prefill pool, the rest the decode pool, each pool optionally on its own
+engine (``role_backends`` -> ``EngineMap`` — the paper's mixed
+software/hardware cluster, serving-shaped).  Two planes:
+
+- **Data plane** — a finished request's KV cache is flattened into one
+  carrier block (:class:`~repro.serving.kv.KVLayout`), published in the
+  prefill node's GASNet segment, and pushed into a staging slot of the
+  decode node's segment with ``sched.plan_p2p``-planned segmented
+  split-phase puts (:func:`~repro.serving.kv.push_block`).
+- **Control plane** — pure Active Messages: a ``kv_ready`` *request*
+  (AMShort: request id, slot, origin) rides with the data; the decode
+  node's handler records the slot in its inbox and returns an AMShort
+  *reply* acknowledging installation, which resolves the prefill node's
+  :class:`~repro.core.extended.AckHandle`; when decode finishes a request
+  a ``req_done`` AM notifies the origin prefill rank (completion plane).
+
+Every tick the host launches the (jitted, perm-cached) SPMD transfer
+program asynchronously, runs one continuous-batching decode step on every
+decode server while the transfer is in flight, then consumes the
+transfer's results — transfer/decode overlap in the split-phase style the
+Extended API exists for.
+
+All of this is single-process SPMD emulation (host devices as nodes),
+exactly like the testing suites; the GAS programs are the same ones a
+multi-host launch would run.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.launch import mesh as mesh_lib
+from repro.serving import kv as kv_lib
+
+
+class DisaggCluster:
+    """A role-based serving cluster: prefill pool + decode pool + AM
+    control plane, all over one GAS context.
+
+    ``prefill_backend`` / ``decode_backend`` name each pool's engine
+    (mixing them yields an ``EngineMap``).  ``n_slots`` is the number of
+    KV staging slots per decode node's segment; ``decode_batch`` the
+    continuous-batching width of each decode server.
+    """
+
+    HEADER = 2  # carrier elems prepended to each block: first_token, pos
+
+    def __init__(
+        self,
+        model: Any,
+        ctx: Any,
+        params: Any,
+        *,
+        n_prefill: int = 1,
+        n_decode: int = 1,
+        decode_batch: int = 4,
+        cache_len: int = 64,
+        n_slots: int = 2,
+        prefill_backend: str = "xla",
+        decode_backend: str = "xla",
+        interpret: bool = True,
+        node_axis: str = "node",
+        eos_id: int = -1,
+        costs: Optional[Dict[str, Any]] = None,
+    ):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import am, gasnet, sched
+        from repro.compat import shard_map
+        from repro.launch.serve import Server
+
+        self.jax, self.jnp = jax, jnp
+        self.gasnet = gasnet
+        self.shard_map = shard_map
+        self.model, self.ctx, self.params = model, ctx, params
+        self.n_prefill, self.n_decode = n_prefill, n_decode
+        self.n = n_prefill + n_decode
+        self.cache_len = cache_len
+        self.n_slots = n_slots
+        self.node_axis = node_axis
+        self.max_done = decode_batch
+        self.costs = costs
+
+        self.roles = mesh_lib.serve_roles(n_prefill, n_decode)
+        backends = mesh_lib.role_backends(
+            self.roles, prefill=prefill_backend, decode=decode_backend
+        )
+        self.mesh = mesh_lib.make_mesh((self.n,), (node_axis,))
+        self.gas = gasnet.Context(
+            self.mesh,
+            node_axis=node_axis,
+            backend=backends,
+            interpret=interpret,
+            am_capacity=self.max_done + 4,
+            am_payload_width=1,
+        )
+
+        # ---- KV block layout (static: shapes depend only on cache_len) --
+        self.layout = kv_lib.KVLayout.from_struct(
+            model.kv_block_struct(ctx, prompt_len=4, cache_len=cache_len)
+        )
+        self.block_elems = self.layout.total + self.HEADER
+        self.block_bytes = self.block_elems * 4
+        self.plan = sched.plan_p2p(
+            nbytes=self.block_bytes, engine=self.gas.make_engine(), costs=costs
+        )
+
+        # ---- AM control plane ------------------------------------------
+        handlers = self.gas.handlers
+
+        def kv_ack(state, payload, args):
+            del payload
+            out = dict(state)
+            out["acks"] = state["acks"].at[args[1]].set(args[0] + 1)
+            return out
+
+        ack_id = handlers.register("kv_ack", kv_ack)
+
+        def kv_ready(state, payload, args):
+            rid, slot, origin = args[0], args[1], args[2]
+            row = jnp.stack([jnp.ones((), jnp.int32), rid, origin])
+            out = dict(state)
+            out["inbox"] = state["inbox"].at[slot].set(row)
+            return out, am.reply_short(ack_id, args=(rid, slot), like=payload)
+
+        handlers.register("kv_ready", kv_ready, replies=True)
+
+        def req_done(state, payload, args):
+            del payload, args
+            out = dict(state)
+            out["done"] = state["done"] + 1
+            return out
+
+        handlers.register("req_done", req_done)
+
+        # ---- device-side cluster state (host-managed between ticks) ----
+        self.kvseg = np.zeros((self.n, n_slots * self.block_elems), np.float32)
+        self.inbox = np.zeros((self.n, n_slots, 3), np.int32)
+        self.acks = np.zeros((self.n, n_slots), np.int32)
+        self.done = np.zeros((self.n, 1), np.int32)
+
+        # ---- pools ------------------------------------------------------
+        self.decode_servers = [
+            Server(model, ctx, params, decode_batch, cache_len, eos_id=eos_id)
+            for _ in range(n_decode)
+        ]
+        self._prefill_fn = jax.jit(
+            lambda p, b: model.prefill(p, ctx, b, cache_len=cache_len)
+        )
+
+        # ---- host scheduler state --------------------------------------
+        self.queue: List[Any] = []
+        self.by_rid: Dict[int, Any] = {}
+        self.finished: List[Any] = []
+        # one in-flight push per prefill worker: (request, pool, slot, block)
+        self.pending_push: List[Optional[Tuple]] = [None] * n_prefill
+        self.staged: List[Dict[int, int]] = [dict() for _ in range(n_decode)]
+        self._done_queue: List[Tuple[int, int, int]] = []  # (d, rid+1, origin)
+        self._finished_seen = [0] * n_decode
+        self._rr_decode = 0
+        self._transfer_fns: Dict[Tuple[int, ...], Any] = {}
+        self.kv_transfers = 0
+        self.kv_acked = 0
+        self.decoded_tokens = 0
+        self.dropped_am = 0
+
+    # ------------------------------------------------------------------ #
+    # role views
+    # ------------------------------------------------------------------ #
+    def decode_rank(self, d: int) -> int:
+        return self.n_prefill + d
+
+    # ------------------------------------------------------------------ #
+    # request intake
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Any) -> None:
+        req.t_enqueue = time.monotonic()
+        self.queue.append(req)
+        self.by_rid[req.rid] = req
+
+    # ------------------------------------------------------------------ #
+    # SPMD transfer program (data plane + control plane, one launch)
+    # ------------------------------------------------------------------ #
+    def _transfer_fn(self, perm: Tuple[int, ...]) -> Any:
+        cached = self._transfer_fns.get(perm)
+        if cached is not None:
+            return cached
+        jax = self.jax
+        gasnet = self.gasnet
+        from jax.sharding import PartitionSpec as P
+
+        spec = P(self.node_axis)
+        block = self.block_elems
+
+        def body(kvseg, inbox, acks, done, outflat, meta, done_meta):
+            node = self.gas.make_node()
+            has = meta[0, 0] > 0
+            rid, slot, dst = meta[0, 1], meta[0, 2], meta[0, 3]
+            # data plane: planned segmented split-phase puts
+            handles, _ = kv_lib.push_block(
+                node,
+                kvseg,
+                outflat[0],
+                to=gasnet.Perm(perm),
+                base_index=slot * block,
+                pred=has,
+                plan=self.plan,
+            )
+            # control plane rides while the puts are in flight
+            ackh = node.am_call(
+                dst,
+                "kv_ready",
+                args=(rid, slot, node.my_id),
+                pred=has,
+                ack=lambda st: st["acks"],
+            )
+            for j in range(self.max_done):
+                node.am_short(
+                    done_meta[0, j, 1],
+                    "req_done",
+                    args=(done_meta[0, j, 0],),
+                    pred=done_meta[0, j, 0] > 0,
+                )
+            kvseg = kv_lib.sync_push(node, kvseg, handles)
+            state = {"inbox": inbox[0], "acks": acks[0], "done": done[0]}
+            state = node.am_flush(state)
+            acked = node.sync(ackh)
+            return (
+                kvseg,
+                state["inbox"][None],
+                acked[None],
+                state["done"][None],
+                node.dropped[None],
+            )
+
+        fn = jax.jit(
+            self.shard_map(
+                body,
+                mesh=self.mesh,
+                in_specs=(spec,) * 7,
+                out_specs=(spec,) * 5,
+                check_vma=False,
+            )
+        )
+        self._transfer_fns[perm] = fn
+        return fn
+
+    # ------------------------------------------------------------------ #
+    # host scheduler
+    # ------------------------------------------------------------------ #
+    def _pick_target(self, taken: set) -> Optional[Tuple[int, int]]:
+        """(decode pool index, staging slot) with capacity, round-robin."""
+        for i in range(self.n_decode):
+            d = (self._rr_decode + i) % self.n_decode
+            if d in taken:
+                continue
+            for slot in range(self.n_slots):
+                if slot not in self.staged[d]:
+                    self._rr_decode = (d + 1) % self.n_decode
+                    return d, slot
+        return None
+
+    def _run_prefills(self) -> None:
+        """Assign queued requests to idle prefill workers (host compute)."""
+        taken = {push[1] for push in self.pending_push if push is not None}
+        for p in range(self.n_prefill):
+            if self.pending_push[p] is not None or not self.queue:
+                continue
+            target = self._pick_target(taken)
+            if target is None:
+                return
+            d, slot = target
+            req = self.queue.pop(0)
+            jnp = self.jnp
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, caches_one = self._prefill_fn(self.params, {"inputs": toks})
+            tok = int(np.argmax(np.asarray(logits)[0]))
+            req.out.append(tok)
+            req.t_first = time.monotonic()
+            header = np.asarray([tok, len(req.prompt)], np.int32).view(np.float32)
+            flat = np.concatenate(
+                [header, np.asarray(self.layout.flatten(caches_one))]
+            )
+            self.pending_push[p] = (req, d, slot, flat)
+            self.staged[d][slot] = req.rid
+            taken.add(d)
+
+    def _launch_transfer(self) -> Optional[Tuple[Any, ...]]:
+        """Build this tick's transfer inputs and dispatch the SPMD program
+        (asynchronously — the caller overlaps decode before consuming)."""
+        pushes = [
+            (p, push)
+            for p, push in enumerate(self.pending_push)
+            if push is not None
+        ]
+        if not pushes and not self._done_queue:
+            return None
+        edges = {p: self.decode_rank(d) for p, (_, d, _, _) in pushes}
+        perm = kv_lib.handoff_permutation(self.n, edges)
+        outflat = np.zeros((self.n, self.block_elems), np.float32)
+        meta = np.zeros((self.n, 4), np.int32)
+        for p, (req, d, slot, flat) in pushes:
+            outflat[p] = flat
+            meta[p] = (1, req.rid, slot, self.decode_rank(d))
+            if not getattr(req, "_push_counted", False):
+                req._push_counted = True
+                self.kv_transfers += 1
+        done_meta = np.zeros((self.n, self.max_done, 2), np.int32)
+        per_rank_counts = [0] * self.n
+        leftover: List[Tuple[int, int, int]] = []
+        for d, rid_plus1, origin in self._done_queue:
+            rank = self.decode_rank(d)
+            j = per_rank_counts[rank]
+            if j < self.max_done:
+                done_meta[rank, j] = (rid_plus1, origin)
+                per_rank_counts[rank] = j + 1
+            else:
+                leftover.append((d, rid_plus1, origin))
+        self._done_queue = leftover
+        fn = self._transfer_fn(perm)
+        return fn(
+            self.kvseg, self.inbox, self.acks, self.done, outflat, meta, done_meta
+        )
+
+    def _decode_step(self) -> None:
+        """One continuous-batching tick on every decode server; collect
+        newly finished requests as completion reports for the next
+        transfer launch."""
+        for d, server in enumerate(self.decode_servers):
+            self.decoded_tokens += server.step()
+            fresh = server.finished[self._finished_seen[d] :]
+            self._finished_seen[d] = len(server.finished)
+            for req in fresh:
+                self.finished.append(req)
+                origin = getattr(req, "origin_rank", 0)
+                self._done_queue.append((d, req.rid + 1, origin))
+
+    def _consume_transfer(self, results: Tuple[Any, ...]) -> None:
+        # np.array (not asarray): host copies must stay writable — the
+        # scheduler clears inbox flags after installs
+        kvseg, inbox, acks, done, dropped = (np.array(r) for r in results)
+        self.kvseg, self.inbox, self.acks, self.done = kvseg, inbox, acks, done
+        self.dropped_am += int(dropped.sum())
+        # prefill side: retire acknowledged pushes
+        for p, push in enumerate(self.pending_push):
+            if push is None:
+                continue
+            req, d, slot, _ = push
+            if int(self.acks[p, slot]) == req.rid + 1:
+                self.kv_acked += 1
+                req.origin_rank = p
+                self.pending_push[p] = None
+        # decode side: install staged blocks into servers with free rows
+        for d, server in enumerate(self.decode_servers):
+            rank = self.decode_rank(d)
+            for slot in range(self.n_slots):
+                occupied = int(self.inbox[rank, slot, 0])
+                rid = int(self.inbox[rank, slot, 1])
+                if not occupied:
+                    continue
+                req = self.by_rid.get(int(rid))
+                if req is None or self.staged[d].get(slot) != int(rid):
+                    continue
+                if self._install(server, rank, slot, req):
+                    self.inbox[rank, slot, 0] = 0
+                    del self.staged[d][slot]
+
+    def _install(self, server, rank: int, slot: int, req) -> bool:
+        block = self.kvseg[
+            rank, slot * self.block_elems : (slot + 1) * self.block_elems
+        ]
+        header = block[: self.HEADER].view(np.int32)
+        tok, position = int(header[0]), int(header[1])
+        caches_one = self.layout.unflatten(self.jnp.asarray(block[self.HEADER :]))
+        return server.admit_prefilled(
+            req, caches_one, first_token=tok, position=position
+        )
+
+    # ------------------------------------------------------------------ #
+    def tick(self) -> None:
+        """One cluster tick: prefill, launch the KV transfer, overlap a
+        decode step with it, then consume the transfer results."""
+        self._run_prefills()
+        results = self._launch_transfer()
+        self._decode_step()  # overlaps the in-flight transfer
+        if results is not None:
+            self._consume_transfer(results)
+
+    def idle(self) -> bool:
+        return (
+            not self.queue
+            and all(p is None for p in self.pending_push)
+            and not any(self.staged[d] for d in range(self.n_decode))
+            and not any(any(s.active) or s.queue for s in self.decode_servers)
+        )
+
+    def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
+        t0 = time.monotonic()
+        ticks = 0
+        while not self.idle() and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        # final flushes so the last completions reach their origin ranks
+        # (bounded: an unacknowledged push must not spin forever)
+        for _ in range(2 * self.n + 2):
+            results = self._launch_transfer()
+            if results is None:
+                break
+            self._consume_transfer(results)
+        dt = time.monotonic() - t0
+        lat = [r.t_done - r.t_enqueue for r in self.finished]
+        ttft = [r.t_first - r.t_enqueue for r in self.finished]
+        return {
+            "requests": len(self.finished),
+            "decoded_tokens": self.decoded_tokens,
+            "wall_s": dt,
+            "ticks": ticks,
+            "tok_per_s": self.decoded_tokens / dt if dt else 0.0,
+            "p50_latency_s": float(np.median(lat)) if lat else 0.0,
+            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "p50_ttft_s": float(np.median(ttft)) if ttft else 0.0,
+            "kv_transfers": self.kv_transfers,
+            "kv_acked": self.kv_acked,
+            "kv_bytes": self.kv_transfers * self.block_bytes,
+            "kv_bytes_per_s": self.kv_transfers * self.block_bytes / dt if dt else 0.0,
+            "kv_block_bytes": self.block_bytes,
+            "kv_plan": self.plan.describe(),
+            "completions_notified": int(self.done[: self.n_prefill].sum()),
+            "am_dropped": self.dropped_am,
+        }

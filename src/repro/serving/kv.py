@@ -1,0 +1,239 @@
+"""KV-cache blocks over the GAS layer: the disaggregated-serving data plane.
+
+A prefill node finishes a request holding a KV-cache pytree; a decode node
+needs that cache installed in one of its staging slots.  The paper's split
+applies directly: the *bulk* bytes move as one-sided remote writes (the
+GAScore command path — here ``Node.put_nb`` segmented per
+``sched.plan_p2p``), while the *control* packet announcing the block rides
+the Active Message request/reply plane (``repro.serving.disagg``).
+
+Three pieces:
+
+1. :class:`KVLayout` — a bit-transparent mapping between a cache pytree and
+   one flat float32 *carrier* vector (int leaves are bitcast, half-precision
+   floats are widened exactly), so a block is a contiguous GASNet segment
+   range and the transfer is engine-agnostic.
+2. :func:`push_block` — ship a block with ``plan_p2p``-planned segmented
+   split-phase puts: all segments are initiated before any completion is
+   consumed, so the wire overlaps the receiver epilogue (and any decode
+   compute issued between initiation and :func:`sync_push`).
+3. :func:`handoff_permutation` — complete a set of prefill→decode edges
+   into a full bijection (hardware transports signal every recv semaphore
+   exactly once, so only bijections are legal); the filler edges carry
+   ``pred=False`` puts that the receiver discards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import sched
+
+__all__ = [
+    "KVLayout",
+    "LeafSpec",
+    "segment_bounds",
+    "push_block",
+    "sync_push",
+    "handoff_permutation",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """One cache leaf's slice of the flat carrier block."""
+
+    shape: Tuple[int, ...]
+    dtype: Any
+    offset: int
+    size: int
+
+
+def _to_carrier(x: jax.Array) -> jax.Array:
+    """Flatten one leaf into the float32 carrier, bit-transparently."""
+    x = x.reshape(-1)
+    if x.dtype == jnp.float32:
+        return x
+    if x.dtype in (jnp.int32, jnp.uint32):
+        return lax.bitcast_convert_type(x, jnp.float32)
+    if x.dtype in (jnp.int8, jnp.int16, jnp.uint8, jnp.uint16):
+        return lax.bitcast_convert_type(x.astype(jnp.int32), jnp.float32)
+    if x.dtype == jnp.bool_:
+        return x.astype(jnp.float32)
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return x.astype(jnp.float32)  # bf16/f16 widen exactly
+    raise TypeError(f"unsupported KV leaf dtype {x.dtype}")
+
+
+def _from_carrier(flat: jax.Array, spec: LeafSpec) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype)
+    if dtype == jnp.float32:
+        out = flat
+    elif dtype in (jnp.int32, jnp.uint32):
+        out = lax.bitcast_convert_type(flat, jnp.int32).astype(dtype)
+    elif dtype in (jnp.int8, jnp.int16, jnp.uint8, jnp.uint16):
+        out = lax.bitcast_convert_type(flat, jnp.int32).astype(dtype)
+    elif dtype == jnp.bool_:
+        out = flat != 0.0
+    elif jnp.issubdtype(dtype, jnp.floating):
+        out = flat.astype(dtype)
+    else:
+        raise TypeError(f"unsupported KV leaf dtype {dtype}")
+    return out.reshape(spec.shape)
+
+
+class KVLayout:
+    """Static block layout of one request's KV cache.
+
+    Built once from an abstract cache pytree (``Model.kv_block_struct``);
+    :meth:`flatten` / :meth:`unflatten` round-trip any concrete cache of
+    that structure through a single ``(total,)`` float32 carrier vector,
+    bit-exactly.
+    """
+
+    def __init__(self, treedef: Any, leaves: List[LeafSpec]):
+        self.treedef = treedef
+        self.leaves = leaves
+        self.total = sum(leaf.size for leaf in leaves)
+
+    @classmethod
+    def from_struct(cls, struct: Any) -> "KVLayout":
+        leaf_structs, treedef = jax.tree_util.tree_flatten(struct)
+        leaves: List[LeafSpec] = []
+        offset = 0
+        for s in leaf_structs:
+            size = 1
+            for d in s.shape:
+                size *= int(d)
+            leaves.append(
+                LeafSpec(
+                    shape=tuple(s.shape),
+                    dtype=jnp.dtype(s.dtype),
+                    offset=offset,
+                    size=size,
+                )
+            )
+            offset += size
+        return cls(treedef, leaves)
+
+    @property
+    def nbytes(self) -> int:
+        return self.total * 4  # float32 carrier
+
+    def flatten(self, caches: Any) -> jax.Array:
+        vals = jax.tree_util.tree_leaves(caches)
+        if len(vals) != len(self.leaves):
+            raise ValueError(
+                f"cache has {len(vals)} leaves, layout expects "
+                f"{len(self.leaves)}"
+            )
+        return jnp.concatenate([_to_carrier(v) for v in vals])
+
+    def unflatten(self, flat: jax.Array) -> Any:
+        flat = flat.reshape(-1)
+        if flat.shape[0] != self.total:
+            raise ValueError(
+                f"flat block has {flat.shape[0]} elems, layout expects "
+                f"{self.total}"
+            )
+        vals = [
+            _from_carrier(flat[leaf.offset : leaf.offset + leaf.size], leaf)
+            for leaf in self.leaves
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, vals)
+
+
+def segment_bounds(total: int, n_segments: int) -> List[Tuple[int, int]]:
+    """Static ``(offset, size)`` list cutting ``total`` elements into at
+    most ``n_segments`` contiguous near-equal segments (never empty)."""
+    g = max(1, min(int(n_segments), int(total)))
+    base, rem = divmod(int(total), g)
+    bounds: List[Tuple[int, int]] = []
+    offset = 0
+    for i in range(g):
+        size = base + (1 if i < rem else 0)
+        bounds.append((offset, size))
+        offset += size
+    return bounds
+
+
+def push_block(
+    node: Any,
+    seg: jax.Array,
+    flat: jax.Array,
+    *,
+    to: Any,
+    base_index: jax.Array | int = 0,
+    pred: jax.Array | bool | None = None,
+    plan: Optional[sched.CollectivePlan] = None,
+    n_segments: Optional[int] = None,
+    costs: Optional[Dict[str, sched.EngineCost]] = None,
+) -> Tuple[List[Any], sched.CollectivePlan]:
+    """Initiate one KV-block transfer as planned segmented non-blocking puts.
+
+    The segment count comes from ``sched.plan_p2p`` (the stage-boundary
+    planner: chunk so wire time overlaps the receiver epilogue) unless
+    pinned via ``n_segments``.  Every segment's ``put_nb`` is initiated
+    here — all in flight at once — and the caller drains them with
+    :func:`sync_push` after issuing any compute it wants overlapped.
+
+    Returns ``(handles, plan)``.
+    """
+    if plan is None:
+        nbytes = int(flat.size) * flat.dtype.itemsize
+        plan = sched.plan_p2p(nbytes=nbytes, engine=node.engine, costs=costs)
+    g = int(plan.n_segments if n_segments is None else n_segments)
+    handles = []
+    for offset, size in segment_bounds(int(flat.size), g):
+        handles.append(
+            node.put_nb(
+                seg,
+                flat[offset : offset + size],
+                to=to,
+                index=base_index + offset,
+                pred=pred,
+            )
+        )
+    return handles, plan
+
+
+def sync_push(node: Any, seg: jax.Array, handles: Sequence[Any]) -> jax.Array:
+    """Drain one block's put handles in issue order; returns the updated
+    segment (outstanding puts on the same segment compose, see
+    ``Node.sync``)."""
+    for h in handles:
+        seg = node.sync(h)
+    return seg
+
+
+def handoff_permutation(n_nodes: int, edges: Dict[int, int]) -> Tuple[int, ...]:
+    """Complete prefill→decode ``edges`` (src rank -> dst rank) into a full
+    bijection over ``n_nodes`` ranks.
+
+    Hardware (GAScore) transports are bijection-only — every receive
+    semaphore fires exactly once — so ranks without a real edge get filler
+    destinations in stable order; their puts ship ``pred=False`` and the
+    receivers keep their memory untouched.
+    """
+    dst: List[Optional[int]] = [None] * n_nodes
+    used = set()
+    for s, d in edges.items():
+        if not (0 <= s < n_nodes and 0 <= d < n_nodes):
+            raise ValueError(f"edge {s}->{d} outside {n_nodes} ranks")
+        if dst[s] is not None:
+            raise ValueError(f"duplicate source rank {s}")
+        if d in used:
+            raise ValueError(f"duplicate destination rank {d}")
+        dst[s] = d
+        used.add(d)
+    remaining = [r for r in range(n_nodes) if r not in used]
+    for s in range(n_nodes):
+        if dst[s] is None:
+            dst[s] = remaining.pop(0)
+    assert not remaining
+    return tuple(dst)  # type: ignore[arg-type]

@@ -154,6 +154,64 @@ def main() -> None:
     np.testing.assert_array_equal(np.asarray(dropped), 2)
     print("AM overflow accounting OK")
 
+    # ---- AM request/reply: round trip + ack handles, xla vs mixed map ------
+    def run_request_reply(backend):
+        ctx_rr = gasnet.Context(mesh, node_axis="node", backend=backend,
+                                am_payload_width=4)
+        table = ctx_rr.handlers
+
+        def pong(state, payload, args):
+            out = dict(state)
+            out["ack_payload"] = payload
+            out["ack_arg"] = state["ack_arg"] + args[0]
+            return out
+
+        pong_id = table.register("pong", pong)
+
+        def ping(state, payload, args):
+            out = dict(state)
+            out["got"] = state["got"] + args[0]
+            reply = am.reply_medium(
+                pong_id, payload + 1.0, args=(args[0] + 1,)
+            )
+            return out, reply
+
+        table.register("ping", ping, replies=True)
+
+        def prog_rr(node, seg):
+            me = node.my_id
+            state = {
+                "got": jnp.zeros((), jnp.int32),
+                "ack_arg": jnp.zeros((), jnp.int32),
+                "ack_payload": jnp.zeros((4,), jnp.float32),
+            }
+            h = node.am_call(
+                (me + 3) % 8, "ping",
+                payload=jnp.full((4,), me, jnp.float32),
+                args=(me * 10,), ack=lambda st: st["ack_payload"],
+            )
+            state = node.am_flush(state)
+            acked = node.sync(h)
+            return (state["got"][None], state["ack_arg"][None],
+                    acked[None])
+
+        return tuple(
+            np.asarray(o) for o in ctx_rr.spmd(
+                prog_rr, seg, out_specs=(P("node"),) * 3
+            )
+        )
+
+    rr_sw = run_request_reply("xla")
+    got, ack_arg, acked = rr_sw
+    for n in range(8):
+        assert int(got[n]) == ((n - 3) % 8) * 10          # request landed
+        assert int(ack_arg[n]) == n * 10 + 1              # reply came back
+        np.testing.assert_allclose(acked[n], n + 1.0)     # ack handle value
+    rr_mix = run_request_reply("xla,gascore")
+    for name, a, b in zip(("got", "ack_arg", "ack_payload"), rr_sw, rr_mix):
+        np.testing.assert_allclose(a, b, err_msg=f"request/reply: {name}")
+    print("AM request/reply round trip OK (xla + mixed map)")
+
     # ---- Extended API: split-phase non-blocking put/get --------------------
     def prog_nb(node, seg):
         # initiate, overlap independent compute, then sync

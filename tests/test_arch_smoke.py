@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import ARCHS, SMOKE, SHAPES, cell_runnable
+from repro.configs.registry import ARCHS, SMOKE, cell_runnable
 from repro.models.build import build_model
 from repro.parallel.ctx import RunCtx
 

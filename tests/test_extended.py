@@ -65,8 +65,8 @@ def test_node_sync_all_is_fifo():
     seg = aspace.alloc("buf", init_fn=jnp.ones)
 
     def prog(node, seg):
-        hp = node.put_nb(seg, jnp.full((2,), 5.0), index=0)
-        hg = node.get_nb(seg, index=4, size=2)
+        node.put_nb(seg, jnp.full((2,), 5.0), index=0)
+        node.get_nb(seg, index=4, size=2)
         seg2, got = node.sync_all()
         assert not node._outstanding
         return seg2, got[None]

@@ -1,5 +1,4 @@
 """Fault-tolerance control-plane logic (injectable clock, no devices)."""
-import numpy as np
 
 from repro.runtime.ft import (
     HeartbeatMonitor,

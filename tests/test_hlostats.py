@@ -1,7 +1,6 @@
 """Calibration of the trip-count-aware HLO analyzer (roofline inputs)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch import hlostats
 

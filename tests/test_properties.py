@@ -236,6 +236,61 @@ def test_tree_broadcast_delivers_root(n, root, width, seed):
         np.testing.assert_array_equal(np.asarray(o), np.asarray(xs[root]))
 
 
+# --------------------------------------------------------------------------- #
+# segmented KV-block handoff: bit-exact for ANY segment count / block size
+# (the disaggregated-serving data plane must be semantics-transparent)
+# --------------------------------------------------------------------------- #
+@SET_SIM
+@given(
+    n=st.integers(2, 5),
+    block=st.integers(1, 48),
+    n_segments=st.integers(1, 9),
+    n_slots=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_segmented_kv_handoff_bitexact(n, block, n_segments, n_slots, seed):
+    from repro.core import gasnet
+    from repro.serving import kv as skv
+
+    slot = seed % n_slots
+    rng = np.random.default_rng(seed)
+    # int bit patterns through the float32 carrier: any payload must
+    # survive the segmented handoff bit-for-bit
+    blocks = [
+        jnp.asarray(
+            rng.integers(-(2**31), 2**31 - 1, size=(block,), dtype=np.int64)
+            .astype(np.int32)
+        )
+        for _ in range(n)
+    ]
+
+    def program(g):
+        def run(engine):
+            node = gasnet.Node(
+                engine, am.HandlerTable(), am_capacity=4,
+                am_payload_width=1, am_per_peer_capacity=4,
+            )
+            seg = jnp.zeros((1, n_slots * block), jnp.float32)
+            flat = skv._to_carrier(blocks[engine.rank])
+            handles, _ = skv.push_block(
+                node, seg, flat, to=gasnet.Shift(1),
+                base_index=slot * block, n_segments=g,
+            )
+            seg = skv.sync_push(node, seg, handles)
+            return seg
+
+        return run
+
+    segmented = run_spmd(program(n_segments), n)
+    mono = run_spmd(program(1), n)
+    for rank, (a, b) in enumerate(zip(segmented, mono)):
+        a, b = np.asarray(a), np.asarray(b)
+        np.testing.assert_array_equal(a, b)
+        got = a[0, slot * block : (slot + 1) * block]
+        want = np.asarray(blocks[(rank - 1) % n]).view(np.float32)
+        np.testing.assert_array_equal(got, want)
+
+
 @SET
 @given(
     op=st.sampled_from(["all_reduce", "all_gather", "reduce_scatter",

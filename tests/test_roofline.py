@@ -1,5 +1,5 @@
 """Roofline math + registry consistency."""
-from repro.configs.registry import ARCHS, SHAPES, runnable_cells
+from repro.configs.registry import runnable_cells
 from repro.launch import roofline
 
 

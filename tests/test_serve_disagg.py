@@ -1,0 +1,272 @@
+"""Disaggregated serving: AM request/reply plane + KV-block data plane.
+
+Fast tests run the GAS programs on the single-device lockstep simulator
+(``repro.testing.sim``) and validate the KV block layout against real
+model caches; the slow test runs the end-to-end example (distinct
+prefill/decode ranks, plan_p2p-segmented puts, AM-reply acks) in a
+subprocess with forced host devices.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import am, gasnet
+from repro.serving import kv
+from repro.testing.sim import run_spmd
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# --------------------------------------------------------------------------- #
+# AM request/reply round trip (lockstep simulator, single device)
+# --------------------------------------------------------------------------- #
+def _pingpong_table():
+    table = am.HandlerTable()
+
+    def pong(state, payload, args):
+        out = dict(state)
+        out["ack_payload"] = payload
+        out["ack_arg"] = state["ack_arg"] + args[0]
+        return out
+
+    pong_id = table.register("pong", pong)
+
+    def ping(state, payload, args):
+        out = dict(state)
+        out["got"] = state["got"] + args[0]
+        reply = am.reply_medium(pong_id, payload + 1.0, args=(args[0] + 1,))
+        return out, reply
+
+    table.register("ping", ping, replies=True)
+    return table
+
+
+@pytest.mark.parametrize("n,shift", [(2, 1), (5, 3), (8, 5)])
+def test_am_request_reply_round_trip(n, shift):
+    def program(engine):
+        node = gasnet.Node(
+            engine,
+            _pingpong_table(),
+            am_capacity=8,
+            am_payload_width=4,
+            am_per_peer_capacity=8,
+        )
+        me = node.my_id
+        state = {
+            "got": jnp.zeros((), jnp.int32),
+            "ack_arg": jnp.zeros((), jnp.int32),
+            "ack_payload": jnp.zeros((4,), jnp.float32),
+        }
+        handle = node.am_call(
+            (me + shift) % n,
+            "ping",
+            payload=jnp.full((4,), me, jnp.float32),
+            args=(me * 10,),
+            ack=lambda st: st["ack_payload"],
+        )
+        state = node.am_flush(state)
+        return state["got"], state["ack_arg"], node.sync(handle)
+
+    outs = run_spmd(program, n)
+    for rank, (got, ack_arg, ack_payload) in enumerate(outs):
+        # request hop: handler ran at rank (me + shift) % n
+        assert int(got) == ((rank - shift) % n) * 10
+        # reply hop: the AMReply came back to the requester
+        assert int(ack_arg) == rank * 10 + 1
+        np.testing.assert_allclose(np.asarray(ack_payload), rank + 1.0)
+
+
+def test_am_call_requires_replying_handler():
+    table = am.HandlerTable()
+    table.register("plain", lambda s, p, a: s)
+
+    def program(engine):
+        node = gasnet.Node(
+            engine, table, am_capacity=4, am_payload_width=2, am_per_peer_capacity=4
+        )
+        with pytest.raises(ValueError, match="replying"):
+            node.am_call(jnp.zeros((), jnp.int32), "plain")
+        return jnp.zeros(())
+
+    run_spmd(program, 2)
+
+
+def test_ack_handle_sync_before_flush_raises():
+    table = _pingpong_table()
+
+    def program(engine):
+        node = gasnet.Node(
+            engine, table, am_capacity=4, am_payload_width=4, am_per_peer_capacity=4
+        )
+        handle = node.am_call(
+            jnp.zeros((), jnp.int32),
+            "ping",
+            payload=jnp.zeros((4,), jnp.float32),
+            ack=lambda st: st["ack_arg"],
+        )
+        with pytest.raises(RuntimeError, match="before am_flush"):
+            node.sync(handle)
+        return jnp.zeros(())
+
+    run_spmd(program, 2)
+
+
+# --------------------------------------------------------------------------- #
+# KV-block data plane (simulator)
+# --------------------------------------------------------------------------- #
+def _kv_push_ranks(n, block, n_segments, n_slots=2, slot=1, gate=None):
+    """Every rank pushes its block to rank (me+1) % n, segmented."""
+    rng = np.random.default_rng(block + n)
+    blocks = [jnp.asarray(rng.normal(size=(block,)), jnp.float32) for _ in range(n)]
+
+    def program(engine):
+        node = gasnet.Node(
+            engine,
+            am.HandlerTable(),
+            am_capacity=4,
+            am_payload_width=1,
+            am_per_peer_capacity=4,
+        )
+        seg = jnp.zeros((1, n_slots * block), jnp.float32)
+        pred = None if gate is None else gate[engine.rank]
+        handles, plan = kv.push_block(
+            node,
+            seg,
+            blocks[engine.rank],
+            to=gasnet.Shift(1),
+            base_index=slot * block,
+            pred=pred,
+            n_segments=n_segments,
+        )
+        assert plan.op == "p2p"
+        seg = kv.sync_push(node, seg, handles)
+        return seg
+
+    return blocks, run_spmd(program, n)
+
+
+@pytest.mark.parametrize("n,block,g", [(2, 7, 1), (3, 16, 4), (4, 33, 5)])
+def test_segmented_kv_push_lands_whole_block(n, block, g):
+    blocks, segs = _kv_push_ranks(n, block, g)
+    for rank, seg in enumerate(segs):
+        got = np.asarray(seg)[0]
+        np.testing.assert_array_equal(got[block:], np.asarray(blocks[(rank - 1) % n]))
+        np.testing.assert_array_equal(got[:block], 0.0)
+
+
+def test_segmented_matches_monolithic_push():
+    _, mono = _kv_push_ranks(3, 24, 1)
+    _, seg = _kv_push_ranks(3, 24, 6)
+    for a, b in zip(mono, seg):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pred_gated_push_leaves_receiver_untouched():
+    n = 4
+    gate = [r % 2 == 0 for r in range(n)]  # only even ranks send
+    blocks, segs = _kv_push_ranks(n, 8, 3, gate=gate)
+    for rank, seg in enumerate(segs):
+        got = np.asarray(seg)[0, 8:]
+        sender = (rank - 1) % n
+        if gate[sender]:
+            np.testing.assert_array_equal(got, np.asarray(blocks[sender]))
+        else:
+            np.testing.assert_array_equal(got, 0.0)
+
+
+def test_handoff_permutation_completes_bijection():
+    perm = kv.handoff_permutation(6, {0: 4, 1: 3})
+    assert sorted(perm) == list(range(6))
+    assert perm[0] == 4 and perm[1] == 3
+    with pytest.raises(ValueError, match="duplicate destination"):
+        kv.handoff_permutation(4, {0: 2, 1: 2})
+
+
+def test_segment_bounds_cover_exactly():
+    for total, g in [(1, 1), (7, 3), (12, 12), (10, 64)]:
+        bounds = kv.segment_bounds(total, g)
+        assert bounds[0][0] == 0
+        assert sum(size for _, size in bounds) == total
+        for (off_a, size_a), (off_b, _) in zip(bounds, bounds[1:]):
+            assert off_a + size_a == off_b
+        assert all(size > 0 for _, size in bounds)
+
+
+# --------------------------------------------------------------------------- #
+# KV layout: bit-exact round trip of real model caches
+# --------------------------------------------------------------------------- #
+def test_kv_layout_round_trips_model_cache():
+    from repro.configs.registry import SMOKE
+    from repro.models.build import build_model
+    from repro.parallel.ctx import RunCtx
+
+    cfg = SMOKE["qwen3-4b"]
+    model = build_model(cfg)
+    ctx = RunCtx(mesh=None, remat="none")
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    _, caches = model.prefill(params, ctx, {"inputs": toks}, cache_len=32)
+
+    layout = kv.KVLayout.from_struct(
+        model.kv_block_struct(ctx, prompt_len=8, cache_len=32)
+    )
+    flat = layout.flatten(caches)
+    assert flat.shape == (layout.total,) and flat.dtype == jnp.float32
+    restored = layout.unflatten(flat)
+
+    ref_leaves = jax.tree_util.tree_leaves(caches)
+    got_leaves = jax.tree_util.tree_leaves(restored)
+    assert len(ref_leaves) == len(got_leaves)
+    for a, b in zip(ref_leaves, got_leaves):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kv_layout_shapes_independent_of_prompt_len():
+    from repro.configs.registry import SMOKE
+    from repro.models.build import build_model
+    from repro.parallel.ctx import RunCtx
+
+    cfg = SMOKE["qwen3-4b"]
+    model = build_model(cfg)
+    ctx = RunCtx(mesh=None, remat="none")
+    struct_a = model.kv_block_struct(ctx, prompt_len=4, cache_len=32)
+    struct_b = model.kv_block_struct(ctx, prompt_len=19, cache_len=32)
+    a = kv.KVLayout.from_struct(struct_a)
+    b = kv.KVLayout.from_struct(struct_b)
+    assert a.total == b.total
+    assert [leaf.shape for leaf in a.leaves] == [leaf.shape for leaf in b.leaves]
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: the example's prefill -> KV put -> decode round trip
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_disagg_serve_example_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(ROOT, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    cmd = [
+        sys.executable,
+        os.path.join(ROOT, "examples", "serve_requests.py"),
+        "--smoke",
+    ]
+    proc = subprocess.run(
+        cmd, capture_output=True, text=True, timeout=1200, env=env, cwd=ROOT
+    )
+    assert proc.returncode == 0, proc.stdout[-4000:] + proc.stderr[-4000:]
+    # KV transfer planned by plan_p2p...
+    assert "kv plan: p2p[" in proc.stdout
+    # ...acknowledged via an AM reply...
+    assert "acked via AM reply: 6" in proc.stdout
+    # ...across distinct prefill/decode ranks, token-identical to the
+    # colocated baseline
+    assert "parity: disaggregated tokens == colocated tokens" in proc.stdout
+    assert "DISAGG_SERVE_PASS" in proc.stdout
