@@ -116,9 +116,185 @@ def main(json_path: str | None = None) -> None:
     else:
         print("serve_disagg skipped: needs >= 4 host devices")
 
+    # ---- paged KV pool: paged vs dense decode, page traffic, overlap ------ #
+    paged_sections(report)
+
     if json_path:
         write_artifact(RESULT, json_path)
     print("TRAIN_SERVE_BENCH_DONE")
+
+
+def paged_sections(report) -> None:
+    """The global-paged-KV-pool section of ``BENCH_serve.json``:
+
+    - paged vs dense colocated decode throughput (same burst, token parity
+      asserted — the pool must be free),
+    - disaggregated page traffic: page-fetch bytes/sec + prefix-hit rate
+      on a burst with shared prompt prefixes,
+    - page-fetch/compute overlap: split-phase vectored page get
+      (``get_nbv``) overlapped with the paged-attention decode step vs the
+      same fetch done blocking.
+    """
+    from repro.configs.registry import SMOKE
+    from repro.launch.serve import PagedServer, Request, Server
+    from repro.models.build import build_model
+    from repro.parallel.ctx import RunCtx
+
+    ctx = RunCtx(mesh=None, remat="none")
+    cfg = SMOKE["qwen3-4b"]
+    model = build_model(cfg)
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+
+    def burst(n=12, shared_prefix=16):
+        rng = np.random.default_rng(5)
+        shared = rng.integers(0, cfg.vocab, shared_prefix).tolist()
+        reqs = []
+        for rid in range(n):
+            if rid % 3 == 0:  # every third request rides the warm prefix
+                prompt = shared + rng.integers(0, cfg.vocab, 2).tolist()
+            else:
+                prompt = rng.integers(0, cfg.vocab, 16).tolist()
+            reqs.append(Request(rid=rid, prompt=prompt, max_new=12))
+        return reqs
+
+    results = {}
+    for kind in ("dense", "paged"):
+        if kind == "dense":
+            server = Server(model, ctx, params, batch_size=8, cache_len=96)
+        else:
+            server = PagedServer(model, ctx, params, batch_size=8,
+                                 cache_len=96, page_tokens=8)
+        for req in burst():
+            server.submit(req)
+        stats = server.run_until_drained()
+        results[kind] = {r.rid: r.out for r in server.finished}
+        us = stats["wall_s"] / max(stats["decoded_tokens"], 1) * 1e6
+        extra = {}
+        if kind == "paged":
+            extra = {k: v for k, v in stats.items() if k.startswith("pool_")}
+        report(f"serve_{kind}_decode", us,
+               f"{stats['tok_per_s']:.1f}tok/s", op=f"serve_{kind}",
+               tok_per_s=round(stats["tok_per_s"], 1), **extra)
+    assert results["dense"] == results["paged"]  # token parity, always
+
+    # disaggregated page traffic (prefix sharing across the handoff)
+    if jax.device_count() >= 4:
+        from repro.serving.disagg import DisaggCluster
+
+        cluster = DisaggCluster(
+            model, ctx, params, n_prefill=2, n_decode=2,
+            decode_batch=4, cache_len=64, paged=True, page_tokens=8,
+        )
+        for req in burst():
+            cluster.submit(req)
+        d = cluster.run_until_drained()
+        report("serve_disagg_paged_goodput", d["kv_bytes_per_s"] / 1e6,
+               f"{d['kv_pages_sent']}x{d['page_bytes']}B", unit="mb_s",
+               op="serve_disagg_paged",
+               tok_per_s=round(d["tok_per_s"], 1),
+               kv_pages_sent=d["kv_pages_sent"],
+               kv_pages_shared=d["kv_pages_shared"],
+               prefix_hit_rate=round(d["prefix_hit_rate"], 4),
+               page_bytes=d["page_bytes"],
+               kv_bytes_per_sec=round(d["kv_bytes_per_s"], 1))
+        assert d["kv_acked"] == d["kv_transfers"]
+        assert d["kv_pages_shared"] > 0
+    else:
+        print("serve_disagg_paged skipped: needs >= 4 host devices")
+
+    # page-fetch/compute overlap (the reason decode wants get_nbv)
+    if jax.device_count() >= 2:
+        overlap_bench(report)
+    else:
+        print("paged_fetch_overlap skipped: needs >= 2 host devices")
+
+
+def overlap_bench(report) -> None:
+    """Measure the split-phase win: prefetch m remote pages with the
+    vectored get while the paged-attention kernel chews on local pages,
+    vs the same fetch completed before the kernel starts."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import am, gasnet
+    from repro.kernels import ops
+    from repro.serving import pool as pool_lib
+
+    n = 2
+    B, Hq, Hkv, D, T, NP = 4, 8, 2, 64, 8, 8
+    pages_per_rank = 64
+    page_elems = T * Hkv * D * 2  # K and V halves of one page
+    pmap = pool_lib.PoolMap(n, pages_per_rank, page_elems)
+    mesh = jax.make_mesh((n,), ("node",))
+    ctx_gas = gasnet.Context(mesh, node_axis="node", backend="xla")
+
+    rng = np.random.default_rng(0)
+    seg = jnp.asarray(
+        rng.normal(size=(n, pages_per_rank * page_elems)), jnp.float32
+    )
+    q = jnp.asarray(rng.normal(size=(B, Hq, D)), jnp.float32)
+    kv_pages = jnp.asarray(
+        rng.normal(size=(pages_per_rank, T, Hkv, D)), jnp.float32
+    )
+    v_pages = jnp.asarray(
+        rng.normal(size=(pages_per_rank, T, Hkv, D)), jnp.float32
+    )
+    table = jnp.asarray(
+        rng.integers(0, pages_per_rank, (B, NP)), jnp.int32
+    )
+    lengths = jnp.full((B,), NP * T, jnp.int32)
+    fetch_ids = [int(x) for x in rng.integers(0, pages_per_rank, 16)]
+    offsets = jnp.asarray([pmap.offset(g) for g in fetch_ids], jnp.int32)
+
+    def make_prog(overlap: bool):
+        def prog(node, seg, q, kp, vp, tbl, lens):
+            # initiate the vectored page prefetch from the neighbour shard
+            handles, _ = pool_lib.fetch_pages(
+                node, seg, offsets, frm=gasnet.Shift(1),
+                page_elems=page_elems,
+            )
+            if not overlap:
+                fetched = pool_lib.sync_fetch(node, handles)
+            # decode attention over LOCAL pool pages: no data dependence on
+            # the in-flight fetch, so split-phase overlaps the two
+            out = ops.paged_attention(q, kp, vp, tbl, lens, impl="pallas")
+            if overlap:
+                fetched = pool_lib.sync_fetch(node, handles)
+            return out[None], fetched[None]
+
+        rep = P()
+        return jax.jit(shard_map(
+            lambda s, *a: prog(ctx_gas.make_node(), s, *a),
+            mesh=mesh,
+            in_specs=(P("node"),) + (rep,) * 5,
+            out_specs=(P("node"), P("node")),
+            check_vma=False,
+        ))
+
+    args = (seg, q, kv_pages, v_pages, table, lengths)
+    times = {}
+    outs = {}
+    for kind, overlap in (("blocking", False), ("overlap", True)):
+        fn = make_prog(overlap)
+        o = fn(*args)
+        jax.block_until_ready(o)
+        iters = 10
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            o = fn(*args)
+        jax.block_until_ready(o)
+        times[kind] = (time.perf_counter() - t0) / iters * 1e6
+        outs[kind] = tuple(np.asarray(x) for x in o)
+    for a, b in zip(outs["blocking"], outs["overlap"]):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+    gap = times["blocking"] / max(times["overlap"], 1e-9)
+    fetch_bytes = len(fetch_ids) * page_elems * 4
+    report("paged_fetch_blocking", times["blocking"],
+           f"{fetch_bytes}B fetched", op="paged_overlap",
+           fetch_bytes=fetch_bytes)
+    report("paged_fetch_overlap", times["overlap"],
+           f"{gap:.2f}x vs blocking", op="paged_overlap",
+           fetch_bytes=fetch_bytes, overlap_gap=round(gap, 3))
 
 
 if __name__ == "__main__":

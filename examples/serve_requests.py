@@ -9,9 +9,16 @@ rides along and the decode node's handler *replies* an installation ack
 that resolves the prefill side's AckHandle.  Completions flow back the
 same AM plane.
 
-The demo then replays the identical request burst through the colocated
-``Server`` and asserts the disaggregated cluster produced token-identical
-outputs — the KV block handoff is bit-transparent.
+Act 2 replays the identical burst through the **global paged KV pool**
+(``DisaggCluster(paged=True)``): the decode segments hold fixed-size
+token pages, the prefill rank puts each page straight into its
+allocator-assigned pool slot (pred-gated, no dense staging copy), and
+the two requests sharing a prompt prefix resolve to the *same physical
+pages* — those pages are mapped, not moved.
+
+The demo asserts both clusters produce token-identical outputs to the
+colocated ``Server`` — the KV handoff, dense or paged, is
+bit-transparent.
 
 Run:    PYTHONPATH=src python examples/serve_requests.py
 Smoke:  PYTHONPATH=src python examples/serve_requests.py --smoke
@@ -37,17 +44,25 @@ from repro.models.build import build_model  # noqa: E402
 from repro.parallel.ctx import RunCtx  # noqa: E402
 from repro.serving.disagg import DisaggCluster  # noqa: E402
 
+PAGE_TOKENS = 8
+SHARED_PREFIX = 2 * PAGE_TOKENS  # rid 0/1 share two full prompt pages
+
 
 def make_requests(cfg, n, rng):
+    shared = rng.integers(0, cfg.vocab, size=SHARED_PREFIX).tolist()
     reqs = []
     for rid in range(n):
-        plen = int(rng.integers(4, 20))
+        if rid < 2:
+            # common prompt prefix: the paged cluster must map (not move)
+            # the shared pages
+            tail = rng.integers(0, cfg.vocab, size=rid + 1).tolist()
+            plen = len(shared) + len(tail)
+            prompt = shared + tail
+        else:
+            plen = int(rng.integers(4, 20))
+            prompt = rng.integers(0, cfg.vocab, size=plen).tolist()
         reqs.append(
-            Request(
-                rid=rid,
-                prompt=rng.integers(0, cfg.vocab, size=plen).tolist(),
-                max_new=int(rng.integers(4, 10)),
-            )
+            Request(rid=rid, prompt=prompt, max_new=int(rng.integers(4, 10)))
         )
     return reqs
 
@@ -70,8 +85,7 @@ def main() -> None:
     model = build_model(cfg)
     ctx = RunCtx(mesh=None, remat="none")
     params, _ = model.init(ctx, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(7)
-    reqs = make_requests(cfg, n_requests, rng)
+    reqs = make_requests(cfg, n_requests, np.random.default_rng(7))
 
     print(f"cluster: {N_PREFILL} prefill + {N_DECODE} decode ranks "
           f"(roles over one GASNet job)")
@@ -110,8 +124,7 @@ def main() -> None:
     # row-independent, so tokens must match exactly if the KV block
     # crossed the GAS layer bit-transparently
     server = Server(model, ctx, params, args.decode_batch, args.cache_len)
-    rng = np.random.default_rng(7)
-    for r in make_requests(cfg, n_requests, rng):
+    for r in make_requests(cfg, n_requests, np.random.default_rng(7)):
         server.submit(r)
     server.run_until_drained()
     base = {r.rid: r.out for r in server.finished}
@@ -121,6 +134,43 @@ def main() -> None:
         assert base[rid] == disg[rid], (rid, base[rid], disg[rid])
     print("parity: disaggregated tokens == colocated tokens (bit-exact "
           "KV handoff)")
+
+    # ---- Act 2: the global paged KV pool --------------------------------
+    paged = DisaggCluster(
+        model, ctx, params,
+        n_prefill=N_PREFILL, n_decode=N_DECODE,
+        decode_batch=args.decode_batch, cache_len=args.cache_len,
+        decode_backend=args.decode_backend,
+        paged=True, page_tokens=PAGE_TOKENS,
+    )
+    print(f"paged pool: {paged.pages_per_rank} pages/rank x "
+          f"{paged.playout.page_bytes}B pages "
+          f"({PAGE_TOKENS} tokens/page), per-page plan: "
+          f"{paged.plan.describe()}")
+    for r in make_requests(cfg, n_requests, np.random.default_rng(7)):
+        paged.submit(r)
+    pstats = paged.run_until_drained()
+    print(f"paged: {pstats['kv_pages_sent']} pages shipped, "
+          f"{pstats['kv_pages_shared']} prefix-shared pages mapped not "
+          f"moved (hit rate {pstats['prefix_hit_rate']:.1%}), "
+          f"{pstats['kv_bytes_per_s'] / 1e6:.2f} MB/s page traffic")
+
+    assert pstats["requests"] == n_requests, pstats
+    assert pstats["kv_acked"] == pstats["kv_transfers"], pstats
+    assert pstats["am_dropped"] == 0, pstats
+    # the two prefix-sharing requests resolved to shared physical pages:
+    # their common prompt pages were never re-shipped
+    assert pstats["kv_pages_shared"] >= SHARED_PREFIX // PAGE_TOKENS, pstats
+    # every page reference was dropped when its request finished
+    assert pstats["pool_free_pages"] == (
+        N_DECODE * paged.pages_per_rank
+    ), pstats
+    pg = {r.rid: r.out for r in paged.finished}
+    assert base.keys() == pg.keys()
+    for rid in base:
+        assert base[rid] == pg[rid], (rid, base[rid], pg[rid])
+    print("parity: paged tokens == dense tokens == colocated tokens "
+          "(bit-exact page handoff, prefix pages shared)")
     print("DISAGG_SERVE_PASS")
 
 

@@ -167,6 +167,54 @@ class CommEngine:
         """Non-blocking :meth:`permute` (split-phase, see :meth:`shift_nb`)."""
         return Pending(self.permute(x, dst), op="permute")
 
+    # -- vectored split-phase transport (engine-level multi-get/multi-put) #
+    def _pack_nbv(self, xs: Sequence[jax.Array]) -> jax.Array:
+        flats = [x.reshape(-1) for x in xs]
+        dtypes = {f.dtype for f in flats}
+        if len(dtypes) > 1:
+            raise TypeError(
+                f"vectored transfer payloads must share one dtype, got "
+                f"{sorted(str(d) for d in dtypes)}"
+            )
+        return flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+
+    def _unpack_nbv(
+        self, moved: jax.Array, xs: Sequence[jax.Array], op: str
+    ) -> List[Pending]:
+        out: List[Pending] = []
+        offset = 0
+        for x in xs:
+            piece = moved[offset : offset + x.size].reshape(x.shape)
+            out.append(Pending(piece, op=op))
+            offset += x.size
+        return out
+
+    def shift_nbv(self, xs: Sequence[jax.Array], k: int = 1) -> List[Pending]:
+        """Vectored non-blocking shift: ONE transport initiation (a single
+        command word / DMA descriptor) carries every payload in ``xs`` to
+        node ``(me + k) % n``; returns one :class:`Pending` per payload.
+
+        This is the engine half of a multi-get/multi-put: m transfers cost
+        one initiation α instead of m — the GAScore draining a whole FIFO
+        of commands as one wire message.  Payloads must share a dtype (the
+        carrier); sizes are static so the receive split is free.
+        """
+        xs = list(xs)
+        if not xs:
+            return []
+        moved = self.shift(self._pack_nbv(xs), k)
+        return self._unpack_nbv(moved, xs, op=f"shiftv(k={k})")
+
+    def permute_nbv(
+        self, xs: Sequence[jax.Array], dst: Sequence[int]
+    ) -> List[Pending]:
+        """Vectored non-blocking :meth:`permute` (see :meth:`shift_nbv`)."""
+        xs = list(xs)
+        if not xs:
+            return []
+        moved = self.permute(self._pack_nbv(xs), dst)
+        return self._unpack_nbv(moved, xs, op="permutev")
+
     # -- collectives ----------------------------------------------------- #
     def all_to_all(self, x: jax.Array) -> jax.Array:
         """x: (n_nodes * m, ...) tiled exchange along dim 0.

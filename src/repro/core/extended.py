@@ -52,6 +52,7 @@ __all__ = [
     "Handle",
     "PutHandle",
     "GetHandle",
+    "GetvHandle",
     "AckHandle",
     "AlreadyWaitedError",
 ]
@@ -148,6 +149,37 @@ class GetHandle(Handle):
 
     def _complete(self) -> jax.Array:
         return self._reply
+
+
+class GetvHandle(Handle):
+    """In-flight vectored ``get_nbv`` (engine multi-get): the request leg
+    shipped every offset in one vectored transport and the reply leg —
+    all fetched slices packed into one wire message — is in flight;
+    :meth:`complete` waits the reply :class:`~repro.core.engine.Pending`
+    and returns the ``(m, size)`` stack of fetched vectors.
+
+    ``pred`` gates the fetch SPMD-conditionally: every rank traces both
+    legs (the static schedule), but a rank that initiated with
+    ``pred=False`` completes to zeros — the vector analogue of the
+    cleared arrival flag of a pred-gated put."""
+
+    op = "getv"
+
+    def __init__(self, reply, m: int, size: int, pred: jax.Array):
+        super().__init__()
+        self._reply = reply  # Pending | jax.Array
+        self._m = m
+        self._size = size
+        self._pred = pred
+
+    def _complete(self) -> jax.Array:
+        data = (
+            self._reply.wait()
+            if hasattr(self._reply, "wait")
+            else self._reply
+        )
+        out = data.reshape(self._m, self._size)
+        return jnp.where(self._pred, out, jnp.zeros_like(out))
 
 
 class AckHandle(Handle):

@@ -28,6 +28,8 @@ GASNet Extended          here (split-phase, see ``repro.core.extended``)
 ======================  ===================================================
 gasnet_put_nb            ``node.put_nb(seg, data, to=..., index=...)``
 gasnet_get_nb            ``node.get_nb(seg, frm=..., index=..., size=...)``
+(vector get, one α)      ``node.get_nbv(seg, frm=..., indices=[...],
+                         size=...)`` — m fetches per request/reply pair
 gasnet_wait_syncnb       ``node.sync(handle)``
 gasnet_try_syncnb        ``node.try_sync(handle)``
 gasnet_wait_syncnb_all   ``node.sync_all()``
@@ -163,6 +165,15 @@ class Node:
             return self.engine.permute(x, to.dst)
         raise TypeError(f"bad pattern {to!r}")
 
+    def _move_nbv(self, xs: Sequence[jax.Array], to: Pattern) -> list:
+        """Vectored split-phase move: one transport initiation for all of
+        ``xs`` (see ``CommEngine.shift_nbv``); returns the Pendings."""
+        if isinstance(to, Shift):
+            return self.engine.shift_nbv(xs, to.k)
+        if isinstance(to, Perm):
+            return self.engine.permute_nbv(xs, to.dst)
+        raise TypeError(f"bad pattern {to!r}")
+
     def put(
         self,
         seg: jax.Array,
@@ -267,6 +278,68 @@ class Node:
         h = extended.GetHandle(self._move(data, inv))
         self._outstanding.append(h)
         return h
+
+    def get_nbv(
+        self,
+        seg: jax.Array,
+        *,
+        frm: Pattern = Shift(1),
+        indices: jax.Array | Sequence[int],
+        size: int = 1,
+        pred: jax.Array | bool | None = None,
+    ) -> extended.GetvHandle:
+        """Initiate a vectored non-blocking get (``gasnet_get_nbv``): fetch
+        ``m = len(indices)`` slices of ``size`` flat elements each from
+        node ``pattern(me)``'s partition, as ONE request/reply pair.
+
+        Both legs ride the engine's *vectored* transport
+        (``shift_nbv``/``permute_nbv``): the request ships all m offsets
+        in one message, the source slices every window, and the reply
+        packs all m slices into one wire transfer — m gets for one
+        initiation α per direction, instead of m.  Callers batching many
+        fetches (e.g. KV page prefetch) pick the batch size with
+        ``sched.plan_p2p`` on the total byte count.
+
+        ``node.sync(h)`` returns the ``(m, size)`` stack.  ``pred`` gates
+        the fetch SPMD-conditionally: a rank passing ``False`` traces the
+        identical transfers but completes to zeros.
+        """
+        n = self.n_nodes
+        inv = _inverse(frm, n)
+        local = self.local(seg).reshape(-1)
+        idxs = jnp.asarray(indices, jnp.int32).reshape(-1)
+        m = int(idxs.shape[0])
+        if m == 0:
+            raise ValueError("get_nbv needs at least one index")
+        flag = (
+            jnp.ones((), bool) if pred is None else jnp.asarray(pred, bool)
+        )
+        # request leg: all m offsets travel to the source in one message
+        (preq,) = self._move_nbv([idxs], frm)
+        req = preq.wait()
+        # source side: slice every window, pack into one reply payload
+        data = jnp.concatenate(
+            [lax.dynamic_slice(local, (req[j],), (size,)) for j in range(m)]
+        )
+        # reply leg: one vectored transfer back to the requester
+        (prep,) = self._move_nbv([data], inv)
+        h = extended.GetvHandle(prep, m, size, flag)
+        self._outstanding.append(h)
+        return h
+
+    def get_v(
+        self,
+        seg: jax.Array,
+        *,
+        frm: Pattern = Shift(1),
+        indices: jax.Array | Sequence[int],
+        size: int = 1,
+        pred: jax.Array | bool | None = None,
+    ) -> jax.Array:
+        """Blocking vectored get: ``get_nbv`` + immediate ``sync``."""
+        return self.sync(
+            self.get_nbv(seg, frm=frm, indices=indices, size=size, pred=pred)
+        )
 
     def sync(self, handle: extended.Handle) -> jax.Array:
         """Complete one handle (``gasnet_wait_syncnb``): returns the

@@ -18,12 +18,14 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import flash_attention_bwd as _fab
 from repro.kernels import moe_dispatch as _moe
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ref
 from repro.kernels import rglru as _rglru
 from repro.kernels import ssm_scan as _ssm
 
 __all__ = [
     "attention",
+    "paged_attention",
     "moe_router",
     "moe_dispatch",
     "moe_combine",
@@ -64,6 +66,30 @@ def attention(
             block_q=block_q, block_k=block_k, interpret=interpret,
         )
     return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    impl: str = "ref",
+    interpret: bool = True,
+) -> jax.Array:
+    """Decode attention through a page table (the paged KV pool's compute
+    side): q (B, Hq, D) against (P, T, Hkv, D) physical pages addressed by
+    page_table (B, NP), masked at lengths (B,)."""
+    if impl == "pallas":
+        return _pa.paged_attention(
+            q, k_pages, v_pages, page_table, lengths,
+            scale=scale, interpret=interpret,
+        )
+    return ref.paged_attention(
+        q, k_pages, v_pages, page_table, lengths, scale=scale
+    )
 
 
 def moe_router(

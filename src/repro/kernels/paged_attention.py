@@ -1,0 +1,181 @@
+"""Paged decode-attention kernel for TPU: K/V read through a page table.
+
+The serving hot spot once the KV cache is page-granular (the global KV
+pool of ``repro.serving.pool``): each request's cache is a list of
+fixed-size token pages scattered through one physical pool array, and the
+decode step must attend over them *in place* — no dense gather, no
+per-request contiguous copy.
+
+The page table rides the scalar-prefetch lane
+(``pltpu.PrefetchScalarGridSpec``): it is available before the kernel
+body runs, so the K/V ``BlockSpec`` index maps resolve the *physical*
+page for grid step (b, h, p) and the HBM->VMEM pipeline DMAs exactly the
+pages the request owns — the hardware analogue of the pool's one-sided
+``get_nbv`` page fetch, one level down the memory hierarchy.
+
+Online-softmax accumulation over the (sequential, innermost) logical-page
+grid dimension, exactly like ``flash_attention``; GQA is resolved in the
+index maps (one KV head's pages serve its whole query group).  Positions
+past ``lengths[b]`` are masked, so padded page-table entries may point at
+any physical page.
+
+Oracle: ``repro.kernels.ref.paged_attention``.  Validated under interpret
+mode; on real TPUs pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+__all__ = ["paged_attention"]
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(
+    table_ref,  # scalar prefetch: (B * NP,) physical page ids
+    len_ref,  # scalar prefetch: (B,) live lengths
+    q_ref,  # (1, group, D)
+    k_ref,  # (1, T, 1, D) — the physical page picked by the index map
+    v_ref,  # (1, T, 1, D)
+    o_ref,  # (1, group, D)
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    page_tokens: int,
+    n_pages: int,
+):
+    del table_ref  # consumed by the index maps
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (T, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)  # (T, D)
+
+    s = lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (G, T)
+    kpos = p * page_tokens + lax.broadcasted_iota(
+        jnp.int32, s.shape, dimension=1
+    )
+    mask = kpos < len_ref[b]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, 0]
+    l_prev = l_scr[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    pexp = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + pexp.sum(axis=-1)
+    acc = acc_scr[...] * alpha[:, None] + lax.dot_general(
+        pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    m_scr[:, 0] = m_new
+    l_scr[:, 0] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(p == n_pages - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "interpret")
+)
+def paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Decode attention over a paged KV pool.
+
+    Args:
+      q: (B, Hq, D) — one query token per request (decode step).
+      k_pages, v_pages: (P, T, Hkv, D) — the physical page pool.
+      page_table: (B, NP) int32 — physical page id of request b's logical
+        page p; entries at or past ``ceil(lengths[b] / T)`` are masked and
+        may hold any valid physical id.
+      lengths: (B,) int32 — live cache positions per request.
+    Returns:
+      (B, Hq, D) in q.dtype.
+    """
+    B, Hq, D = q.shape
+    P, T, Hkv, Dk = k_pages.shape
+    if Dk != D:
+        raise ValueError(f"head_dim mismatch: q has {D}, pages have {Dk}")
+    if k_pages.shape != v_pages.shape:
+        raise ValueError(
+            f"k_pages {k_pages.shape} != v_pages {v_pages.shape}"
+        )
+    if Hq % Hkv != 0:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    if page_table.shape[0] != B or lengths.shape != (B,):
+        raise ValueError("page_table/lengths batch mismatch")
+    group = Hq // Hkv
+    NP = page_table.shape[1]
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+
+    kernel = functools.partial(
+        _pa_kernel, scale=scale, page_tokens=T, n_pages=NP
+    )
+
+    def kv_map(b, h, p, table, lens):
+        del lens
+        return (table[b * NP + p], 0, h, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hkv, NP),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, group, D), lambda b, h, p, table, lens: (b, h, 0)
+                ),
+                pl.BlockSpec((1, T, 1, D), kv_map),
+                pl.BlockSpec((1, T, 1, D), kv_map),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, group, D), lambda b, h, p, table, lens: (b, h, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=compat.tpu_interpret(interpret),
+        name="paged_attention_decode",
+    )(page_table.reshape(-1).astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)
+    return out

@@ -23,6 +23,7 @@ __all__ = [
     "all_reduce",
     "all_to_all",
     "attention",
+    "paged_attention",
     "route_topk",
     "selective_scan",
     "gated_linear_scan",
@@ -113,6 +114,50 @@ def attention(
     out = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
     out = jnp.where(any_visible, out, 0.0)
     return out.astype(q.dtype)
+
+
+def paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Decode attention reading K/V through a page table (unfused oracle).
+
+    q: (B, Hq, D) — one query token per request.
+    k_pages / v_pages: (P, T, Hkv, D) — the physical page pool: P pages of
+      T tokens each (the KV pool's carrier blocks, unflattened).
+    page_table: (B, NP) int32 — request b's logical page p lives in
+      physical page ``page_table[b, p]``; entries past the live length may
+      point anywhere (they are masked).
+    lengths: (B,) int32 — number of live cache positions per request.
+    """
+    B, Hq, D = q.shape
+    _, T, Hkv, _ = k_pages.shape
+    NP = page_table.shape[1]
+    S = NP * T
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+    # gather: (B, NP, T, Hkv, D) -> (B, Hkv, S, D)
+    kd = jnp.moveaxis(k_pages[page_table].reshape(B, S, Hkv, D), 1, 2)
+    vd = jnp.moveaxis(v_pages[page_table].reshape(B, S, Hkv, D), 1, 2)
+    kx = jnp.repeat(kd, group, axis=1)  # (B, Hq, S, D)
+    vx = jnp.repeat(vd, group, axis=1)
+    s = jnp.einsum(
+        "bhd,bhsd->bhs",
+        q.astype(jnp.float32) * scale,
+        kx.astype(jnp.float32),
+    )
+    valid = jnp.arange(S)[None, :] < lengths[:, None]  # (B, S)
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", p, vx.astype(jnp.float32))
+    any_visible = valid.any(axis=-1)[:, None, None]
+    return jnp.where(any_visible, out, 0.0).astype(q.dtype)
 
 
 # --------------------------------------------------------------------------- #

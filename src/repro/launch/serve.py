@@ -17,7 +17,10 @@ Roles (``--role``):
   and an AM request/reply control plane (``repro.serving.disagg``).
   Needs >= 2 host devices (set ``XLA_FLAGS`` before JAX imports).
 - ``decode`` — the colocated path: one node prefills and decodes
-  (:class:`Server` continuous batching, unchanged).
+  (:class:`Server` continuous batching, unchanged).  With ``--paged`` the
+  KV cache lives in the global paged pool (:class:`PagedServer`): pages
+  allocated and freed per admitted request, prompt prefixes shared by
+  page table, token-identical to the dense server.
 - ``prefill`` — the prefill pool alone: computes prefills and reports KV
   blocks/s, the feeder-side capacity number.
 
@@ -137,9 +140,20 @@ class Server:
 
     def _retire(self, slot: int) -> None:
         req = self.active[slot]
+        if req is None:  # already retired this step (eos at the cache cap)
+            return
         req.t_done = time.monotonic()
         self.finished.append(req)
         self.active[slot] = None
+        self._release(req)
+
+    # -- paged-pool hooks (no-ops for the dense server) ----------------- #
+    def _post_decode(self, live: List[int], written: Dict[int, int]) -> None:
+        """Called after one decode step, before retirement: ``written``
+        maps each live row to the cache position the step wrote."""
+
+    def _release(self, req: Request) -> None:
+        """Called when a request leaves its decode row."""
 
     # ------------------------------------------------------------------ #
     def step(self) -> int:
@@ -156,6 +170,7 @@ class Server:
             self.caches,
         )
         logits = np.asarray(logits)
+        self._post_decode(live, {i: int(self.positions[i]) for i in live})
         for i in live:
             req = self.active[i]
             tok = int(np.argmax(logits[i]))
@@ -188,6 +203,86 @@ class Server:
         }
 
 
+class PagedServer(Server):
+    """Continuous batching over the paged KV pool (``repro.serving.pool``).
+
+    The dense server hands each admitted request a private cache row; the
+    paged server instead allocates fixed-size token *pages* from a
+    refcounted pool per admitted request and frees them when the request
+    retires.  Requests sharing a prompt prefix resolve to the *same
+    physical pages* (copy-on-write protected), so a warm prefix costs no
+    page storage — and, in the disaggregated cluster, no transfer bytes.
+
+    The decode math is byte-identical to the dense server: admission
+    writes the prefilled pages into the pool and reads the decode row
+    back *through the page table*, and every decode step writes the page
+    holding the new token back.  Token parity with :class:`Server` is the
+    correctness bar (asserted in the smoke demo and tests).
+    """
+
+    def __init__(self, model, ctx, params, batch_size: int, cache_len: int,
+                 eos_id: int = -1, greedy: bool = True, seed: int = 0,
+                 page_tokens: int = 8, n_pool_pages: Optional[int] = None):
+        super().__init__(model, ctx, params, batch_size, cache_len,
+                         eos_id=eos_id, greedy=greedy, seed=seed)
+        from repro.serving.pool import PagedKVStore, PagedLayout
+
+        self.layout = PagedLayout.from_struct(
+            model.kv_block_struct(ctx, prompt_len=4, cache_len=cache_len),
+            cache_len=cache_len, page_tokens=page_tokens,
+        )
+        if n_pool_pages is None:
+            n_pool_pages = (batch_size + 1) * self.layout.n_pages
+        self.store = PagedKVStore(self.layout, n_pool_pages)
+
+    # ------------------------------------------------------------------ #
+    def _admit(self) -> None:
+        while self.queue:
+            if self._free_slot() is None:
+                return
+            # conservative gate: admission may need a full table of pages
+            if self.store.n_free < self.layout.n_pages:
+                return
+            req = self.queue.pop(0)
+            toks = self.jnp.asarray(req.prompt, self.jnp.int32)[None]
+            logits, caches_one = self._prefill_one(
+                self.params, {"inputs": toks}
+            )
+            tok = int(np.argmax(np.asarray(logits)[0]))
+            pages = np.asarray(self.layout.flatten(caches_one))
+            self.store.admit(req.rid, req.prompt, pages)
+            # the decode row is read back THROUGH the page table, so the
+            # pool (not the prefill output) is the source of truth
+            self.admit_prefilled(
+                req, self.store.gather(req.rid),
+                first_token=tok, position=len(req.prompt),
+            )
+
+    # ------------------------------------------------------------------ #
+    def _post_decode(self, live: List[int], written: Dict[int, int]) -> None:
+        """Write each row's dirty page (the one holding the position this
+        step wrote) back into the pool — pages stay canonical, and a page
+        still shared at the prompt boundary is copy-on-write split.  Only
+        that one page is flattened (the per-token hot path must not pay
+        for the whole row)."""
+        for i in live:
+            req = self.active[i]
+            row = self.jax.tree.map(lambda x: x[:, i : i + 1], self.caches)
+            pos = written[i]
+            page_row = self.layout.flatten_page(
+                row, pos // self.layout.page_tokens
+            )
+            self.store.write_token_page(req.rid, pos, np.asarray(page_row))
+
+    def _release(self, req: Request) -> None:
+        self.store.release(req.rid)
+
+    def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
+        stats = super().run_until_drained(max_ticks)
+        stats.update({f"pool_{k}": v for k, v in self.store.stats().items()})
+        return stats
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
@@ -209,6 +304,12 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--paged", action="store_true",
+                    help="KV lives in the global paged pool "
+                         "(repro.serving.pool): pages allocated/freed per "
+                         "request, prompt prefixes shared by page table")
+    ap.add_argument("--page-tokens", type=int, default=8,
+                    help="tokens per KV page (must divide --cache-len)")
     args = ap.parse_args()
 
     if args.role == "both":
@@ -242,7 +343,11 @@ def main() -> None:
     ]
 
     if args.role == "decode":
-        server = Server(model, ctx, params, args.batch, args.cache_len)
+        if args.paged:
+            server = PagedServer(model, ctx, params, args.batch,
+                                 args.cache_len, page_tokens=args.page_tokens)
+        else:
+            server = Server(model, ctx, params, args.batch, args.cache_len)
         for req in reqs:
             server.submit(req)
         stats = server.run_until_drained()
@@ -273,6 +378,7 @@ def main() -> None:
             decode_batch=args.batch, cache_len=args.cache_len,
             prefill_backend=args.prefill_backend,
             decode_backend=args.decode_backend,
+            paged=args.paged, page_tokens=args.page_tokens,
         )
         for req in reqs:
             cluster.submit(req)

@@ -236,6 +236,32 @@ class Model:
         )
         return cache_struct
 
+    def kv_page_struct(
+        self,
+        ctx: RunCtx,
+        cache_len: int,
+        page_tokens: int,
+        batch: int = 1,
+    ) -> Tuple[Any, int]:
+        """Paged variant of :meth:`kv_block_struct`: the abstract pytree of
+        ONE KV *page* (every leaf's token axis cut from ``cache_len`` to
+        ``page_tokens``) plus the page count — the unit the global paged
+        KV pool (``repro.serving.pool``) allocates, refcounts and ships.
+
+        Raises when ``page_tokens`` does not divide ``cache_len`` or a
+        leaf has no unambiguous token axis (such caches cannot be paged).
+        """
+        from repro.serving.pool import PagedLayout
+
+        struct = self.kv_block_struct(
+            ctx, prompt_len=min(4, cache_len), cache_len=cache_len,
+            batch=batch,
+        )
+        layout = PagedLayout.from_struct(
+            struct, cache_len=cache_len, page_tokens=page_tokens
+        )
+        return layout.page_struct(), layout.n_pages
+
     def cache_specs(self, cache_struct: Any, ctx: RunCtx) -> Any:
         """PartitionSpecs for a cache pytree (see sharding rules in DESIGN)."""
         cfg = self.cfg

@@ -3,9 +3,15 @@
 - :mod:`repro.serving.kv` — the KV-cache *data plane*: bit-transparent
   block flattening plus ``sched.plan_p2p``-planned segmented split-phase
   puts between prefill and decode nodes.
+- :mod:`repro.serving.pool` — the **global paged KV pool**: fixed-size
+  token pages in a PGAS segment sharded across the decode ranks, with a
+  functional refcounted free-list allocator, per-request page tables,
+  copy-on-write prefix sharing, and a ``sched.plan_p2p``-planned
+  split-phase vectored page fetch (``Node.get_nbv``).
 - :mod:`repro.serving.disagg` — the cluster: a prefill pool, a decode pool
   running continuous batching unchanged, and an Active-Message
   request/reply *control plane* (dispatch, install acks, completions).
+  ``paged=True`` lands prefilled pages straight into the pool shards.
 """
 
 from repro.serving.kv import (
@@ -15,6 +21,13 @@ from repro.serving.kv import (
     segment_bounds,
     sync_push,
 )
+from repro.serving.pool import (
+    PagedKVStore,
+    PagedLayout,
+    PoolMap,
+    fetch_pages,
+    sync_fetch,
+)
 
 __all__ = [
     "KVLayout",
@@ -22,4 +35,9 @@ __all__ = [
     "push_block",
     "segment_bounds",
     "sync_push",
+    "PagedKVStore",
+    "PagedLayout",
+    "PoolMap",
+    "fetch_pages",
+    "sync_fetch",
 ]

@@ -11,6 +11,16 @@ software/hardware cluster, serving-shaped).  Two planes:
   prefill node's GASNet segment, and pushed into a staging slot of the
   decode node's segment with ``sched.plan_p2p``-planned segmented
   split-phase puts (:func:`~repro.serving.kv.push_block`).
+
+  With ``paged=True`` the decode segments instead hold the **global
+  paged KV pool** (:mod:`repro.serving.pool`): the prefill rank writes
+  fixed-size token *pages* directly into the pool shard of the decode
+  rank — one pred-gated put per page, landing at the exact page slots
+  the (host-side, functional) allocator assigned, with NO dense staging
+  copy in between.  Pages whose prompt-prefix chain is already resident
+  on the target rank are not shipped at all: their puts trace with
+  ``pred=False`` and the new request's page table simply maps the same
+  physical pages (refcounted prefix sharing).
 - **Control plane** — pure Active Messages: a ``kv_ready`` *request*
   (AMShort: request id, slot, origin) rides with the data; the decode
   node's handler records the slot in its inbox and returns an AMShort
@@ -46,8 +56,15 @@ class DisaggCluster:
 
     ``prefill_backend`` / ``decode_backend`` name each pool's engine
     (mixing them yields an ``EngineMap``).  ``n_slots`` is the number of
-    KV staging slots per decode node's segment; ``decode_batch`` the
+    KV staging slots per decode node's segment (in paged mode: in-flight
+    installs per rank — the data lands in pages); ``decode_batch`` the
     continuous-batching width of each decode server.
+
+    ``paged=True`` replaces the dense staging slots with the global paged
+    KV pool: each decode rank's segment is its pool shard
+    (``pages_per_rank`` pages of ``page_tokens`` tokens), prefill ranks
+    put pages straight into their allocator-assigned slots, and
+    prompt-prefix-shared pages are mapped, not moved.
     """
 
     HEADER = 2  # carrier elems prepended to each block: first_token, pos
@@ -69,6 +86,9 @@ class DisaggCluster:
         node_axis: str = "node",
         eos_id: int = -1,
         costs: Optional[Dict[str, Any]] = None,
+        paged: bool = False,
+        page_tokens: int = 8,
+        pages_per_rank: Optional[int] = None,
     ):
         import jax
         import jax.numpy as jnp
@@ -76,6 +96,7 @@ class DisaggCluster:
         from repro.core import am, gasnet, sched
         from repro.compat import shard_map
         from repro.launch.serve import Server
+        from repro.serving import pool as pool_lib
 
         self.jax, self.jnp = jax, jnp
         self.gasnet = gasnet
@@ -88,6 +109,7 @@ class DisaggCluster:
         self.node_axis = node_axis
         self.max_done = decode_batch
         self.costs = costs
+        self.paged = paged
 
         self.roles = mesh_lib.serve_roles(n_prefill, n_decode)
         backends = mesh_lib.role_backends(
@@ -103,15 +125,42 @@ class DisaggCluster:
             am_payload_width=1,
         )
 
-        # ---- KV block layout (static: shapes depend only on cache_len) --
-        self.layout = kv_lib.KVLayout.from_struct(
-            model.kv_block_struct(ctx, prompt_len=4, cache_len=cache_len)
-        )
-        self.block_elems = self.layout.total + self.HEADER
-        self.block_bytes = self.block_elems * 4
-        self.plan = sched.plan_p2p(
-            nbytes=self.block_bytes, engine=self.gas.make_engine(), costs=costs
-        )
+        # ---- KV layout (static: shapes depend only on cache_len) --------
+        if paged:
+            # page-granular pool shards: one per decode rank's segment
+            self.playout = pool_lib.PagedLayout.from_struct(
+                model.kv_block_struct(ctx, prompt_len=4, cache_len=cache_len),
+                cache_len=cache_len,
+                page_tokens=page_tokens,
+            )
+            self.pages_per_rank = pages_per_rank or (
+                (decode_batch + n_slots) * self.playout.n_pages
+            )
+            self.block_elems = self.playout.n_pages * self.playout.page_elems
+            self.block_bytes = self.block_elems * 4
+            self.seg_elems = self.pages_per_rank * self.playout.page_elems
+            # per-PAGE put plan: each page is its own planned transfer
+            self.plan = sched.plan_p2p(
+                nbytes=self.playout.page_bytes,
+                engine=self.gas.make_engine(),
+                costs=costs,
+            )
+            self.stores = [
+                pool_lib.PagedKVStore(self.playout, self.pages_per_rank)
+                for _ in range(n_decode)
+            ]
+        else:
+            self.layout = kv_lib.KVLayout.from_struct(
+                model.kv_block_struct(ctx, prompt_len=4, cache_len=cache_len)
+            )
+            self.block_elems = self.layout.total + self.HEADER
+            self.block_bytes = self.block_elems * 4
+            self.seg_elems = self.n_slots * self.block_elems
+            self.plan = sched.plan_p2p(
+                nbytes=self.block_bytes,
+                engine=self.gas.make_engine(),
+                costs=costs,
+            )
 
         # ---- AM control plane ------------------------------------------
         handlers = self.gas.handlers
@@ -142,10 +191,12 @@ class DisaggCluster:
         handlers.register("req_done", req_done)
 
         # ---- device-side cluster state (host-managed between ticks) ----
-        self.kvseg = np.zeros((self.n, n_slots * self.block_elems), np.float32)
+        self.kvseg = np.zeros((self.n, self.seg_elems), np.float32)
         self.inbox = np.zeros((self.n, n_slots, 3), np.int32)
         self.acks = np.zeros((self.n, n_slots), np.int32)
         self.done = np.zeros((self.n, 1), np.int32)
+        if paged:
+            self._alias_store_mem()
 
         # ---- pools ------------------------------------------------------
         self.decode_servers = [
@@ -169,6 +220,8 @@ class DisaggCluster:
         self._transfer_fns: Dict[Tuple[int, ...], Any] = {}
         self.kv_transfers = 0
         self.kv_acked = 0
+        self.kv_pages_sent = 0
+        self.kv_pages_shared = 0
         self.decoded_tokens = 0
         self.dropped_am = 0
 
@@ -177,6 +230,16 @@ class DisaggCluster:
     # ------------------------------------------------------------------ #
     def decode_rank(self, d: int) -> int:
         return self.n_prefill + d
+
+    def _alias_store_mem(self) -> None:
+        """Point each decode store's physical page array at its rank's
+        partition of the (freshly consumed) pool segment — the host
+        mirror of the PGAS shard.  Stores never write in disaggregated
+        mode; pages arrive only over the wire."""
+        for d, store in enumerate(self.stores):
+            store.mem = self.kvseg[self.decode_rank(d)].reshape(
+                self.pages_per_rank, self.playout.page_elems
+            )
 
     # ------------------------------------------------------------------ #
     # request intake
@@ -200,11 +263,9 @@ class DisaggCluster:
         spec = P(self.node_axis)
         block = self.block_elems
 
-        def body(kvseg, inbox, acks, done, outflat, meta, done_meta):
-            node = self.gas.make_node()
+        def data_plane_dense(node, kvseg, outflat, meta):
             has = meta[0, 0] > 0
-            rid, slot, dst = meta[0, 1], meta[0, 2], meta[0, 3]
-            # data plane: planned segmented split-phase puts
+            slot = meta[0, 2]
             handles, _ = kv_lib.push_block(
                 node,
                 kvseg,
@@ -214,6 +275,36 @@ class DisaggCluster:
                 pred=has,
                 plan=self.plan,
             )
+            return handles
+
+        def data_plane_paged(node, kvseg, outflat, meta, page_meta):
+            # one pred-gated put per page, landing at the allocator's slot
+            # (page_meta[j] = flat pool offset, send flag); prefix-shared
+            # pages trace with pred=False and ship nothing.
+            has = meta[0, 0] > 0
+            handles = []
+            for j in range(self.playout.n_pages):
+                hs, _ = kv_lib.push_block(
+                    node,
+                    kvseg,
+                    outflat[0, j],
+                    to=gasnet.Perm(perm),
+                    base_index=page_meta[0, j, 0],
+                    pred=has & (page_meta[0, j, 1] > 0),
+                    plan=self.plan,
+                )
+                handles.extend(hs)
+            return handles
+
+        def body(kvseg, inbox, acks, done, outflat, meta, page_meta, done_meta):
+            node = self.gas.make_node()
+            has = meta[0, 0] > 0
+            rid, slot, dst = meta[0, 1], meta[0, 2], meta[0, 3]
+            # data plane: planned segmented split-phase puts
+            if self.paged:
+                handles = data_plane_paged(node, kvseg, outflat, meta, page_meta)
+            else:
+                handles = data_plane_dense(node, kvseg, outflat, meta)
             # control plane rides while the puts are in flight
             ackh = node.am_call(
                 dst,
@@ -245,7 +336,7 @@ class DisaggCluster:
             self.shard_map(
                 body,
                 mesh=self.mesh,
-                in_specs=(spec,) * 7,
+                in_specs=(spec,) * 8,
                 out_specs=(spec,) * 5,
                 check_vma=False,
             )
@@ -256,11 +347,31 @@ class DisaggCluster:
     # ------------------------------------------------------------------ #
     # host scheduler
     # ------------------------------------------------------------------ #
-    def _pick_target(self, taken: set) -> Optional[Tuple[int, int]]:
-        """(decode pool index, staging slot) with capacity, round-robin."""
-        for i in range(self.n_decode):
-            d = (self._rr_decode + i) % self.n_decode
+    def _pick_target(
+        self, taken: set, prompt: Optional[Any] = None
+    ) -> Optional[Tuple[int, int]]:
+        """(decode pool index, staging slot) with capacity, round-robin.
+
+        Paged mode adds two rules: the target rank must hold enough free
+        pool pages for a worst-case (unshared) admission, and ranks are
+        tried in order of *prefix affinity* — the rank whose pool already
+        holds the longest leading run of the prompt's pages wins, so the
+        shared pages are mapped instead of moved."""
+        order = [(self._rr_decode + i) % self.n_decode for i in range(self.n_decode)]
+        if self.paged and prompt is not None:
+            matches = {d: self.stores[d].prefix_match(prompt) for d in order}
+            best = max(matches.values())
+            if best > 0:
+                # hard affinity: only ranks holding the longest resident
+                # prefix qualify — admitting elsewhere would re-ship pages
+                # that already exist.  If they are busy this tick the
+                # request waits one tick (head-of-line, bounded: slots and
+                # pages free as decodes finish).
+                order = [d for d in order if matches[d] == best]
+        for d in order:
             if d in taken:
+                continue
+            if self.paged and self.stores[d].n_free < self.playout.n_pages:
                 continue
             for slot in range(self.n_slots):
                 if slot not in self.staged[d]:
@@ -274,7 +385,7 @@ class DisaggCluster:
         for p in range(self.n_prefill):
             if self.pending_push[p] is not None or not self.queue:
                 continue
-            target = self._pick_target(taken)
+            target = self._pick_target(taken, prompt=self.queue[0].prompt)
             if target is None:
                 return
             d, slot = target
@@ -285,11 +396,21 @@ class DisaggCluster:
             tok = int(np.argmax(np.asarray(logits)[0]))
             req.out.append(tok)
             req.t_first = time.monotonic()
-            header = np.asarray([tok, len(req.prompt)], np.int32).view(np.float32)
-            flat = np.concatenate(
-                [header, np.asarray(self.layout.flatten(caches_one))]
-            )
-            self.pending_push[p] = (req, d, slot, flat)
+            if self.paged:
+                # the pool's allocator assigns the pages NOW (host control
+                # plane); the page payloads go one-sided into those exact
+                # slots of the decode rank's pool shard — no staging copy,
+                # and prefix-shared pages ship nothing at all.
+                pages = np.asarray(self.playout.flatten(caches_one))
+                plan = self.stores[d].plan_admit(req.prompt)
+                self.stores[d].commit(req.rid, plan)
+                self.pending_push[p] = (req, d, slot, pages, plan)
+            else:
+                header = np.asarray([tok, len(req.prompt)], np.int32).view(np.float32)
+                flat = np.concatenate(
+                    [header, np.asarray(self.layout.flatten(caches_one))]
+                )
+                self.pending_push[p] = (req, d, slot, flat, None)
             self.staged[d][slot] = req.rid
             taken.add(d)
 
@@ -303,16 +424,34 @@ class DisaggCluster:
         ]
         if not pushes and not self._done_queue:
             return None
-        edges = {p: self.decode_rank(d) for p, (_, d, _, _) in pushes}
+        edges = {p: self.decode_rank(d) for p, (_, d, _, _, _) in pushes}
         perm = kv_lib.handoff_permutation(self.n, edges)
-        outflat = np.zeros((self.n, self.block_elems), np.float32)
+        if self.paged:
+            outflat = np.zeros(
+                (self.n, self.playout.n_pages, self.playout.page_elems),
+                np.float32,
+            )
+            page_meta = np.zeros((self.n, self.playout.n_pages, 2), np.int32)
+        else:
+            outflat = np.zeros((self.n, self.block_elems), np.float32)
+            page_meta = np.zeros((self.n, 1, 2), np.int32)
         meta = np.zeros((self.n, 4), np.int32)
-        for p, (req, d, slot, flat) in pushes:
+        for p, (req, d, slot, flat, aplan) in pushes:
             outflat[p] = flat
             meta[p] = (1, req.rid, slot, self.decode_rank(d))
+            if self.paged:
+                for j, (page_id, fresh) in enumerate(zip(aplan.table, aplan.fresh)):
+                    page_meta[p, j] = (
+                        page_id * self.playout.page_elems,
+                        1 if fresh else 0,
+                    )
             if not getattr(req, "_push_counted", False):
                 req._push_counted = True
                 self.kv_transfers += 1
+                if self.paged:
+                    n_fresh = sum(aplan.fresh)
+                    self.kv_pages_sent += n_fresh
+                    self.kv_pages_shared += self.playout.n_pages - n_fresh
         done_meta = np.zeros((self.n, self.max_done, 2), np.int32)
         per_rank_counts = [0] * self.n
         leftover: List[Tuple[int, int, int]] = []
@@ -327,7 +466,14 @@ class DisaggCluster:
         self._done_queue = leftover
         fn = self._transfer_fn(perm)
         return fn(
-            self.kvseg, self.inbox, self.acks, self.done, outflat, meta, done_meta
+            self.kvseg,
+            self.inbox,
+            self.acks,
+            self.done,
+            outflat,
+            meta,
+            page_meta,
+            done_meta,
         )
 
     def _decode_step(self) -> None:
@@ -340,6 +486,10 @@ class DisaggCluster:
             self._finished_seen[d] = len(server.finished)
             for req in fresh:
                 self.finished.append(req)
+                if self.paged:
+                    # drop the request's page references; prefix pages
+                    # shared with live requests stay resident
+                    self.stores[d].release(req.rid)
                 origin = getattr(req, "origin_rank", 0)
                 self._done_queue.append((d, req.rid + 1, origin))
 
@@ -348,12 +498,14 @@ class DisaggCluster:
         # scheduler clears inbox flags after installs
         kvseg, inbox, acks, done, dropped = (np.array(r) for r in results)
         self.kvseg, self.inbox, self.acks, self.done = kvseg, inbox, acks, done
+        if self.paged:
+            self._alias_store_mem()  # fresh host mirror of the pool shards
         self.dropped_am += int(dropped.sum())
         # prefill side: retire acknowledged pushes
         for p, push in enumerate(self.pending_push):
             if push is None:
                 continue
-            req, d, slot, _ = push
+            req, d, slot, _, _ = push
             if int(self.acks[p, slot]) == req.rid + 1:
                 self.kv_acked += 1
                 req.origin_rank = p
@@ -374,6 +526,17 @@ class DisaggCluster:
                     del self.staged[d][slot]
 
     def _install(self, server, rank: int, slot: int, req) -> bool:
+        if self.paged:
+            # read the request's cache back THROUGH its page table: the
+            # pool shard (not any staging copy) is the source of truth
+            d = rank - self.n_prefill
+            caches_one = self.stores[d].gather(req.rid)
+            return server.admit_prefilled(
+                req,
+                caches_one,
+                first_token=req.out[0],
+                position=len(req.prompt),
+            )
         block = self.kvseg[
             rank, slot * self.block_elems : (slot + 1) * self.block_elems
         ]
@@ -418,7 +581,11 @@ class DisaggCluster:
         dt = time.monotonic() - t0
         lat = [r.t_done - r.t_enqueue for r in self.finished]
         ttft = [r.t_first - r.t_enqueue for r in self.finished]
-        return {
+        if self.paged:
+            kv_bytes = self.kv_pages_sent * self.playout.page_bytes
+        else:
+            kv_bytes = self.kv_transfers * self.block_bytes
+        stats = {
             "requests": len(self.finished),
             "decoded_tokens": self.decoded_tokens,
             "wall_s": dt,
@@ -429,10 +596,27 @@ class DisaggCluster:
             "p50_ttft_s": float(np.median(ttft)) if ttft else 0.0,
             "kv_transfers": self.kv_transfers,
             "kv_acked": self.kv_acked,
-            "kv_bytes": self.kv_transfers * self.block_bytes,
-            "kv_bytes_per_s": self.kv_transfers * self.block_bytes / dt if dt else 0.0,
+            "kv_bytes": kv_bytes,
+            "kv_bytes_per_s": kv_bytes / dt if dt else 0.0,
             "kv_block_bytes": self.block_bytes,
             "kv_plan": self.plan.describe(),
             "completions_notified": int(self.done[: self.n_prefill].sum()),
             "am_dropped": self.dropped_am,
         }
+        if self.paged:
+            # hit rate over SHAREABLE pages only (full prompt pages — the
+            # store's counters); tail pages can never be shared and would
+            # dilute the number
+            hits = sum(s.prefix_hits for s in self.stores)
+            misses = sum(s.prefix_misses for s in self.stores)
+            stats.update({
+                "paged": True,
+                "page_tokens": self.playout.page_tokens,
+                "page_bytes": self.playout.page_bytes,
+                "pages_per_rank": self.pages_per_rank,
+                "kv_pages_sent": self.kv_pages_sent,
+                "kv_pages_shared": self.kv_pages_shared,
+                "prefix_hit_rate": (hits / (hits + misses) if hits + misses else 0.0),
+                "pool_free_pages": sum(s.n_free for s in self.stores),
+            })
+        return stats

@@ -37,6 +37,8 @@ from repro.core import sched
 __all__ = [
     "KVLayout",
     "LeafSpec",
+    "carrier_cast",
+    "carrier_uncast",
     "segment_bounds",
     "push_block",
     "sync_push",
@@ -54,9 +56,9 @@ class LeafSpec:
     size: int
 
 
-def _to_carrier(x: jax.Array) -> jax.Array:
-    """Flatten one leaf into the float32 carrier, bit-transparently."""
-    x = x.reshape(-1)
+def carrier_cast(x: jax.Array) -> jax.Array:
+    """Bit-transparent elementwise cast of one leaf into the float32
+    carrier (shape-preserving; the paged layout slices before flattening)."""
     if x.dtype == jnp.float32:
         return x
     if x.dtype in (jnp.int32, jnp.uint32):
@@ -70,21 +72,27 @@ def _to_carrier(x: jax.Array) -> jax.Array:
     raise TypeError(f"unsupported KV leaf dtype {x.dtype}")
 
 
-def _from_carrier(flat: jax.Array, spec: LeafSpec) -> jax.Array:
-    dtype = jnp.dtype(spec.dtype)
+def carrier_uncast(flat: jax.Array, dtype: Any) -> jax.Array:
+    """Inverse of :func:`carrier_cast` (shape-preserving)."""
+    dtype = jnp.dtype(dtype)
     if dtype == jnp.float32:
-        out = flat
-    elif dtype in (jnp.int32, jnp.uint32):
-        out = lax.bitcast_convert_type(flat, jnp.int32).astype(dtype)
-    elif dtype in (jnp.int8, jnp.int16, jnp.uint8, jnp.uint16):
-        out = lax.bitcast_convert_type(flat, jnp.int32).astype(dtype)
-    elif dtype == jnp.bool_:
-        out = flat != 0.0
-    elif jnp.issubdtype(dtype, jnp.floating):
-        out = flat.astype(dtype)
-    else:
-        raise TypeError(f"unsupported KV leaf dtype {dtype}")
-    return out.reshape(spec.shape)
+        return flat
+    if dtype in (jnp.int8, jnp.int16, jnp.int32, jnp.uint8, jnp.uint16, jnp.uint32):
+        return lax.bitcast_convert_type(flat, jnp.int32).astype(dtype)
+    if dtype == jnp.bool_:
+        return flat != 0.0
+    if jnp.issubdtype(dtype, jnp.floating):
+        return flat.astype(dtype)
+    raise TypeError(f"unsupported KV leaf dtype {dtype}")
+
+
+def _to_carrier(x: jax.Array) -> jax.Array:
+    """Flatten one leaf into the float32 carrier, bit-transparently."""
+    return carrier_cast(x).reshape(-1)
+
+
+def _from_carrier(flat: jax.Array, spec: LeafSpec) -> jax.Array:
+    return carrier_uncast(flat, spec.dtype).reshape(spec.shape)
 
 
 class KVLayout:

@@ -1,0 +1,593 @@
+"""Global paged KV pool: a PGAS page allocator for prefix-shared serving.
+
+PR 3 shipped KV caches between prefill and decode ranks as opaque dense
+blocks.  This module applies the paper's addressing model — every node
+reads and writes one partitioned global address space with one-sided
+operations — to the hottest serving data structure: the KV cache becomes
+a pool of fixed-size token *pages* living in a GASNet segment sharded
+across the decode ranks, and requests hold *page tables* instead of
+memory.
+
+Four layers, host-side state functional throughout:
+
+1. :class:`PagedLayout` — the carrier format: cut a request cache's token
+   axis (``cache_len``) into ``n_pages`` pages of ``page_tokens`` each;
+   every page is one contiguous float32 carrier vector (``page_elems``),
+   bit-transparent like :class:`~repro.serving.kv.KVLayout` (int leaves
+   bitcast, half floats widened exactly).
+2. The **functional free-list allocator** — :class:`PoolState` is an
+   immutable value; :func:`alloc` / :func:`free` / :func:`fork` /
+   :func:`writable` return new states.  Pages are refcounted:
+   :func:`fork` shares a page between requests (prefix sharing),
+   :func:`free` returns it to the free list only when the last reference
+   drops, and :func:`writable` is copy-on-write — a shared page is never
+   mutated in place.
+3. :class:`PagedKVStore` — one rank's pool shard: the physical page
+   memory (``mem`` aliases the rank's GASNet segment in the
+   disaggregated cluster), the allocator state, per-request page tables,
+   and the prompt-prefix index that maps a full-page token chain to the
+   resident physical page, so two requests with a common prompt prefix
+   resolve to the *same physical pages* and only the divergent tail is
+   ever transferred or stored.
+4. :class:`PoolMap` + :func:`fetch_pages` — the global address space:
+   global page ``g`` lives at flat offset ``local(g) * page_elems`` of
+   rank ``owner(g)``'s segment, and a decode rank prefetches remote
+   pages with the vectored split-phase get (``Node.get_nbv`` — one
+   request/reply pair per planned batch, batch count from
+   ``sched.plan_p2p``), overlapping the fetch with its attention step.
+
+The compute side is ``repro.kernels.paged_attention``: decode attention
+reading K/V directly through the page table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sched
+from repro.serving import kv as kv_lib
+
+__all__ = [
+    "PagedLayout",
+    "PageLeafSpec",
+    "token_axis",
+    "PoolState",
+    "PoolError",
+    "OutOfPagesError",
+    "DoubleFreeError",
+    "make_pool",
+    "alloc",
+    "free",
+    "fork",
+    "writable",
+    "check_pool",
+    "AdmitPlan",
+    "PagedKVStore",
+    "PoolMap",
+    "fetch_pages",
+    "sync_fetch",
+]
+
+
+# --------------------------------------------------------------------------- #
+# 1. Page-granular carrier layout
+# --------------------------------------------------------------------------- #
+def token_axis(shape: Sequence[int], cache_len: int) -> int:
+    """Index of the token (cache) axis in one cache-leaf shape: the unique
+    axis of size ``cache_len``.  Raises when the leaf has no such axis or
+    the size is ambiguous — paging needs an unambiguous cut."""
+    hits = [i for i, d in enumerate(shape) if int(d) == int(cache_len)]
+    if len(hits) != 1:
+        raise ValueError(
+            f"cannot locate the token axis of cache leaf {tuple(shape)}: "
+            f"{len(hits)} axes of size {cache_len}"
+        )
+    return hits[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class PageLeafSpec:
+    """One cache leaf's per-page slice of the carrier page."""
+
+    shape: Tuple[int, ...]  # full leaf shape
+    dtype: Any
+    axis: int  # token axis
+    offset: int  # start column inside the carrier page
+    size: int  # carrier elements per page for this leaf
+
+
+class PagedLayout:
+    """Static page layout of one request's KV cache.
+
+    Built once from an abstract cache pytree (``Model.kv_block_struct``);
+    :meth:`flatten` / :meth:`unflatten` round-trip any concrete cache of
+    that structure through an ``(n_pages, page_elems)`` float32 carrier
+    array, bit-exactly.  Page ``p`` carries token positions
+    ``[p * page_tokens, (p + 1) * page_tokens)`` of every leaf.
+    """
+
+    def __init__(
+        self,
+        treedef: Any,
+        leaves: List[PageLeafSpec],
+        cache_len: int,
+        page_tokens: int,
+    ):
+        self.treedef = treedef
+        self.leaves = leaves
+        self.cache_len = int(cache_len)
+        self.page_tokens = int(page_tokens)
+        self.n_pages = self.cache_len // self.page_tokens
+        self.page_elems = sum(leaf.size for leaf in leaves)
+
+    @classmethod
+    def from_struct(
+        cls, struct: Any, *, cache_len: int, page_tokens: int
+    ) -> "PagedLayout":
+        if cache_len % page_tokens:
+            raise ValueError(
+                f"cache_len={cache_len} not a multiple of "
+                f"page_tokens={page_tokens}"
+            )
+        leaf_structs, treedef = jax.tree_util.tree_flatten(struct)
+        leaves: List[PageLeafSpec] = []
+        offset = 0
+        for s in leaf_structs:
+            ax = token_axis(s.shape, cache_len)
+            size = 1
+            for i, d in enumerate(s.shape):
+                size *= int(page_tokens) if i == ax else int(d)
+            leaves.append(
+                PageLeafSpec(
+                    shape=tuple(int(d) for d in s.shape),
+                    dtype=jnp.dtype(s.dtype),
+                    axis=ax,
+                    offset=offset,
+                    size=size,
+                )
+            )
+            offset += size
+        return cls(treedef, leaves, cache_len, page_tokens)
+
+    @property
+    def page_bytes(self) -> int:
+        return self.page_elems * 4  # float32 carrier
+
+    def flatten(self, caches: Any) -> jax.Array:
+        """Cache pytree -> (n_pages, page_elems) float32 carrier pages."""
+        vals = jax.tree_util.tree_leaves(caches)
+        if len(vals) != len(self.leaves):
+            raise ValueError(
+                f"cache has {len(vals)} leaves, layout expects "
+                f"{len(self.leaves)}"
+            )
+        cols = []
+        for v, leaf in zip(vals, self.leaves):
+            if tuple(v.shape) != leaf.shape:
+                raise ValueError(f"cache leaf {tuple(v.shape)} != layout {leaf.shape}")
+            c = jnp.moveaxis(kv_lib.carrier_cast(v), leaf.axis, 0)
+            cols.append(c.reshape(self.n_pages, leaf.size))
+        return jnp.concatenate(cols, axis=1)
+
+    def flatten_page(self, caches: Any, page: int) -> jax.Array:
+        """One page's carrier row (``(page_elems,)``) without flattening
+        the rest of the cache — the per-decode-step writeback path only
+        touches the page holding the new token."""
+        if not (0 <= page < self.n_pages):
+            raise ValueError(f"page {page} outside [0, {self.n_pages})")
+        vals = jax.tree_util.tree_leaves(caches)
+        lo = page * self.page_tokens
+        cols = []
+        for v, leaf in zip(vals, self.leaves):
+            if tuple(v.shape) != leaf.shape:
+                raise ValueError(f"cache leaf {tuple(v.shape)} != layout {leaf.shape}")
+            window = jax.lax.slice_in_dim(v, lo, lo + self.page_tokens, axis=leaf.axis)
+            c = jnp.moveaxis(kv_lib.carrier_cast(window), leaf.axis, 0)
+            cols.append(c.reshape(leaf.size))
+        return jnp.concatenate(cols)
+
+    def page_struct(self) -> Any:
+        """Abstract pytree of ONE page: every leaf's token axis cut from
+        ``cache_len`` to ``page_tokens`` (the unit the pool allocates)."""
+        vals = [
+            jax.ShapeDtypeStruct(
+                tuple(
+                    self.page_tokens if i == leaf.axis else d
+                    for i, d in enumerate(leaf.shape)
+                ),
+                leaf.dtype,
+            )
+            for leaf in self.leaves
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, vals)
+
+    def unflatten(self, pages: jax.Array) -> Any:
+        """(n_pages, page_elems) carrier pages -> cache pytree."""
+        pages = jnp.asarray(pages)
+        if pages.shape != (self.n_pages, self.page_elems):
+            raise ValueError(
+                f"pages {pages.shape} != layout "
+                f"({self.n_pages}, {self.page_elems})"
+            )
+        vals = []
+        for leaf in self.leaves:
+            col = pages[:, leaf.offset : leaf.offset + leaf.size]
+            moved = (
+                (self.cache_len,)
+                + leaf.shape[: leaf.axis]
+                + leaf.shape[leaf.axis + 1 :]
+            )
+            x = jnp.moveaxis(col.reshape(moved), 0, leaf.axis)
+            vals.append(kv_lib.carrier_uncast(x, leaf.dtype))
+        return jax.tree_util.tree_unflatten(self.treedef, vals)
+
+
+# --------------------------------------------------------------------------- #
+# 2. Functional page allocator (refcounted free list)
+# --------------------------------------------------------------------------- #
+class PoolError(RuntimeError):
+    """Base allocator error."""
+
+
+class OutOfPagesError(PoolError):
+    """The free list is empty (pool oversubscribed)."""
+
+
+class DoubleFreeError(PoolError):
+    """A page with no live references was freed again."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolState:
+    """Immutable allocator state: LIFO free list + per-page refcounts.
+
+    A page is either *free* (refcount 0, on the free list exactly once)
+    or *live* (refcount >= 1, not on the free list) — the invariant
+    :func:`check_pool` asserts and the hypothesis suite hammers.
+    """
+
+    free: Tuple[int, ...]
+    refcnt: Tuple[int, ...]
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.refcnt)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def n_live(self) -> int:
+        return self.n_pages - self.n_free
+
+
+def make_pool(n_pages: int) -> PoolState:
+    if n_pages < 1:
+        raise ValueError(f"need at least one page, got {n_pages}")
+    return PoolState(free=tuple(range(n_pages - 1, -1, -1)), refcnt=(0,) * n_pages)
+
+
+def alloc(state: PoolState, n: int = 1) -> Tuple[PoolState, Tuple[int, ...]]:
+    """Pop ``n`` pages off the free list (refcount 1 each)."""
+    if n > state.n_free:
+        raise OutOfPagesError(
+            f"alloc({n}) with {state.n_free}/{state.n_pages} pages free"
+        )
+    pages = state.free[-n:][::-1] if n else ()
+    refcnt = list(state.refcnt)
+    for p in pages:
+        refcnt[p] = 1
+    return PoolState(state.free[: len(state.free) - n], tuple(refcnt)), pages
+
+
+def fork(state: PoolState, pages: Sequence[int]) -> PoolState:
+    """Add one reference to every page in ``pages`` (prefix sharing: a new
+    request maps the same physical pages)."""
+    refcnt = list(state.refcnt)
+    for p in pages:
+        if refcnt[p] < 1:
+            raise PoolError(f"fork of free page {p}")
+        refcnt[p] += 1
+    return PoolState(state.free, tuple(refcnt))
+
+
+def free(state: PoolState, pages: Sequence[int]) -> PoolState:
+    """Drop one reference per page; pages reaching refcount 0 return to
+    the free list.  Freeing an already-free page raises
+    :class:`DoubleFreeError` (never silently corrupts the list)."""
+    refcnt = list(state.refcnt)
+    free_list = list(state.free)
+    for p in pages:
+        if not (0 <= p < len(refcnt)):
+            raise PoolError(f"free of page {p} outside pool")
+        if refcnt[p] < 1:
+            raise DoubleFreeError(f"double free of page {p}")
+        refcnt[p] -= 1
+        if refcnt[p] == 0:
+            free_list.append(p)
+    return PoolState(tuple(free_list), tuple(refcnt))
+
+
+def writable(state: PoolState, page: int) -> Tuple[PoolState, int, bool]:
+    """Copy-on-write resolve: return ``(state, page', copied)`` where
+    ``page'`` is safe to mutate for one owner.  A privately held page
+    (refcount 1) is returned as-is; a shared page allocates a fresh page
+    and drops one reference on the original — the caller copies the
+    payload ``mem[page] -> mem[page']``."""
+    if state.refcnt[page] < 1:
+        raise PoolError(f"writable() on free page {page}")
+    if state.refcnt[page] == 1:
+        return state, page, False
+    state, (fresh,) = alloc(state, 1)
+    state = free(state, (page,))
+    return state, fresh, True
+
+
+def check_pool(state: PoolState) -> None:
+    """Assert the allocator invariant (used by the property tests)."""
+    if len(set(state.free)) != len(state.free):
+        raise AssertionError(f"duplicate pages on free list: {state.free}")
+    for p in state.free:
+        if state.refcnt[p] != 0:
+            raise AssertionError(f"page {p} free with refcount {state.refcnt[p]}")
+    live = sum(1 for c in state.refcnt if c > 0)
+    if live + state.n_free != state.n_pages:
+        raise AssertionError(
+            f"{live} live + {state.n_free} free != {state.n_pages} pages"
+        )
+
+
+# --------------------------------------------------------------------------- #
+# 3. One rank's pool shard: memory + tables + prefix index
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AdmitPlan:
+    """Placement decision for one request: its page table, which pages are
+    fresh (must be written/transferred) vs prefix-shared (already
+    resident — the transfer ships them ``pred=False``)."""
+
+    table: Tuple[int, ...]
+    fresh: Tuple[bool, ...]
+
+    @property
+    def shared(self) -> Tuple[int, ...]:
+        return tuple(p for p, f in zip(self.table, self.fresh) if not f)
+
+
+class PagedKVStore:
+    """One decode rank's shard of the global KV pool.
+
+    ``mem`` is the rank's physical page array ``(n_pages, page_elems)``
+    float32 — the host mirror of the rank's GASNet segment (the
+    disaggregated cluster transfers pages into the segment one-sided and
+    refreshes ``mem`` from it each tick; the colocated server writes it
+    directly).  All bookkeeping (allocator state, page tables, prefix
+    index) is host-side and functional at the allocator layer.
+
+    Prefix sharing: a *full* prompt page (every one of its
+    ``page_tokens`` positions covered by the prompt) is keyed by the
+    token chain from position 0 through its last token.  ``admit`` of a
+    prompt whose leading chain matches resident keys maps those physical
+    pages into the new request's table (``fork``) instead of allocating;
+    only the tail is fresh.  Decode never mutates a shared page — the
+    first write past the prompt lands in the request's own tail page, and
+    :func:`writable` copy-on-write protects the boundary page when the
+    prompt length is not page-aligned.
+    """
+
+    def __init__(self, layout: PagedLayout, n_pages: int):
+        self.layout = layout
+        self.state = make_pool(n_pages)
+        self.mem = np.zeros((n_pages, layout.page_elems), np.float32)
+        self.tables: Dict[int, Tuple[int, ...]] = {}
+        # full-page token chain -> resident physical page
+        self._prefix: Dict[Tuple[int, ...], int] = {}
+        self._page_key: Dict[int, Tuple[int, ...]] = {}
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+
+    # ------------------------------------------------------------------ #
+    def plan_admit(self, prompt: Sequence[int]) -> AdmitPlan:
+        """Allocate a page table for one request, prefix-sharing resident
+        full prompt pages.  Pure allocator mutation; the payload write (or
+        one-sided transfer) of the fresh pages happens separately."""
+        pt = self.layout.page_tokens
+        n_shareable = len(prompt) // pt  # only fully-covered prompt pages
+        table: List[int] = []
+        fresh: List[bool] = []
+        prompt = tuple(int(t) for t in prompt)
+        chain_live = True
+        for p in range(self.layout.n_pages):
+            page_id = None
+            if chain_live and p < n_shareable:
+                page_id = self._prefix.get(prompt[: (p + 1) * pt])
+            if page_id is not None:
+                self.state = fork(self.state, (page_id,))
+                table.append(page_id)
+                fresh.append(False)
+                self.prefix_hits += 1
+            else:
+                chain_live = False  # sharing must be a leading run
+                self.state, (new_page,) = alloc(self.state, 1)
+                table.append(new_page)
+                fresh.append(True)
+                if p < n_shareable:
+                    key = prompt[: (p + 1) * pt]
+                    self._prefix[key] = new_page
+                    self._page_key[new_page] = key
+                    self.prefix_misses += 1
+        return AdmitPlan(table=tuple(table), fresh=tuple(fresh))
+
+    def commit(self, rid: int, plan: AdmitPlan) -> None:
+        self.tables[rid] = plan.table
+
+    def write_pages(self, plan: AdmitPlan, pages: Any) -> None:
+        """Host write of the fresh pages (the colocated path; the
+        disaggregated path lands them one-sided into the segment)."""
+        pages = np.asarray(pages, np.float32)
+        for p, (page_id, is_fresh) in enumerate(zip(plan.table, plan.fresh)):
+            if is_fresh:
+                self.mem[page_id] = pages[p]
+
+    def admit(self, rid: int, prompt: Sequence[int], pages: Any) -> AdmitPlan:
+        """plan + write + commit in one call (colocated server path)."""
+        plan = self.plan_admit(prompt)
+        self.write_pages(plan, pages)
+        self.commit(rid, plan)
+        return plan
+
+    def prefix_match(self, prompt: Sequence[int]) -> int:
+        """Number of leading full prompt pages already resident (the
+        prefix-affinity routing signal: admit where the match is longest
+        and those pages ship nothing)."""
+        pt = self.layout.page_tokens
+        prompt = tuple(int(t) for t in prompt)
+        n = 0
+        for p in range(len(prompt) // pt):
+            if self._prefix.get(prompt[: (p + 1) * pt]) is None:
+                break
+            n += 1
+        return n
+
+    # ------------------------------------------------------------------ #
+    def gather(self, rid: int) -> Any:
+        """Read one request's cache back through its page table."""
+        return self.layout.unflatten(self.mem[list(self.tables[rid])])
+
+    def page_table(self, rid: int) -> Tuple[int, ...]:
+        return self.tables[rid]
+
+    def write_token_page(self, rid: int, position: int, page_row: Any) -> int:
+        """Install the page holding ``position`` after a decode step wrote
+        that token.  ``page_row`` must be the page's FULL carrier row
+        (``PagedLayout.flatten_page``).  Copy-on-write: if the page is
+        still shared with another request, the request's table is
+        repointed at a fresh page first (no payload copy needed — the
+        full row lands below).  Returns the physical page written."""
+        table = list(self.tables[rid])
+        p = position // self.layout.page_tokens
+        page_id = table[p]
+        self.state, dst, copied = writable(self.state, page_id)
+        if copied:
+            table[p] = dst
+            self.tables[rid] = tuple(table)
+        # a mutated page no longer matches its prompt chain: drop the key
+        key = self._page_key.pop(dst, None)
+        if key is not None and self._prefix.get(key) == dst:
+            del self._prefix[key]
+        self.mem[dst] = np.asarray(page_row, np.float32)
+        return dst
+
+    def release(self, rid: int) -> None:
+        """Drop one request's references; pages whose last reference drops
+        leave the prefix index with them."""
+        table = self.tables.pop(rid)
+        self.state = free(self.state, table)
+        for page_id in table:
+            if self.state.refcnt[page_id] == 0:
+                key = self._page_key.pop(page_id, None)
+                if key is not None and self._prefix.get(key) == page_id:
+                    del self._prefix[key]
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_free(self) -> int:
+        return self.state.n_free
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "n_pages": self.state.n_pages,
+            "n_free": self.state.n_free,
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+        }
+
+
+# --------------------------------------------------------------------------- #
+# 4. The global address space + split-phase vectored page fetch
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class PoolMap:
+    """Global page addressing over the sharded pool segment: decode rank
+    ``r`` owns local pages ``[0, pages_per_rank)``; global page ``g``
+    lives at flat carrier offset ``local(g) * page_elems`` of rank
+    ``owner(g)``'s partition — a (node, index) global address exactly as
+    in ``core.addrspace``."""
+
+    n_ranks: int
+    pages_per_rank: int
+    page_elems: int
+
+    @property
+    def n_pages(self) -> int:
+        return self.n_ranks * self.pages_per_rank
+
+    def owner(self, g: int) -> int:
+        return int(g) // self.pages_per_rank
+
+    def local(self, g: int) -> int:
+        return int(g) % self.pages_per_rank
+
+    def global_id(self, rank: int, local: int) -> int:
+        return int(rank) * self.pages_per_rank + int(local)
+
+    def offset(self, g) -> Any:
+        """Flat carrier offset of a (possibly traced) global page id in
+        its owner's partition."""
+        return (jnp.asarray(g, jnp.int32) % self.pages_per_rank) * self.page_elems
+
+
+def fetch_pages(
+    node: Any,
+    seg: jax.Array,
+    page_offsets: jax.Array,
+    *,
+    frm: Any,
+    page_elems: int,
+    plan: Optional[sched.CollectivePlan] = None,
+    n_batches: Optional[int] = None,
+    costs: Optional[Dict[str, sched.EngineCost]] = None,
+    pred: jax.Array | bool | None = None,
+) -> Tuple[List[Any], sched.CollectivePlan]:
+    """Initiate the split-phase prefetch of remote KV pages.
+
+    ``page_offsets`` are flat carrier offsets in the source partition
+    (``PoolMap.offset`` of each global page id).  The fetch is issued as
+    vectored gets (``node.get_nbv`` — m offsets per request/reply pair);
+    ``sched.plan_p2p`` on the total byte count picks how many batches to
+    keep in flight, so the wire overlaps the attention step the caller
+    runs before :func:`sync_fetch`.
+
+    Returns ``(handles, plan)``.
+    """
+    offs = jnp.asarray(page_offsets, jnp.int32).reshape(-1)
+    m = int(offs.shape[0])
+    if plan is None:
+        plan = sched.plan_p2p(
+            nbytes=m * page_elems * 4, engine=node.engine, costs=costs
+        )
+    g = int(plan.n_segments if n_batches is None else n_batches)
+    handles = []
+    for start, count in kv_lib.segment_bounds(m, g):
+        handles.append(
+            node.get_nbv(
+                seg,
+                frm=frm,
+                indices=offs[start : start + count],
+                size=page_elems,
+                pred=pred,
+            )
+        )
+    return handles, plan
+
+
+def sync_fetch(node: Any, handles: Sequence[Any]) -> jax.Array:
+    """Drain one prefetch's handles in issue order; returns the
+    ``(n_pages, page_elems)`` carrier stack."""
+    return jnp.concatenate([node.sync(h) for h in handles], axis=0)

@@ -231,6 +231,32 @@ def main() -> None:
         np.testing.assert_allclose(np.asarray(got)[n], (n + 3 - 1) % 8)
     print("nb put/get OK")
 
+    # ---- vectored get (get_nbv): one request/reply pair for m slices -------
+    def prog_nbv(node, seg):
+        # gated fetch: odd ranks trace the same transfers but get zeros
+        h = node.get_nbv(seg, frm=gasnet.Shift(1), indices=[2, 6, 0],
+                         size=2, pred=(node.my_id % 2) == 0)
+        gated = node.sync(h)
+        # ungated fetch via the blocking wrapper
+        allv = node.get_v(seg, frm=gasnet.Shift(3), indices=[4, 0], size=3)
+        return gated[None], allv[None]
+
+    seg_src = ctx.spmd(prog, seg)  # deterministic contents (put suite above)
+    gated, allv = map(
+        np.asarray,
+        ctx.spmd(prog_nbv, seg_src, out_specs=(P("node"), P("node"))),
+    )
+    src_seg = np.asarray(seg_src)
+    for n in range(8):
+        want = np.stack([src_seg[(n + 1) % 8, i : i + 2] for i in (2, 6, 0)])
+        if n % 2 == 0:
+            np.testing.assert_allclose(gated[n], want)
+        else:
+            np.testing.assert_allclose(gated[n], 0.0)
+        want3 = np.stack([src_seg[(n + 3) % 8, i : i + 3] for i in (4, 0)])
+        np.testing.assert_allclose(allv[n], want3)
+    print("vectored get (incl. pred-gated) OK")
+
     def prog_nb_all(node, seg):
         node.put_nb(seg, jnp.full((2,), 1.0, jnp.float32),
                     to=gasnet.Shift(1), index=0)
@@ -271,18 +297,25 @@ def main() -> None:
         seg = node.sync(h)
         g = node.get_nb(seg, frm=gasnet.Shift(1), index=128, size=128)
         got = node.sync(g)
+        # vectored multi-get, gated on even ranks: both engines must agree
+        gv = node.get_nbv(seg, frm=gasnet.Shift(2), indices=[128, 0, 192],
+                          size=64, pred=(node.my_id % 2) == 0)
+        gotv = node.sync(gv)
         e = node.engine
         bc = collectives.broadcast(e, node.local(x), root=2)
         ex = collectives.exchange(e, node.local(x))
-        return seg, got[None], bc[None], ex[None]
+        return seg, got[None], gotv[None], bc[None], ex[None]
 
-    specs = (P("node"),) * 4
+    specs = (P("node"),) * 5
     sw = ctx.spmd(prog_ext, segk, xk, out_specs=specs)
     hw = ctx_hw.spmd(prog_ext, segk, xk, out_specs=specs)
-    for name, a, b in zip(("put_nb/sync", "get_nb", "broadcast", "exchange"),
-                          sw, hw):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
-    print("extended engine parity OK")
+    for name, a, b in zip(("put_nb/sync", "get_nb", "get_nbv(pred)",
+                           "broadcast", "exchange"), sw, hw):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-6,
+            err_msg=f"engine parity: {name}",
+        )
+    print("extended engine parity OK (incl. vectored get)")
 
     # ---- heterogeneous EngineMap: mixed sw/hw nodes, same parity suite -----
     # Alternating software (XLA) and hardware (GAScore) ranks in ONE mesh:
@@ -290,8 +323,8 @@ def main() -> None:
     # produce identical results.
     ctx_mix = gasnet.Context(mesh, node_axis="node", backend="xla,gascore")
     mix = ctx_mix.spmd(prog_ext, segk, xk, out_specs=specs)
-    for name, a, b in zip(("put_nb/sync", "get_nb", "broadcast", "exchange"),
-                          sw, mix):
+    for name, a, b in zip(("put_nb/sync", "get_nb", "get_nbv(pred)",
+                           "broadcast", "exchange"), sw, mix):
         np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), rtol=1e-6,
             err_msg=f"mixed-map parity: {name}",

@@ -61,6 +61,76 @@ def test_flash_attention_block_shapes():
 
 
 # --------------------------------------------------------------------------- #
+# paged attention (decode through a page table)
+# --------------------------------------------------------------------------- #
+PA_CASES = [
+    # (B, Hq, Hkv, D, page_tokens, n_pages, dtype)
+    (2, 4, 2, 16, 4, 3, jnp.float32),
+    (1, 2, 2, 8, 8, 2, jnp.float32),
+    (3, 8, 2, 32, 16, 4, jnp.float32),
+    (2, 4, 1, 64, 8, 4, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", PA_CASES, ids=[str(c) for c in PA_CASES])
+def test_paged_attention_vs_oracle(case):
+    B, Hq, Hkv, D, T, NP, dtype = case
+    P = B * NP + 2  # pool bigger than any one request's table
+    q = _rand((B, Hq, D), dtype)
+    kp = _rand((P, T, Hkv, D), dtype)
+    vp = _rand((P, T, Hkv, D), dtype)
+    # scattered physical placement: tables index the pool arbitrarily
+    table = jnp.asarray(
+        RNG.permutation(P)[: B * NP].reshape(B, NP), jnp.int32
+    )
+    lengths = jnp.asarray(RNG.integers(0, NP * T + 1, size=(B,)), jnp.int32)
+    got = ops.paged_attention(q, kp, vp, table, lengths, impl="pallas")
+    want = ref.paged_attention(q, kp, vp, table, lengths)
+    atol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=atol, rtol=atol,
+    )
+
+
+def test_paged_attention_matches_dense_attention():
+    """Contiguous identity table + full length == dense decode attention."""
+    B, Hq, Hkv, D, T, NP = 2, 4, 2, 16, 4, 4
+    S = NP * T
+    q = _rand((B, Hq, D))
+    kd = _rand((B, Hkv, S, D))
+    vd = _rand((B, Hkv, S, D))
+    # pack the dense cache into per-request contiguous pages
+    kp = jnp.moveaxis(kd, 1, 2).reshape(B * NP, T, Hkv, D)
+    vp = jnp.moveaxis(vd, 1, 2).reshape(B * NP, T, Hkv, D)
+    table = jnp.arange(B * NP, dtype=jnp.int32).reshape(B, NP)
+    lengths = jnp.full((B,), S, jnp.int32)
+    got = ops.paged_attention(q, kp, vp, table, lengths, impl="pallas")
+    # dense oracle: non-causal single query over the whole cache
+    want = ref.attention(q[:, :, None, :], kd, vd, causal=False)[:, :, 0]
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_paged_attention_masks_padded_pages():
+    """Padded table entries (aliased to live pages) must not leak."""
+    B, Hq, Hkv, D, T, NP = 1, 2, 1, 8, 4, 3
+    q = _rand((B, Hq, D))
+    kp = _rand((4, T, Hkv, D))
+    vp = _rand((4, T, Hkv, D))
+    lengths = jnp.asarray([5], jnp.int32)  # 2 live pages (partial second)
+    base = jnp.asarray([[0, 1, 2]], jnp.int32)
+    alias = jnp.asarray([[0, 1, 0]], jnp.int32)  # padded entry aliases page 0
+    for impl in ("ref", "pallas"):
+        a = ops.paged_attention(q, kp, vp, base, lengths, impl=impl)
+        b = ops.paged_attention(q, kp, vp, alias, lengths, impl=impl)
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-6, rtol=1e-6
+        )
+
+
+# --------------------------------------------------------------------------- #
 # MoE router
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize(

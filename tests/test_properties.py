@@ -291,6 +291,112 @@ def test_segmented_kv_handoff_bitexact(n, block, n_segments, n_slots, seed):
         np.testing.assert_array_equal(got, want)
 
 
+# --------------------------------------------------------------------------- #
+# paged KV pool: the allocator never double-frees or leaks, and the page
+# layout round-trips any bit pattern (NaNs included) through the carrier
+# --------------------------------------------------------------------------- #
+@SET
+@given(
+    n_pages=st.integers(1, 12),
+    ops=st.lists(
+        st.tuples(st.sampled_from(["alloc", "free", "fork", "cow"]),
+                  st.integers(0, 2**31 - 1)),
+        min_size=0, max_size=40,
+    ),
+)
+def test_pool_allocator_never_leaks_or_double_frees(n_pages, ops):
+    from repro.serving import pool
+
+    state = pool.make_pool(n_pages)
+    refs = []  # live references (page ids with multiplicity == refcount)
+    for op, r in ops:
+        if op == "alloc":
+            k = r % (state.n_free + 1)
+            state, pages = pool.alloc(state, k)
+            assert len(set(pages)) == len(pages)
+            assert all(state.refcnt[p] == 1 for p in pages)
+            refs.extend(pages)
+        elif op == "free" and refs:
+            k = r % len(refs) + 1
+            drop = [refs.pop(r % len(refs)) for _ in range(k)]
+            state = pool.free(state, drop)
+        elif op == "fork" and refs:
+            page = refs[r % len(refs)]
+            state = pool.fork(state, (page,))
+            refs.append(page)
+        elif op == "cow" and refs:
+            i = r % len(refs)
+            if state.refcnt[refs[i]] > 1 and state.n_free == 0:
+                # COW needs a fresh page; the functional state survives
+                # the failed attempt untouched
+                with pytest.raises(pool.OutOfPagesError):
+                    pool.writable(state, refs[i])
+            else:
+                state, fresh, copied = pool.writable(state, refs[i])
+                # the writable page always ends privately held
+                assert state.refcnt[fresh] == 1
+                assert copied == (fresh != refs[i])
+                refs[i] = fresh
+        pool.check_pool(state)
+        assert state.n_free + len(set(refs)) == n_pages
+    # release every remaining reference: the pool must drain exactly
+    state = pool.free(state, refs)
+    pool.check_pool(state)
+    assert state.n_free == n_pages
+    # and the drained pool rejects another free of any page
+    if refs:
+        with pytest.raises(pool.DoubleFreeError):
+            pool.free(state, (refs[0],))
+
+
+@SET
+@given(
+    page_tokens=st.integers(1, 4),
+    n_pages=st.integers(1, 4),
+    layers=st.integers(1, 3),
+    heads=st.integers(1, 3),
+    dh=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_paged_layout_round_trip_bitexact(
+    page_tokens, n_pages, layers, heads, dh, seed
+):
+    """flatten/unflatten of the paged layout is a bit-exact involution for
+    ANY payload — float leaves are fed raw random bit patterns (NaNs and
+    denormals included) and int/bool leaves ride the same carrier."""
+    from repro.serving import pool
+
+    W = page_tokens * n_pages
+    if W == 1:
+        return  # the size-1 batch dims would make the token axis ambiguous
+    # keep the token axis unambiguous: no other dim may equal W
+    layers, heads, dh = (d + 1 if d == W else d for d in (layers, heads, dh))
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(-(2**31), 2**31 - 1, size=(layers, 1, W, heads, dh),
+                        dtype=np.int64).astype(np.int32)
+    caches = {
+        "k": jnp.asarray(bits.view(np.float32)),  # raw bits incl. NaNs
+        "pos": jnp.asarray(
+            rng.integers(-(2**31), 2**31 - 1, size=(layers, 1, W),
+                         dtype=np.int64).astype(np.int32)
+        ),
+        "gate": jnp.asarray(rng.integers(0, 2, size=(1, W)) > 0),
+    }
+    struct = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), caches
+    )
+    layout = pool.PagedLayout.from_struct(
+        struct, cache_len=W, page_tokens=page_tokens
+    )
+    pages = layout.flatten(caches)
+    assert pages.shape == (n_pages, layout.page_elems)
+    back = layout.unflatten(pages)
+    for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        # bitwise equality: NaN payloads must survive the carrier
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
 @SET
 @given(
     op=st.sampled_from(["all_reduce", "all_gather", "reduce_scatter",

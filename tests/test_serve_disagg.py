@@ -18,6 +18,7 @@ import pytest
 
 from repro.core import am, gasnet
 from repro.serving import kv
+from repro.serving import pool
 from repro.testing.sim import run_spmd
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -245,6 +246,234 @@ def test_kv_layout_shapes_independent_of_prompt_len():
 
 
 # --------------------------------------------------------------------------- #
+# paged KV pool: layout, allocator, store, vectored page fetch
+# --------------------------------------------------------------------------- #
+def _smoke_model():
+    from repro.configs.registry import SMOKE
+    from repro.models.build import build_model
+    from repro.parallel.ctx import RunCtx
+
+    cfg = SMOKE["qwen3-4b"]
+    model = build_model(cfg)
+    ctx = RunCtx(mesh=None, remat="none")
+    return cfg, model, ctx
+
+
+def test_paged_layout_round_trips_model_cache():
+    cfg, model, ctx = _smoke_model()
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    _, caches = model.prefill(params, ctx, {"inputs": toks}, cache_len=32)
+
+    layout = pool.PagedLayout.from_struct(
+        model.kv_block_struct(ctx, prompt_len=8, cache_len=32),
+        cache_len=32,
+        page_tokens=8,
+    )
+    assert layout.n_pages == 4
+    pages = layout.flatten(caches)
+    assert pages.shape == (4, layout.page_elems)
+    restored = layout.unflatten(pages)
+    for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # paged and dense flattenings carry the same payload volume
+    dense = kv.KVLayout.from_struct(
+        model.kv_block_struct(ctx, prompt_len=8, cache_len=32)
+    )
+    assert layout.n_pages * layout.page_elems == dense.total
+
+
+def test_kv_page_struct_matches_layout():
+    _, model, ctx = _smoke_model()
+    page_struct, n_pages = model.kv_page_struct(ctx, cache_len=32, page_tokens=8)
+    layout = pool.PagedLayout.from_struct(
+        model.kv_block_struct(ctx, prompt_len=4, cache_len=32),
+        cache_len=32,
+        page_tokens=8,
+    )
+    assert n_pages == layout.n_pages
+    per_page = sum(int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(page_struct))
+    assert per_page == layout.page_elems
+    with pytest.raises(ValueError, match="not a multiple"):
+        model.kv_page_struct(ctx, cache_len=32, page_tokens=5)
+
+
+def test_pool_allocator_refcounts_and_cow():
+    st = pool.make_pool(4)
+    st, a = pool.alloc(st, 2)
+    st = pool.fork(st, (a[0],))  # shared prefix page
+    st = pool.free(st, a)  # a[0] still live (refcount 1), a[1] free
+    pool.check_pool(st)
+    assert st.n_free == 3
+    st, fresh, copied = pool.writable(st, a[0])
+    assert not copied and fresh == a[0]
+    st = pool.fork(st, (a[0],))
+    st, fresh, copied = pool.writable(st, a[0])
+    assert copied and fresh != a[0]  # copy-on-write split
+    pool.check_pool(st)
+    st = pool.free(st, (a[0], fresh))
+    pool.check_pool(st)
+    assert st.n_free == 4
+    with pytest.raises(pool.DoubleFreeError):
+        pool.free(st, (a[0],))
+    with pytest.raises(pool.OutOfPagesError):
+        pool.alloc(st, 5)
+
+
+def test_store_prefix_sharing_resolves_same_physical_pages():
+    _, model, ctx = _smoke_model()
+    layout = pool.PagedLayout.from_struct(
+        model.kv_block_struct(ctx, prompt_len=4, cache_len=32),
+        cache_len=32,
+        page_tokens=8,
+    )
+    store = pool.PagedKVStore(layout, 12)
+    rng = np.random.default_rng(0)
+    pages = rng.normal(size=(layout.n_pages, layout.page_elems)).astype(np.float32)
+    shared = list(range(100, 120))  # 2 full pages + a partial third
+    p1 = store.admit(1, shared, pages)
+    p2 = store.admit(2, shared + [7], pages)
+    # two prefix-sharing requests map the SAME physical pages
+    assert p1.table[:2] == p2.table[:2]
+    assert not p2.fresh[0] and not p2.fresh[1]
+    # the partial boundary page is private
+    assert p1.table[2] != p2.table[2]
+    assert store.prefix_match(shared) == 2
+    store.release(1)
+    assert store.prefix_match(shared) == 2  # rid 2 keeps the pages live
+    store.release(2)
+    assert store.prefix_match(shared) == 0  # last ref dropped the index
+    assert store.n_free == 12
+    pool.check_pool(store.state)
+
+
+def test_fetch_pages_vectored_get_round_trip():
+    """Each rank prefetches 3 pages from its neighbour's pool shard with
+    the split-phase vectored get; the fetched carrier rows must equal the
+    owner's pages (lockstep simulator, both batch counts)."""
+    n, pages_per_rank, page_elems = 3, 4, 6
+    rng = np.random.default_rng(1)
+    shards = [
+        jnp.asarray(rng.normal(size=(pages_per_rank * page_elems,)), jnp.float32)
+        for _ in range(n)
+    ]
+    pmap = pool.PoolMap(n, pages_per_rank, page_elems)
+    want_pages = (3, 0, 2)
+
+    def make_program(n_batches):
+        def program(engine):
+            node = gasnet.Node(
+                engine,
+                am.HandlerTable(),
+                am_capacity=4,
+                am_payload_width=1,
+                am_per_peer_capacity=4,
+            )
+            seg = shards[engine.rank][None]
+            offsets = [pmap.offset(p) for p in want_pages]
+            handles, plan = pool.fetch_pages(
+                node,
+                seg,
+                jnp.stack(offsets),
+                frm=gasnet.Shift(1),
+                page_elems=page_elems,
+                n_batches=n_batches,
+            )
+            assert plan.op == "p2p"
+            return pool.sync_fetch(node, handles)
+
+        return program
+
+    for g in (1, 3):
+        outs = run_spmd(make_program(g), n)
+        for rank, got in enumerate(outs):
+            owner = (rank + 1) % n
+            want = np.asarray(shards[owner]).reshape(pages_per_rank, page_elems)[
+                list(want_pages)
+            ]
+            np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_get_nbv_pred_gated(n=4):
+    """Vectored get with pred=False completes to zeros (SPMD conditional
+    fetch) while gated-true ranks receive the remote slices."""
+
+    def program(engine):
+        node = gasnet.Node(
+            engine,
+            am.HandlerTable(),
+            am_capacity=4,
+            am_payload_width=1,
+            am_per_peer_capacity=4,
+        )
+        seg = (jnp.arange(8, dtype=jnp.float32) + 10 * engine.rank)[None]
+        h = node.get_nbv(
+            seg,
+            frm=gasnet.Shift(1),
+            indices=[0, 4],
+            size=2,
+            pred=engine.rank % 2 == 0,
+        )
+        return node.sync(h)
+
+    outs = run_spmd(program, n)
+    for rank, got in enumerate(outs):
+        got = np.asarray(got)
+        if rank % 2 == 0:
+            src = (rank + 1) % n
+            want = np.asarray([[0.0, 1.0], [4.0, 5.0]]) + 10 * src
+            np.testing.assert_array_equal(got, want)
+        else:
+            np.testing.assert_array_equal(got, 0.0)
+
+
+def test_paged_server_token_parity_and_pool_drain():
+    """Colocated paged server: tokens identical to the dense server, two
+    prefix-sharing requests resolve to shared physical pages, and every
+    page is freed when its request retires."""
+    from repro.launch.serve import PagedServer, Request, Server
+
+    cfg, model, ctx = _smoke_model()
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+
+    def burst():
+        rng = np.random.default_rng(3)
+        shared = rng.integers(0, cfg.vocab, size=16).tolist()
+        reqs = [
+            Request(rid=0, prompt=shared + [5], max_new=4),
+            Request(rid=1, prompt=shared + [9, 11], max_new=4),
+            Request(
+                rid=2,
+                prompt=rng.integers(0, cfg.vocab, size=7).tolist(),
+                max_new=5,
+            ),
+        ]
+        return reqs
+
+    dense = Server(model, ctx, params, 2, 32)
+    for r in burst():
+        dense.submit(r)
+    dense.run_until_drained()
+
+    paged = PagedServer(model, ctx, params, 2, 32, page_tokens=8)
+    for r in burst():
+        paged.submit(r)
+    stats = paged.run_until_drained()
+
+    base = {r.rid: r.out for r in dense.finished}
+    got = {r.rid: r.out for r in paged.finished}
+    assert base.keys() == got.keys()
+    for rid in base:
+        assert base[rid] == got[rid], (rid, base[rid], got[rid])
+    # rid 0/1 share 16 prompt tokens = 2 physical pages
+    assert stats["pool_prefix_hits"] >= 2
+    # allocator fully drained: no leaked pages
+    assert stats["pool_n_free"] == stats["pool_n_pages"]
+    pool.check_pool(paged.store.state)
+
+
+# --------------------------------------------------------------------------- #
 # end-to-end: the example's prefill -> KV put -> decode round trip
 # --------------------------------------------------------------------------- #
 @pytest.mark.slow
@@ -269,4 +498,8 @@ def test_disagg_serve_example_smoke():
     # ...across distinct prefill/decode ranks, token-identical to the
     # colocated baseline
     assert "parity: disaggregated tokens == colocated tokens" in proc.stdout
+    # ...and the paged act: pages land in the pool, the prefix-sharing
+    # pair maps shared physical pages, tokens stay identical
+    assert "prefix-shared pages mapped not moved" in proc.stdout
+    assert "parity: paged tokens == dense tokens" in proc.stdout
     assert "DISAGG_SERVE_PASS" in proc.stdout
