@@ -119,6 +119,9 @@ def main(json_path: str | None = None) -> None:
     # ---- paged KV pool: paged vs dense decode, page traffic, overlap ------ #
     paged_sections(report)
 
+    # ---- tiered KV memory: oversubscription + swap/recompute crossover ---- #
+    oversub_sections(report)
+
     if json_path:
         write_artifact(RESULT, json_path)
     print("TRAIN_SERVE_BENCH_DONE")
@@ -207,6 +210,104 @@ def paged_sections(report) -> None:
         overlap_bench(report)
     else:
         print("paged_fetch_overlap skipped: needs >= 2 host devices")
+
+
+def oversub_sections(report) -> None:
+    """The tiered-KV-memory section of ``BENCH_serve.json``:
+
+    - tok/s and p99 request latency at 1.0x / 1.5x / 2.0x pool pressure
+      (peak concurrent page demand over physical pool pages) on the
+      SLO-scheduled colocated :class:`PagedServer` — the pressured runs
+      preempt (swap to the memory tier / recompute-replay) and must stay
+      token-identical to the unpressured run,
+    - the swap-vs-recompute crossover: the generated length at which two
+      vectored transfers of the victim's pages become cheaper than
+      replaying the decode (recompute cost grows per generated token;
+      below the crossover recompute wins), under the measured
+      ``BENCH_gas.json`` β model.
+    """
+    from repro.configs.registry import SMOKE
+    from repro.core import sched as core_sched
+    from repro.launch.serve import PagedServer, Request
+    from repro.models.build import build_model
+    from repro.parallel.ctx import RunCtx
+
+    ctx = RunCtx(mesh=None, remat="none")
+    cfg = SMOKE["qwen3-4b"]
+    model = build_model(cfg)
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    batch, cache_len, page_tokens = 4, 64, 8
+    n_pages = cache_len // page_tokens
+    peak_demand = batch * n_pages  # every row at a full table
+
+    def burst():
+        rng = np.random.default_rng(9)
+        return [
+            Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab,
+                                    int(rng.integers(10, 30))).tolist(),
+                max_new=int(rng.integers(8, 16)),
+            )
+            for rid in range(10)
+        ]
+
+    baseline = None
+    for pressure in (1.0, 1.5, 2.0):
+        pool_pages = max(n_pages + 1, int(round(peak_demand / pressure)))
+        server = PagedServer(model, ctx, params, batch, cache_len,
+                             page_tokens=page_tokens, n_pool_pages=pool_pages)
+        for req in burst():
+            server.submit(req)
+        stats = server.run_until_drained(max_ticks=2000)
+        toks = {r.rid: r.out for r in server.finished}
+        if baseline is None:
+            baseline = toks
+        else:
+            assert toks == baseline  # preemption is semantics-transparent
+        lat = sorted(r.t_done - r.t_enqueue for r in server.finished)
+        p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))] if lat else 0.0
+        us = stats["wall_s"] / max(stats["decoded_tokens"], 1) * 1e6
+        report(
+            f"serve_oversub_{pressure:.1f}x", us,
+            f"{stats['tok_per_s']:.1f}tok/s", op="serve_oversub",
+            pressure=pressure, pool_pages=pool_pages,
+            tok_per_s=round(stats["tok_per_s"], 1),
+            p99_latency_s=round(p99, 4),
+            evictions=stats["sched_evictions"],
+            swaps=stats["sched_swaps"],
+            recomputes=stats["sched_recomputes"],
+            resumes=stats["sched_resumes"],
+            swap_pages=stats["tier_swapped_out_pages"],
+        )
+
+    # swap-vs-recompute crossover under the measured beta model
+    from repro.serving.scheduler import swap_or_recompute
+    from repro.serving.pool import PagedLayout
+
+    costs = core_sched.load_costs("BENCH_gas.json")
+    cost = costs.get("xla") or next(iter(costs.values()))
+    layout = PagedLayout.from_struct(
+        model.kv_block_struct(ctx, prompt_len=4, cache_len=cache_len),
+        cache_len=cache_len, page_tokens=page_tokens,
+    )
+    crossover = None
+    for g in range(0, 4096):
+        mode, swap_us, rec_us = swap_or_recompute(
+            n_pages, layout.page_bytes, g, cost
+        )
+        if mode == "swap":
+            crossover = g
+            break
+    report(
+        "serve_swap_recompute_crossover",
+        float(crossover if crossover is not None else -1),
+        f"beta={cost.beta_us_per_kib}us/KiB", unit="tokens",
+        op="serve_oversub", page_bytes=layout.page_bytes,
+        pages_per_request=n_pages,
+        crossover_generated_tokens=crossover,
+        alpha_us=cost.alpha_us, beta_us_per_kib=cost.beta_us_per_kib,
+    )
 
 
 def overlap_bench(report) -> None:

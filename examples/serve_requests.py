@@ -16,9 +16,18 @@ allocator-assigned pool slot (pred-gated, no dense staging copy), and
 the two requests sharing a prompt prefix resolve to the *same physical
 pages* — those pages are mapped, not moved.
 
-The demo asserts both clusters produce token-identical outputs to the
-colocated ``Server`` — the KV handoff, dense or paged, is
-bit-transparent.
+Act 3 adds the **tiered KV memory**: a memory-only GAS rank (segment
+capacity, no model compute — the paper's FPGA memory-node archetype)
+joins a deliberately undersized pool.  Low-priority requests fill it;
+high-priority latecomers force the SLO scheduler to preempt — victim
+pages swap OUT to the memory rank as one vectored put (payloads + tier
+slot offsets in one command block) and back IN at resume as one vectored
+get, and every resumed request's tokens match the unpressured run
+exactly.
+
+The demo asserts all clusters produce token-identical outputs to the
+colocated ``Server`` — the KV handoff, dense, paged, or swapped through
+the memory tier, is bit-transparent.
 
 Run:    PYTHONPATH=src python examples/serve_requests.py
 Smoke:  PYTHONPATH=src python examples/serve_requests.py --smoke
@@ -29,10 +38,10 @@ import sys
 
 sys.path.insert(0, "src")
 
-N_PREFILL, N_DECODE = 2, 2
+N_PREFILL, N_DECODE, N_MEMORY = 2, 2, 1
 os.environ.setdefault(
     "XLA_FLAGS",
-    f"--xla_force_host_platform_device_count={N_PREFILL + N_DECODE}",
+    f"--xla_force_host_platform_device_count={N_PREFILL + N_DECODE + N_MEMORY}",
 )
 
 import jax  # noqa: E402  (device count must be forced first)
@@ -171,6 +180,73 @@ def main() -> None:
         assert base[rid] == pg[rid], (rid, base[rid], pg[rid])
     print("parity: paged tokens == dense tokens == colocated tokens "
           "(bit-exact page handoff, prefix pages shared)")
+
+    # ---- Act 3: tiered KV memory — oversubscription + memory rank -------
+    # A memory-only GAS rank (segment capacity, no model compute) joins a
+    # deliberately undersized pool.  Low-priority requests fill it; then
+    # high-priority latecomers arrive and the SLO scheduler preempts:
+    # victim pages swap OUT to the memory rank (one vectored put: payloads
+    # + tier-slot offsets in one command block) and back IN at resume.
+    from repro.serving.scheduler import SLO
+
+    def pressure_burst():
+        rng = np.random.default_rng(11)
+        reqs = []
+        for rid in range(5):
+            plen = int(rng.integers(18, 28))
+            reqs.append(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, size=plen).tolist(),
+                max_new=14 if rid < 3 else 8,
+            ))
+        return reqs
+
+    ref = Server(model, ctx, params, args.decode_batch, args.cache_len)
+    for r in pressure_burst():
+        ref.submit(r)
+    ref.run_until_drained()
+    unpressured = {r.rid: r.out for r in ref.finished}
+
+    tiered = DisaggCluster(
+        model, ctx, params,
+        n_prefill=1, n_decode=1, n_memory=N_MEMORY,
+        decode_batch=args.decode_batch, cache_len=args.cache_len,
+        decode_backend=args.decode_backend,
+        paged=True, page_tokens=PAGE_TOKENS,
+        pages_per_rank=8,  # aggregate demand >= 1.5x this pool
+    )
+    reqs3 = pressure_burst()
+    for r in reqs3[:3]:
+        r.slo = SLO(priority=0)
+        tiered.submit(r)
+    for _ in range(8):
+        tiered.tick()  # the low-priority bulk occupies the pool
+    for r in reqs3[3:]:
+        r.slo = SLO(priority=2)
+        tiered.submit(r)
+    tstats = tiered.run_until_drained()
+    print(f"tiered KV memory: {tstats['n_memory_ranks']} memory rank(s), "
+          f"{tstats['sched_evictions']} preemption(s) "
+          f"({tstats['sched_swaps']} swap / "
+          f"{tstats['sched_recomputes']} recompute), "
+          f"{tstats['swap_out_bytes']}B out / {tstats['swap_in_bytes']}B "
+          f"back over the vectored put/get, swap plan: "
+          f"{tstats['swap_plan']}")
+
+    assert tstats["requests"] == len(reqs3), tstats
+    assert tstats["sched_evictions"] >= 1, "expected >= 1 preemption"
+    assert tstats["sched_swaps"] >= 1, "expected >= 1 swap to the memory rank"
+    assert tstats["sched_resumes"] == tstats["sched_evictions"], tstats
+    tg = {r.rid: r.out for r in tiered.finished}
+    assert unpressured.keys() == tg.keys()
+    for rid in unpressured:
+        assert unpressured[rid] == tg[rid], (rid, unpressured[rid], tg[rid])
+    print("parity: preempted+resumed tokens == unpressured tokens "
+          "(bit-identical resume after swap to the memory rank)")
+    # the hierarchy fully drains: no page leaked in either tier
+    assert tstats["pool_free_pages"] == tiered.pages_per_rank, tstats
+    assert tstats["tier_free_slots"] == tstats["tier_slots"], tstats
+    print("pool + memory tier fully drained at shutdown")
     print("DISAGG_SERVE_PASS")
 
 

@@ -51,6 +51,7 @@ from repro.core.engine import AlreadyWaitedError
 __all__ = [
     "Handle",
     "PutHandle",
+    "PutvHandle",
     "GetHandle",
     "GetvHandle",
     "AckHandle",
@@ -134,6 +135,58 @@ class PutHandle(Handle):
 
     def _complete(self) -> jax.Array:
         return self._restore(self.apply(self._local))
+
+
+class PutvHandle(PutHandle):
+    """In-flight vectored ``put_nbv`` (engine multi-put): m payloads plus
+    the int32 *command block* (their m target offsets + m arrival flags)
+    travelled as one vectored transport — the write half of the GAScore
+    draining a command FIFO in a single wire message.  :meth:`complete`
+    waits the payload/meta :class:`~repro.core.engine.Pending`\\ s and
+    lands every flagged payload at its offset in the receiver's partition.
+
+    Per-payload flags make the put SPMD-conditional at page granularity: a
+    sender clearing flag j ships payload j anyway (the static schedule)
+    but the receiver keeps its current bytes at offset j.  Chains with
+    other outstanding puts on the same segment via the inherited ``key``
+    (see ``Node.sync``)."""
+
+    op = "putv"
+
+    def __init__(self, local, payloads, meta, restore, key: int = 0):
+        Handle.__init__(self)
+        self._local = local
+        self._payloads = payloads  # list[Pending | jax.Array]
+        self._meta = meta  # Pending | jax.Array; int32 or bitcast carrier
+        self._restore = restore
+        self.key = key
+        self._landed = None
+
+    def _land(self):
+        if self._landed is None:
+            vals = [
+                p.wait() if hasattr(p, "wait") else p for p in self._payloads
+            ]
+            m = (
+                self._meta.wait()
+                if hasattr(self._meta, "wait")
+                else self._meta
+            )
+            if m.dtype != jnp.int32:
+                m = lax.bitcast_convert_type(m, jnp.int32)
+            n = len(vals)
+            self._landed = (vals, m[:n], m[n:] != 0)
+        return self._landed
+
+    def apply(self, local: jax.Array) -> jax.Array:
+        vals, offs, flags = self._land()
+        flat = local.reshape(-1)
+        for j, v in enumerate(vals):
+            cur = lax.dynamic_slice(flat, (offs[j],), (v.shape[0],))
+            flat = lax.dynamic_update_slice(
+                flat, jnp.where(flags[j], v, cur), (offs[j],)
+            )
+        return flat.reshape(local.shape)
 
 
 class GetHandle(Handle):

@@ -86,21 +86,31 @@ def node_backends(
     return tuple(hardware if r in hw else software for r in range(n_nodes))
 
 
-def serve_roles(n_prefill: int, n_decode: int) -> Tuple[str, ...]:
+def serve_roles(
+    n_prefill: int, n_decode: int, n_memory: int = 0
+) -> Tuple[str, ...]:
     """Per-rank roles of a disaggregated serving ring: the first
-    ``n_prefill`` ranks are the prefill pool, the rest the decode pool.
+    ``n_prefill`` ranks are the prefill pool, then the decode pool, then
+    ``n_memory`` *memory* ranks — the paper's memory-node archetype:
+    ranks that export segment capacity into the global address space but
+    run no model compute (the second tier of the KV hierarchy; see
+    ``repro.serving.tier``).
 
     The convention is load-bearing: `repro.serving.disagg` derives
-    dispatch targets, the KV handoff permutation, and segment slot
-    ownership from rank order alone, so every node agrees on it without
-    any exchange (the SPMD analogue of a static cluster map).
+    dispatch targets, the KV handoff permutation, swap destinations, and
+    segment slot ownership from rank order alone, so every node agrees on
+    it without any exchange (the SPMD analogue of a static cluster map).
     """
-    if n_prefill < 1 or n_decode < 1:
+    if n_prefill < 1 or n_decode < 1 or n_memory < 0:
         raise ValueError(
-            f"need at least 1 prefill and 1 decode rank, got "
-            f"{n_prefill}/{n_decode}"
+            f"need at least 1 prefill and 1 decode rank (memory >= 0), got "
+            f"{n_prefill}/{n_decode}/{n_memory}"
         )
-    return ("prefill",) * n_prefill + ("decode",) * n_decode
+    return (
+        ("prefill",) * n_prefill
+        + ("decode",) * n_decode
+        + ("memory",) * n_memory
+    )
 
 
 def role_backends(
@@ -108,17 +118,19 @@ def role_backends(
     *,
     prefill: str = "xla",
     decode: str = "xla",
+    memory: str = "xla",
 ) -> Tuple[str, ...]:
     """Per-rank engine backends keyed by serving role.
 
     The paper's split maps naturally onto disaggregation: prefill nodes
     can stay software GASNet nodes (``"xla"``) while the decode pool —
     whose KV installs are pure remote-DMA traffic — runs on hardware
-    nodes (``"gascore"``), or any other mix.  Feed the result to
-    ``make_engine`` / ``gasnet.Context(backend=...)`` to get an
-    ``EngineMap`` when the pools differ.
+    nodes (``"gascore"``), or any other mix; memory ranks (pure segment
+    exporters, the FPGA memory-node archetype) take their own engine too.
+    Feed the result to ``make_engine`` / ``gasnet.Context(backend=...)``
+    to get an ``EngineMap`` when the pools differ.
     """
-    table = {"prefill": prefill, "decode": decode}
+    table = {"prefill": prefill, "decode": decode, "memory": memory}
     try:
         return tuple(table[r] for r in roles)
     except KeyError as e:

@@ -43,6 +43,7 @@ class Request:
     t_enqueue: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    slo: Any = None  # Optional[repro.serving.scheduler.SLO]
 
 
 class Server:
@@ -69,6 +70,10 @@ class Server:
         self.caches = None  # lazily built from first prefill
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        # slot -> remaining tokens a recompute-resume must replay: the
+        # decode path reproduces them bit-identically (same ops, same
+        # inputs), rebuilding the KV cache without re-appending output
+        self.replaying: Dict[int, List[int]] = {}
 
         self._decode = jax.jit(
             lambda p, t, pos, c: model.decode_step(p, ctx, t, pos, c)
@@ -147,6 +152,23 @@ class Server:
         self.active[slot] = None
         self._release(req)
 
+    def evict_row(self, slot: int) -> Optional[Request]:
+        """Remove a request from its decode row WITHOUT retiring it (the
+        preemption path): the caller owns its KV state (swap or discard)
+        and re-admits it later.  No release hook runs."""
+        req = self.active[slot]
+        self.active[slot] = None
+        self.replaying.pop(slot, None)
+        return req
+
+    def start_replay(self, slot: int, tokens: List[int]) -> None:
+        """Arm a recompute-resume: the next ``len(tokens)`` decode steps
+        on ``slot`` rebuild the KV cache by re-deriving exactly those
+        tokens (asserted — the decode path is deterministic), without
+        re-appending them to the request's output."""
+        if tokens:
+            self.replaying[slot] = list(tokens)
+
     # -- paged-pool hooks (no-ops for the dense server) ----------------- #
     def _post_decode(self, live: List[int], written: Dict[int, int]) -> None:
         """Called after one decode step, before retirement: ``written``
@@ -154,6 +176,33 @@ class Server:
 
     def _release(self, req: Request) -> None:
         """Called when a request leaves its decode row."""
+
+    def _advance(self, live: List[int], logits: np.ndarray) -> None:
+        """Shared post-decode token handling: append/advance each live
+        row, replaying preempted-and-recomputed rows without appending."""
+        for i in live:
+            req = self.active[i]
+            tok = int(np.argmax(logits[i]))
+            replay = self.replaying.get(i)
+            if replay:
+                expect = replay.pop(0)
+                if tok != expect:
+                    raise AssertionError(
+                        f"recompute replay diverged on rid {req.rid}: "
+                        f"step produced {tok}, original was {expect}"
+                    )
+                if not replay:
+                    del self.replaying[i]
+                self.positions[i] += 1
+                self.last_token[i, 0] = tok
+                continue  # the token is already in req.out
+            req.out.append(tok)
+            self.positions[i] += 1
+            self.last_token[i, 0] = tok
+            if tok == self.eos_id or len(req.out) >= req.max_new:
+                self._retire(i)
+            if self.positions[i] >= self.cache_len - 1:
+                self._retire(i)
 
     # ------------------------------------------------------------------ #
     def step(self) -> int:
@@ -171,23 +220,17 @@ class Server:
         )
         logits = np.asarray(logits)
         self._post_decode(live, {i: int(self.positions[i]) for i in live})
-        for i in live:
-            req = self.active[i]
-            tok = int(np.argmax(logits[i]))
-            req.out.append(tok)
-            self.positions[i] += 1
-            self.last_token[i, 0] = tok
-            if tok == self.eos_id or len(req.out) >= req.max_new:
-                self._retire(i)
-            if self.positions[i] >= self.cache_len - 1:
-                self._retire(i)
+        self._advance(live, logits)
         return len(live)
+
+    def _pending(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.active)
 
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
         t0 = time.monotonic()
         decoded = 0
         ticks = 0
-        while (self.queue or any(self.active)) and ticks < max_ticks:
+        while self._pending() and ticks < max_ticks:
             decoded += self.step()
             ticks += 1
         dt = time.monotonic() - t0
@@ -204,7 +247,8 @@ class Server:
 
 
 class PagedServer(Server):
-    """Continuous batching over the paged KV pool (``repro.serving.pool``).
+    """Continuous batching over the paged KV pool (``repro.serving.pool``)
+    with SLO-aware preemptive scheduling over a tiered KV memory.
 
     The dense server hands each admitted request a private cache row; the
     paged server instead allocates fixed-size token *pages* from a
@@ -213,19 +257,34 @@ class PagedServer(Server):
     physical pages* (copy-on-write protected), so a warm prefix costs no
     page storage — and, in the disaggregated cluster, no transfer bytes.
 
-    The decode math is byte-identical to the dense server: admission
-    writes the prefilled pages into the pool and reads the decode row
-    back *through the page table*, and every decode step writes the page
-    holding the new token back.  Token parity with :class:`Server` is the
+    With ``paged_decode=True`` (default) the decode step itself runs
+    THROUGH the page table — the new token's K/V scatter straight into
+    the pool and attention is ``kernels.paged_attention`` over the
+    physical pages; no dense per-request cache row exists anywhere.
+    Admission is **lazy** (only prompt pages materialise; the generation
+    tail allocates page by page as positions are written), so the pool
+    *oversubscribes*: when the free list runs dry the
+    :class:`~repro.serving.scheduler.AdmissionScheduler` preempts victims
+    — swap (pages copied to the :class:`~repro.serving.tier.MemoryTier`,
+    restored bit-exactly at resume) or recompute (pages dropped; resume
+    replays the generated tokens, re-deriving them bit-identically),
+    priced per victim by the measured β cost model.
+
+    Token parity with :class:`Server` — pressured or not — is the
     correctness bar (asserted in the smoke demo and tests).
     """
 
     def __init__(self, model, ctx, params, batch_size: int, cache_len: int,
                  eos_id: int = -1, greedy: bool = True, seed: int = 0,
-                 page_tokens: int = 8, n_pool_pages: Optional[int] = None):
+                 page_tokens: int = 8, n_pool_pages: Optional[int] = None,
+                 paged_decode: bool = True, tier_slots: Optional[int] = None,
+                 sched_costs: Optional[Dict[str, Any]] = None,
+                 decode_step_us: float = 2000.0, prefill_us: float = 4000.0):
         super().__init__(model, ctx, params, batch_size, cache_len,
                          eos_id=eos_id, greedy=greedy, seed=seed)
         from repro.serving.pool import PagedKVStore, PagedLayout
+        from repro.serving.scheduler import AdmissionScheduler
+        from repro.serving.tier import MemoryTier
 
         self.layout = PagedLayout.from_struct(
             model.kv_block_struct(ctx, prompt_len=4, cache_len=cache_len),
@@ -234,9 +293,187 @@ class PagedServer(Server):
         if n_pool_pages is None:
             n_pool_pages = (batch_size + 1) * self.layout.n_pages
         self.store = PagedKVStore(self.layout, n_pool_pages)
+        self.paged_decode = paged_decode
+        if tier_slots is None:
+            tier_slots = max(
+                n_pool_pages, batch_size * self.layout.n_pages
+            )
+        self.tier = MemoryTier(
+            1, tier_slots, self.layout.page_elems, host_backed=True
+        )
+        self.scheduler = AdmissionScheduler(
+            page_bytes=self.layout.page_bytes, costs=sched_costs,
+            decode_step_us=decode_step_us, prefill_us=prefill_us,
+        )
+        self._by_rid: Dict[int, Request] = {}
+        self._preempted: Dict[int, Dict[str, Any]] = {}
+        self._decode_paged = self.jax.jit(
+            lambda p, t, pos, c, tb: model.decode_step_paged(
+                p, ctx, t, pos, c, tb
+            )
+        )
 
     # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        from repro.serving.scheduler import SLO
+
+        super().submit(req)
+        self._by_rid[req.rid] = req
+        self.scheduler.submit(
+            req.rid, req.slo or SLO(), prompt_len=len(req.prompt),
+            now=req.t_enqueue,
+        )
+
+    def _pending(self) -> bool:
+        return super()._pending() or bool(self._preempted)
+
+    # ------------------------------------------------------------------ #
+    # capacity management: preemption + tiered swap
+    # ------------------------------------------------------------------ #
+    def _running_rids(self) -> List[int]:
+        return [r.rid for r in self.active if r is not None]
+
+    def _slot_of(self, rid: int) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is not None and r.rid == rid:
+                return i
+        return None
+
+    def _freeable(self, rid: int) -> int:
+        return self.store.freeable(rid)
+
+    def _write_need(self, rid: int, position: int) -> int:
+        """Fresh pages the next decode write needs: one when the position
+        lands on an unmaterialised slot (lazy growth) or a shared page
+        (copy-on-write split), none otherwise."""
+        table = self.store.tables[rid]
+        p = table[position // self.layout.page_tokens]
+        if p < 0:
+            return 1
+        return 1 if self.store.state.refcnt[p] > 1 else 0
+
+    def _preempt(self, rid: int, mode: Optional[str] = None) -> None:
+        from repro.serving import tier as tier_lib
+
+        slot = self._slot_of(rid)
+        req = self._by_rid[rid]
+        table = self.store.page_table(rid)
+        logical = [lp for lp, pp in enumerate(table) if pp >= 0]
+        if mode is None:
+            mode, _, _ = self.scheduler.choose_mode(rid, len(logical))
+        if mode == "swap":
+            try:
+                self.tier.plan_swap_out(rid, logical)
+            except tier_lib.OutOfSlotsError:
+                mode = "recompute"  # tier full: drop and replay instead
+        if mode == "swap":
+            rows = np.stack([self.store.mem[table[lp]] for lp in logical])
+            self.tier.host_store(rid, rows)
+        snap = {
+            "mode": mode,
+            "logical": tuple(logical),
+            "position": int(self.positions[slot]),
+            "last_token": int(self.last_token[slot, 0]),
+            # a victim caught mid-replay must finish its replay after a
+            # swap-resume (evict_row drops the row's replay state)
+            "replay": list(self.replaying.get(slot, [])),
+        }
+        self.store.evict_request(rid)
+        self.evict_row(slot)
+        self._preempted[rid] = snap
+        # keep the β model honest: replayed tokens are not new generation
+        self.scheduler.entry(rid).generated = max(0, len(req.out) - 1)
+        self.scheduler.on_preempted(rid, mode)
+
+    def _make_room(self, need: int, beneficiary: int, strict: bool) -> bool:
+        """Free at least ``need`` pool pages by preempting victims chosen
+        by the scheduler; False when no eligible victim set suffices."""
+        while self.store.n_free < need:
+            victims = self.scheduler.pick_victims(
+                self._running_rids(), need - self.store.n_free,
+                self._freeable, beneficiary=beneficiary, strict=strict,
+            )
+            if not victims:
+                return False
+            for rid in victims:
+                self._preempt(rid)
+        return True
+
+    # ------------------------------------------------------------------ #
+    # admission + resume (scheduler-ordered)
+    # ------------------------------------------------------------------ #
+    def _bind_row(
+        self, req: Request, slot: int, position: int, last_token: int
+    ) -> None:
+        if not req.t_first:
+            req.t_first = time.monotonic()
+        self.active[slot] = req
+        self.positions[slot] = position
+        self.last_token[slot, 0] = int(last_token)
+
+    def _prefill_pages(self, req: Request):
+        toks = self.jnp.asarray(req.prompt, self.jnp.int32)[None]
+        logits, caches_one = self._prefill_one(self.params, {"inputs": toks})
+        tok = int(np.argmax(np.asarray(logits)[0]))
+        return tok, np.asarray(self.layout.flatten(caches_one)), caches_one
+
+    def _resume(self, rid: int, slot: int) -> bool:
+        st = self._preempted[rid]
+        req = self._by_rid[rid]
+        if st["mode"] == "swap":
+            if self.store.n_free < len(st["logical"]):
+                return False
+            phys = self.store.admit_resume(rid, st["logical"])
+            rows = self.tier.host_load(rid)
+            self.tier.release(rid)
+            for row, pp in zip(rows, phys):
+                self.store.mem[pp] = row
+            self._bind_row(req, slot, st["position"], st["last_token"])
+            self.start_replay(slot, st.get("replay", []))
+        else:  # recompute: re-prefill the prompt, replay the generation
+            if self.store.n_free < self.layout.pages_for(len(req.prompt)):
+                return False
+            tok, pages, _ = self._prefill_pages(req)
+            plan = self.store.plan_admit(req.prompt, lazy=True)
+            self.store.write_pages(plan, pages)
+            self.store.commit(rid, plan)
+            self._bind_row(req, slot, len(req.prompt), req.out[0])
+            self.start_replay(slot, req.out[1:])
+        del self._preempted[rid]
+        self.scheduler.on_admitted(rid, time.monotonic())
+        return True
+
     def _admit(self) -> None:
+        if not self.paged_decode:
+            return self._admit_dense()
+        for rid in self.scheduler.admission_order():
+            slot = self._free_slot()
+            if slot is None:
+                return
+            if rid in self._preempted:
+                self._resume(rid, slot)
+                continue
+            req = self._by_rid.get(rid)
+            if req is None or req not in self.queue:
+                continue
+            need = self.layout.pages_for(len(req.prompt))
+            if self.store.n_free < need and not self._make_room(
+                need, rid, strict=True
+            ):
+                continue
+            self.queue.remove(req)
+            tok, pages, _ = self._prefill_pages(req)
+            plan = self.store.plan_admit(req.prompt, lazy=True)
+            self.store.write_pages(plan, pages)
+            self.store.commit(req.rid, plan)
+            if not req.out:
+                req.out.append(tok)
+            self._bind_row(req, slot, len(req.prompt), req.out[0])
+            self.scheduler.on_admitted(rid, time.monotonic())
+
+    def _admit_dense(self) -> None:
+        """The PR-4 path (``paged_decode=False``): full-table admission,
+        decode on dense rows gathered through the page table."""
         while self.queue:
             if self._free_slot() is None:
                 return
@@ -244,12 +481,7 @@ class PagedServer(Server):
             if self.store.n_free < self.layout.n_pages:
                 return
             req = self.queue.pop(0)
-            toks = self.jnp.asarray(req.prompt, self.jnp.int32)[None]
-            logits, caches_one = self._prefill_one(
-                self.params, {"inputs": toks}
-            )
-            tok = int(np.argmax(np.asarray(logits)[0]))
-            pages = np.asarray(self.layout.flatten(caches_one))
+            tok, pages, _ = self._prefill_pages(req)
             self.store.admit(req.rid, req.prompt, pages)
             # the decode row is read back THROUGH the page table, so the
             # pool (not the prefill output) is the source of truth
@@ -257,14 +489,71 @@ class PagedServer(Server):
                 req, self.store.gather(req.rid),
                 first_token=tok, position=len(req.prompt),
             )
+            self.scheduler.on_admitted(req.rid, time.monotonic())
+
+    # ------------------------------------------------------------------ #
+    # the end-to-end paged decode step
+    # ------------------------------------------------------------------ #
+    def step(self) -> int:
+        if not self.paged_decode:
+            return super().step()
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        # write capacity row by row: lazy materialisation / COW splits may
+        # need fresh pages — the oversubscription pressure point.  Each
+        # row claims its page immediately after the capacity check (no
+        # under-reservation across rows); a row that cannot get one (even
+        # after preempting eligible victims) self-preempts and resumes
+        # once pages free up.
+        for i in list(live):
+            req = self.active[i]
+            if req is None:
+                continue  # already evicted by an earlier row's make_room
+            need = self._write_need(req.rid, int(self.positions[i]))
+            if need and self.store.n_free < need:
+                if not self._make_room(need, req.rid, strict=False):
+                    self._preempt(req.rid)
+                    continue
+            self.store.prepare_write(req.rid, int(self.positions[i]))
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        # device tables: unmaterialised slots (and dead rows) target the
+        # scratch page appended past the pool — always masked by lengths
+        P = self.store.state.n_pages
+        tables = np.full((self.B, self.layout.n_pages), P, np.int32)
+        for i in live:
+            tables[i] = self.store.device_table(self.active[i].rid, absent=P)
+        mem = np.concatenate(
+            [self.store.mem, self.layout.empty_page_row()[None]], axis=0
+        )
+        views = self.layout.decode_views(self.jnp.asarray(mem))
+        logits, views = self._decode_paged(
+            self.params,
+            self.jnp.asarray(self.last_token),
+            self.jnp.asarray(self.positions),
+            views,
+            self.jnp.asarray(tables),
+        )
+        newmem = np.asarray(self.layout.views_to_pool(views))
+        self.store.mem[:] = newmem[:P]
+        for i in live:
+            if i not in self.replaying:  # replays are not new generation
+                self.scheduler.on_step(self.active[i].rid)
+        self._advance(live, np.asarray(logits))
+        return len(live)
 
     # ------------------------------------------------------------------ #
     def _post_decode(self, live: List[int], written: Dict[int, int]) -> None:
-        """Write each row's dirty page (the one holding the position this
-        step wrote) back into the pool — pages stay canonical, and a page
-        still shared at the prompt boundary is copy-on-write split.  Only
-        that one page is flattened (the per-token hot path must not pay
-        for the whole row)."""
+        """Dense-path (``paged_decode=False``) per-step writeback: the
+        page holding the position this step wrote goes back into the pool
+        (copy-on-write split if still shared), keeping the pool canonical
+        — only that one page is flattened.  The paged-decode path writes
+        on device and never comes through here."""
+        if self.paged_decode:
+            return
         for i in live:
             req = self.active[i]
             row = self.jax.tree.map(lambda x: x[:, i : i + 1], self.caches)
@@ -276,10 +565,14 @@ class PagedServer(Server):
 
     def _release(self, req: Request) -> None:
         self.store.release(req.rid)
+        if req.rid in self._by_rid:
+            self.scheduler.on_done(req.rid)
 
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
         stats = super().run_until_drained(max_ticks)
         stats.update({f"pool_{k}": v for k, v in self.store.stats().items()})
+        stats.update(self.tier.stats())
+        stats.update(self.scheduler.stats())
         return stats
 
 
@@ -287,18 +580,28 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--role", choices=("prefill", "decode", "both"),
+    ap.add_argument("--role", choices=("prefill", "decode", "memory", "both"),
                     default="both",
                     help="both = disaggregated cluster (prefill pool + "
-                         "decode pool over the GAS layer); decode = "
-                         "colocated continuous batching; prefill = "
-                         "prefill pool alone")
+                         "decode pool + optional memory ranks over the "
+                         "GAS layer); decode = colocated continuous "
+                         "batching; prefill = prefill pool alone; memory "
+                         "= a memory-only GAS rank (segment capacity, no "
+                         "model compute — reports its tier geometry)")
     ap.add_argument("--n-prefill", type=int, default=1)
     ap.add_argument("--n-decode", type=int, default=1)
+    ap.add_argument("--n-memory", type=int, default=0,
+                    help="memory-only ranks joining the paged cluster: "
+                         "their segments hold the swap tier "
+                         "(repro.serving.tier)")
     ap.add_argument("--prefill-backend", default="xla",
                     help="engine of the prefill pool (xla|gascore)")
     ap.add_argument("--decode-backend", default="xla",
                     help="engine of the decode pool (xla|gascore)")
+    ap.add_argument("--memory-backend", default="xla",
+                    help="engine of the memory ranks (xla|gascore)")
+    ap.add_argument("--mem-slots", type=int, default=None,
+                    help="tier page slots per memory rank")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -318,7 +621,7 @@ def main() -> None:
         os.environ.setdefault(
             "XLA_FLAGS",
             "--xla_force_host_platform_device_count="
-            f"{args.n_prefill + args.n_decode}",
+            f"{args.n_prefill + args.n_decode + args.n_memory}",
         )
 
     import jax
@@ -351,6 +654,27 @@ def main() -> None:
         for req in reqs:
             server.submit(req)
         stats = server.run_until_drained()
+    elif args.role == "memory":
+        # a memory-only GAS rank: it exports segment capacity into the
+        # global address space and runs no model compute — report the
+        # tier geometry it would contribute to a paged cluster.
+        from repro.serving.pool import PagedLayout
+        from repro.serving.tier import MemoryTier
+
+        layout = PagedLayout.from_struct(
+            model.kv_block_struct(
+                ctx, prompt_len=4, cache_len=args.cache_len
+            ),
+            cache_len=args.cache_len, page_tokens=args.page_tokens,
+        )
+        slots = args.mem_slots or 2 * args.batch * layout.n_pages
+        tier = MemoryTier(1, slots, layout.page_elems)
+        stats = dict(tier.stats())
+        stats.update({
+            "role": "memory",
+            "page_bytes": layout.page_bytes,
+            "segment_bytes": slots * layout.page_bytes,
+        })
     elif args.role == "prefill":
         prefill = jax.jit(
             lambda p, b: model.prefill(p, ctx, b, cache_len=args.cache_len)
@@ -375,10 +699,14 @@ def main() -> None:
         cluster = DisaggCluster(
             model, ctx, params,
             n_prefill=args.n_prefill, n_decode=args.n_decode,
+            n_memory=args.n_memory,
             decode_batch=args.batch, cache_len=args.cache_len,
             prefill_backend=args.prefill_backend,
             decode_backend=args.decode_backend,
-            paged=args.paged, page_tokens=args.page_tokens,
+            memory_backend=args.memory_backend,
+            paged=args.paged or args.n_memory > 0,
+            page_tokens=args.page_tokens,
+            mem_slots_per_rank=args.mem_slots,
         )
         for req in reqs:
             cluster.submit(req)

@@ -147,6 +147,36 @@ class Model:
         logits = T.logits_fn(params["io"], cfg, ctx, x)[:, 0]
         return logits, caches
 
+    def decode_step_paged(
+        self,
+        params,
+        ctx: RunCtx,
+        token: jax.Array,  # (B, 1) int32
+        positions: jax.Array,  # (B,) int32 — index of the new token
+        pool_caches: Any,
+        page_table: jax.Array,  # (B, NP) int32 physical page ids
+    ) -> Tuple[jax.Array, Any]:
+        """Decode one token for every request THROUGH the page table.
+
+        ``pool_caches`` is the dense cache pytree with every leaf's token
+        axis re-laid as ``(physical pages, page_tokens)`` — the
+        ``PagedLayout.decode_views`` of one pool shard, shared by the
+        whole batch; each request addresses its pages via ``page_table``.
+        The new token's K/V scatter straight into the pool and attention
+        runs on ``kernels.paged_attention`` — no dense per-request cache
+        rows exist anywhere (the end-to-end paged decode that retires the
+        row gathered at admission)."""
+        cfg = self.cfg
+        pos = positions[:, None]
+        x = T.embed(params["io"], cfg, ctx, token)
+        x, pool_caches = T.stack_apply(
+            self.dec_segments, params["dec"], cfg, ctx, x,
+            mode="decode", caches=pool_caches, positions=pos, xkv=None,
+            page_table=page_table,
+        )
+        logits = T.logits_fn(params["io"], cfg, ctx, x)[:, 0]
+        return logits, pool_caches
+
     # ------------------------------------------------------------------ #
     # dry-run stand-ins
     # ------------------------------------------------------------------ #

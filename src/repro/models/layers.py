@@ -201,6 +201,7 @@ def apply_attention(
     cache: Optional[Params] = None,
     cache_len: int = 0,
     xkv: Optional[jax.Array] = None,
+    page_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """Self- or cross-attention sub-block (pre-norm, residual added by caller).
 
@@ -210,6 +211,14 @@ def apply_attention(
       decode   — x is (B, 1, D); reads/updates ``cache``.
     Cross-attention (``xkv`` given): keys/values come from ``xkv``
     (B, S_enc, D); cache (mode != train) stores the projected enc KV.
+
+    Paged decode (``page_table`` given, decode mode only): ``cache`` holds
+    the layer's slice of the global KV *page pool* — ``k``/``v`` shaped
+    ``(P, page_tokens, KH, Dh)`` and ``pos`` ``(P, page_tokens)`` — and
+    ``page_table`` is ``(B, NP)`` physical ids per request.  The new
+    token's K/V scatter straight into the request's (COW-resolved,
+    materialised) page and attention runs through the table via
+    ``kernels.paged_attention`` — no dense per-request rows anywhere.
     """
     dh = cfg.resolved_head_dim
     scale = 1.0 / math.sqrt(dh)
@@ -293,6 +302,26 @@ def apply_attention(
             scale=scale, chunk=ctx.attn_chunk,
         )
         new_cache = {"k": kc, "v": vc, "pos": pc}
+    elif mode == "decode" and page_table is not None:
+        if window is not None:
+            raise ValueError("paged decode does not support local windows")
+        kp, vp, pp = cache["k"], cache["v"], cache["pos"]  # page pools
+        T = kp.shape[1]  # page_tokens
+        pos = positions[:, 0]  # (B,)
+        # the write page: COW-resolved and materialised by the host before
+        # the step, so live rows never collide (dead rows all target the
+        # scratch page with identical values — deterministic scatter)
+        phys = page_table[jnp.arange(B), pos // T]
+        slot = pos % T
+        kp = kp.at[phys, slot].set(k[:, 0])
+        vp = vp.at[phys, slot].set(v[:, 0])
+        pp = pp.at[phys, slot].set(pos)
+        out = ops.paged_attention(
+            q[:, 0], kp, vp, page_table, pos + 1, scale=scale,
+            impl="pallas" if ctx.attn_impl == "pallas" else "ref",
+            interpret=ctx.interpret,
+        )[:, None]
+        new_cache = {"k": kp, "v": vp, "pos": pp}
     elif mode == "decode":
         kc, vc, pc = cache["k"], cache["v"], cache["pos"]
         W = kc.shape[1]

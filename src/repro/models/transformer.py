@@ -75,6 +75,7 @@ def block_apply(
     cache_len: int,
     positions: jax.Array,
     xkv: Optional[jax.Array],
+    page_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     get = lambda k: None if cache is None else cache.get(k)
     new_cache: Dict[str, Any] = {}
@@ -87,6 +88,7 @@ def block_apply(
         a, ac = L.apply_attention(
             p["attn"], cfg, ctx, x, positions=positions, causal=causal,
             window=window, mode=mode, cache=get("attn"), cache_len=cache_len,
+            page_table=page_table,
         )
         x = x + checkpoint_name(a, "attn_out")
         if ac is not None:
@@ -98,17 +100,23 @@ def block_apply(
             x = x + checkpoint_name(L.apply_mlp(p["mlp"], cfg, x, ctx),
                                     "mlp_out")
     elif kind == "mamba":
+        if page_table is not None:
+            raise ValueError("paged decode unsupported for 'mamba' blocks")
         m, mc = L.apply_mamba(p["mix"], cfg, ctx, x, mode=mode, cache=get("mix"))
         x = x + checkpoint_name(m, "mix_out")
         if mc is not None:
             new_cache["mix"] = mc
     elif kind == "rec":
+        if page_table is not None:
+            raise ValueError("paged decode unsupported for 'rec' blocks")
         m, mc = L.apply_rec(p["mix"], cfg, ctx, x, mode=mode, cache=get("mix"))
         x = x + checkpoint_name(m, "mix_out")
         if mc is not None:
             new_cache["mix"] = mc
         x = x + checkpoint_name(L.apply_mlp(p["mlp"], cfg, x, ctx), "mlp_out")
     elif kind in ("cross", "xdec"):
+        if page_table is not None:
+            raise ValueError(f"paged decode unsupported for {kind!r} blocks")
         a, ac = L.apply_attention(
             p["attn"], cfg, ctx, x, positions=positions, causal=True,
             mode=mode, cache=get("attn"), cache_len=cache_len,
@@ -199,6 +207,7 @@ def stack_apply(
     cache_len: int = 0,
     positions: jax.Array,
     xkv: Optional[jax.Array] = None,
+    page_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[List[Any]]]:
     new_caches: List[Any] = []
     for si, (seg, sp) in enumerate(zip(segments, seg_params)):
@@ -212,6 +221,7 @@ def stack_apply(
                     kind, lp[key], cfg, ctx, xc, mode=mode,
                     cache=None if lc is None else lc[key],
                     cache_len=cache_len, positions=positions, xkv=xkv,
+                    page_table=page_table,
                 )
                 if nc is not None:
                     ncs[key] = nc

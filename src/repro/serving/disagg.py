@@ -27,6 +27,19 @@ software/hardware cluster, serving-shaped).  Two planes:
   *reply* acknowledging installation, which resolves the prefill node's
   :class:`~repro.core.extended.AckHandle`; when decode finishes a request
   a ``req_done`` AM notifies the origin prefill rank (completion plane).
+- **Tier plane** (``n_memory > 0``, paged only) — the paper's memory-node
+  archetype: extra *memory* ranks export segment capacity but run no
+  model compute, and the pool becomes a two-tier hierarchy.  Admission is
+  lazy (only prompt pages materialise), so the pool oversubscribes; when
+  a queued request cannot place, the SLO-aware scheduler
+  (:mod:`repro.serving.scheduler`) preempts victims — pages swap OUT to a
+  memory rank as one vectored put (``Node.put_nbv``: payloads + tier-slot
+  offsets in one command block, ``repro.serving.tier.swap_out_pages``)
+  and swap back IN at resume as one vectored get, both riding the same
+  tick's SPMD transfer program; or, when the β model prices it cheaper,
+  the victim recomputes (pages dropped, resume re-prefills and replays
+  its generated tokens bit-identically).  Preempted requests resume
+  bit-exactly: the restored pages are the carrier bytes that left.
 
 Every tick the host launches the (jitted, perm-cached) SPMD transfer
 program asynchronously, runs one continuous-batching decode step on every
@@ -77,11 +90,13 @@ class DisaggCluster:
         *,
         n_prefill: int = 1,
         n_decode: int = 1,
+        n_memory: int = 0,
         decode_batch: int = 4,
         cache_len: int = 64,
         n_slots: int = 2,
         prefill_backend: str = "xla",
         decode_backend: str = "xla",
+        memory_backend: str = "xla",
         interpret: bool = True,
         node_axis: str = "node",
         eos_id: int = -1,
@@ -89,6 +104,9 @@ class DisaggCluster:
         paged: bool = False,
         page_tokens: int = 8,
         pages_per_rank: Optional[int] = None,
+        mem_slots_per_rank: Optional[int] = None,
+        decode_step_us: float = 2000.0,
+        prefill_us: float = 4000.0,
     ):
         import jax
         import jax.numpy as jnp
@@ -97,13 +115,19 @@ class DisaggCluster:
         from repro.compat import shard_map
         from repro.launch.serve import Server
         from repro.serving import pool as pool_lib
+        from repro.serving import scheduler as sched_lib
+        from repro.serving import tier as tier_lib
+
+        if n_memory and not paged:
+            raise ValueError("memory ranks require paged=True (page swap)")
 
         self.jax, self.jnp = jax, jnp
         self.gasnet = gasnet
         self.shard_map = shard_map
         self.model, self.ctx, self.params = model, ctx, params
         self.n_prefill, self.n_decode = n_prefill, n_decode
-        self.n = n_prefill + n_decode
+        self.n_memory = n_memory
+        self.n = n_prefill + n_decode + n_memory
         self.cache_len = cache_len
         self.n_slots = n_slots
         self.node_axis = node_axis
@@ -111,9 +135,10 @@ class DisaggCluster:
         self.costs = costs
         self.paged = paged
 
-        self.roles = mesh_lib.serve_roles(n_prefill, n_decode)
+        self.roles = mesh_lib.serve_roles(n_prefill, n_decode, n_memory)
         backends = mesh_lib.role_backends(
-            self.roles, prefill=prefill_backend, decode=decode_backend
+            self.roles, prefill=prefill_backend, decode=decode_backend,
+            memory=memory_backend,
         )
         self.mesh = mesh_lib.make_mesh((self.n,), (node_axis,))
         self.gas = gasnet.Context(
@@ -149,6 +174,31 @@ class DisaggCluster:
                 pool_lib.PagedKVStore(self.playout, self.pages_per_rank)
                 for _ in range(n_decode)
             ]
+            # ---- tiered KV memory: memory-only ranks + preemption ------
+            self.max_swap = self.playout.n_pages  # one request per tick
+            if n_memory:
+                self.mem_slots = mem_slots_per_rank or (
+                    2 * decode_batch * self.playout.n_pages
+                )
+                self.tier = tier_lib.MemoryTier(
+                    n_memory, self.mem_slots, self.playout.page_elems
+                )
+                self.seg_elems = max(
+                    self.seg_elems, self.mem_slots * self.playout.page_elems
+                )
+                # one request's pages per vectored swap transfer
+                self.swap_plan = sched.plan_p2p(
+                    nbytes=self.max_swap * self.playout.page_bytes,
+                    engine=self.gas.make_engine(),
+                    costs=costs,
+                )
+            else:
+                self.tier = None
+                self.swap_plan = None
+            self.scheduler = sched_lib.AdmissionScheduler(
+                page_bytes=self.playout.page_bytes, costs=costs,
+                decode_step_us=decode_step_us, prefill_us=prefill_us,
+            )
         else:
             self.layout = kv_lib.KVLayout.from_struct(
                 model.kv_block_struct(ctx, prompt_len=4, cache_len=cache_len)
@@ -161,6 +211,10 @@ class DisaggCluster:
                 engine=self.gas.make_engine(),
                 costs=costs,
             )
+            self.tier = None
+            self.swap_plan = None
+            self.scheduler = None
+            self.max_swap = 1
 
         # ---- AM control plane ------------------------------------------
         handlers = self.gas.handlers
@@ -217,13 +271,27 @@ class DisaggCluster:
         self._done_queue: List[Tuple[int, int, int]] = []  # (d, rid+1, origin)
         self._finished_seen = [0] * n_decode
         self._rr_decode = 0
-        self._transfer_fns: Dict[Tuple[int, ...], Any] = {}
+        self._transfer_fns: Dict[Tuple, Any] = {}
         self.kv_transfers = 0
         self.kv_acked = 0
         self.kv_pages_sent = 0
         self.kv_pages_shared = 0
         self.decoded_tokens = 0
         self.dropped_am = 0
+        # ---- tiered-memory scheduler state -----------------------------
+        # rid -> preemption snapshot (mode, decode pos, last token, pages)
+        self._preempted: Dict[int, Dict[str, Any]] = {}
+        # staged swap-outs: (rid, d, src_offsets, dst_offsets, mem_rank)
+        self._swap_jobs: List[Tuple] = []
+        # staged swap-ins: (rid, d, remote_offsets, local_offsets, mem_rank)
+        self._fetch_jobs: List[Tuple] = []
+        self._inflight_swap: Optional[Tuple] = None
+        self._inflight_fetch: Optional[Tuple] = None
+        # rid -> decode pool index whose shard holds the restored pages,
+        # waiting for a free decode row
+        self._installable: Dict[int, int] = {}
+        self.swap_out_bytes = 0
+        self.swap_in_bytes = 0
 
     # ------------------------------------------------------------------ #
     # role views
@@ -231,13 +299,17 @@ class DisaggCluster:
     def decode_rank(self, d: int) -> int:
         return self.n_prefill + d
 
+    def memory_rank(self, m: int) -> int:
+        return self.n_prefill + self.n_decode + m
+
     def _alias_store_mem(self) -> None:
         """Point each decode store's physical page array at its rank's
         partition of the (freshly consumed) pool segment — the host
         mirror of the PGAS shard.  Stores never write in disaggregated
         mode; pages arrive only over the wire."""
+        pool_elems = self.pages_per_rank * self.playout.page_elems
         for d, store in enumerate(self.stores):
-            store.mem = self.kvseg[self.decode_rank(d)].reshape(
+            store.mem = self.kvseg[self.decode_rank(d)][:pool_elems].reshape(
                 self.pages_per_rank, self.playout.page_elems
             )
 
@@ -248,17 +320,32 @@ class DisaggCluster:
         req.t_enqueue = time.monotonic()
         self.queue.append(req)
         self.by_rid[req.rid] = req
+        if self.scheduler is not None:
+            from repro.serving.scheduler import SLO
+
+            self.scheduler.submit(
+                req.rid, getattr(req, "slo", None) or SLO(),
+                prompt_len=len(req.prompt), now=req.t_enqueue,
+            )
 
     # ------------------------------------------------------------------ #
     # SPMD transfer program (data plane + control plane, one launch)
     # ------------------------------------------------------------------ #
-    def _transfer_fn(self, perm: Tuple[int, ...]) -> Any:
-        cached = self._transfer_fns.get(perm)
+    def _transfer_fn(
+        self,
+        perm: Tuple[int, ...],
+        perm_swap: Optional[Tuple[int, ...]] = None,
+        perm_fetch: Optional[Tuple[int, ...]] = None,
+    ) -> Any:
+        key = (perm, perm_swap, perm_fetch)
+        cached = self._transfer_fns.get(key)
         if cached is not None:
             return cached
         jax = self.jax
         gasnet = self.gasnet
         from jax.sharding import PartitionSpec as P
+
+        from repro.serving import tier as tier_lib
 
         spec = P(self.node_axis)
         block = self.block_elems
@@ -296,7 +383,8 @@ class DisaggCluster:
                 handles.extend(hs)
             return handles
 
-        def body(kvseg, inbox, acks, done, outflat, meta, page_meta, done_meta):
+        def body(kvseg, inbox, acks, done, outflat, meta, page_meta,
+                 done_meta, swap_meta, fetch_meta):
             node = self.gas.make_node()
             has = meta[0, 0] > 0
             rid, slot, dst = meta[0, 1], meta[0, 2], meta[0, 3]
@@ -305,6 +393,29 @@ class DisaggCluster:
                 handles = data_plane_paged(node, kvseg, outflat, meta, page_meta)
             else:
                 handles = data_plane_dense(node, kvseg, outflat, meta)
+            # tier plane: swap-out rides the vectored put (victim pages +
+            # tier slot offsets in one command block), swap-in the
+            # vectored get — both split-phase, in flight alongside the
+            # admission puts and the AM control plane.
+            swap_handles = []
+            geth = None
+            if perm_swap is not None:
+                swap_handles, _ = tier_lib.swap_out_pages(
+                    node, kvseg,
+                    swap_meta[0, :, 0], swap_meta[0, :, 1],
+                    to=gasnet.Perm(perm_swap),
+                    page_elems=self.playout.page_elems,
+                    flags=swap_meta[0, :, 2],
+                    plan=self.swap_plan,
+                )
+            if perm_fetch is not None:
+                geth = node.get_nbv(
+                    kvseg,
+                    frm=gasnet.Perm(perm_fetch),
+                    indices=fetch_meta[0, :, 0],
+                    size=self.playout.page_elems,
+                    pred=fetch_meta[0, :, 2].max() > 0,
+                )
             # control plane rides while the puts are in flight
             ackh = node.am_call(
                 dst,
@@ -321,6 +432,14 @@ class DisaggCluster:
                     pred=done_meta[0, j, 0] > 0,
                 )
             kvseg = kv_lib.sync_push(node, kvseg, handles)
+            for h in swap_handles:
+                kvseg = node.sync(h)
+            if geth is not None:
+                fetched = node.sync(geth)
+                kvseg = tier_lib.install_pages(
+                    node, kvseg, fetched,
+                    fetch_meta[0, :, 1], fetch_meta[0, :, 2],
+                )
             state = {"inbox": inbox[0], "acks": acks[0], "done": done[0]}
             state = node.am_flush(state)
             acked = node.sync(ackh)
@@ -336,12 +455,12 @@ class DisaggCluster:
             self.shard_map(
                 body,
                 mesh=self.mesh,
-                in_specs=(spec,) * 8,
+                in_specs=(spec,) * 10,
                 out_specs=(spec,) * 5,
                 check_vma=False,
             )
         )
-        self._transfer_fns[perm] = fn
+        self._transfer_fns[key] = fn
         return fn
 
     # ------------------------------------------------------------------ #
@@ -371,38 +490,65 @@ class DisaggCluster:
         for d in order:
             if d in taken:
                 continue
-            if self.paged and self.stores[d].n_free < self.playout.n_pages:
-                continue
+            if self.paged:
+                need = (
+                    self.playout.pages_for(len(prompt))
+                    if prompt is not None
+                    else self.playout.n_pages
+                )
+                if self.stores[d].n_free < need:
+                    continue
             for slot in range(self.n_slots):
                 if slot not in self.staged[d]:
                     self._rr_decode = (d + 1) % self.n_decode
                     return d, slot
         return None
 
+    def _admission_queue(self) -> List[Any]:
+        """The submit queue in scheduler order (priority-major, EDF within
+        a priority) when paged; FIFO otherwise."""
+        if not (self.paged and self.scheduler is not None):
+            return list(self.queue)
+        pos = {
+            rid: i for i, rid in enumerate(self.scheduler.admission_order())
+        }
+        return sorted(
+            self.queue, key=lambda r: pos.get(r.rid, len(pos) + r.rid)
+        )
+
     def _run_prefills(self) -> None:
         """Assign queued requests to idle prefill workers (host compute)."""
         taken = {push[1] for push in self.pending_push if push is not None}
+        order = self._admission_queue()
         for p in range(self.n_prefill):
-            if self.pending_push[p] is not None or not self.queue:
+            if self.pending_push[p] is not None or not order:
                 continue
-            target = self._pick_target(taken, prompt=self.queue[0].prompt)
+            req = order[0]
+            target = self._pick_target(taken, prompt=req.prompt)
             if target is None:
+                # oversubscribed: try to preempt for the head-of-order
+                # request (tiered clusters only)
+                if self.paged and self.tier is not None:
+                    self._try_preempt_for(req)
                 return
             d, slot = target
-            req = self.queue.pop(0)
+            order.pop(0)
+            self.queue.remove(req)
             jnp = self.jnp
             toks = jnp.asarray(req.prompt, jnp.int32)[None]
             logits, caches_one = self._prefill_fn(self.params, {"inputs": toks})
             tok = int(np.argmax(np.asarray(logits)[0]))
-            req.out.append(tok)
-            req.t_first = time.monotonic()
+            if not req.out:  # a recompute-resume already holds its tokens
+                req.out.append(tok)
+                req.t_first = time.monotonic()
             if self.paged:
                 # the pool's allocator assigns the pages NOW (host control
                 # plane); the page payloads go one-sided into those exact
                 # slots of the decode rank's pool shard — no staging copy,
-                # and prefix-shared pages ship nothing at all.
+                # and prefix-shared pages ship nothing at all.  Lazy: only
+                # prompt pages materialise, so the pool oversubscribes.
                 pages = np.asarray(self.playout.flatten(caches_one))
-                plan = self.stores[d].plan_admit(req.prompt)
+                plan = self.stores[d].plan_admit(req.prompt, lazy=True)
                 self.stores[d].commit(req.rid, plan)
                 self.pending_push[p] = (req, d, slot, pages, plan)
             else:
@@ -414,6 +560,173 @@ class DisaggCluster:
             self.staged[d][slot] = req.rid
             taken.add(d)
 
+    # ------------------------------------------------------------------ #
+    # tiered memory: preemption, swap staging, resume
+    # ------------------------------------------------------------------ #
+    def _freeable(self, d: int, rid: int) -> int:
+        return self.stores[d].freeable(rid)
+
+    def _try_preempt_for(self, req: Any) -> None:
+        """Head-of-order request found no rank with pages: preempt victims
+        on the rank that can reclaim enough.  Strictly-lower-priority
+        victims always qualify; equal-priority victims only once the
+        beneficiary's TTFT deadline has expired (SLO pressure)."""
+        from repro.serving.scheduler import SLO
+
+        if self._swap_jobs or self._inflight_swap is not None:
+            return  # one staged swap-out at a time
+        need = self.playout.pages_for(len(req.prompt))
+        slo = getattr(req, "slo", None) or SLO()
+        expired = time.monotonic() > req.t_enqueue + slo.ttft_deadline_s
+        for d in range(self.n_decode):
+            shortage = need - self.stores[d].n_free
+            if shortage <= 0:
+                continue  # pages are not this rank's blocker (slots are)
+            if all(s in self.staged[d] for s in range(self.n_slots)):
+                continue  # no staging slot: freeing pages would not help
+            running = [
+                r.rid for r in self.decode_servers[d].active if r is not None
+            ]
+            victims = self.scheduler.pick_victims(
+                running,
+                shortage,
+                lambda rid, d=d: self._freeable(d, rid),
+                beneficiary=req.rid,
+                strict=not expired,
+            )
+            if victims:
+                for rid in victims:
+                    self._preempt(d, rid)
+                return
+
+    def _preempt(self, d: int, rid: int) -> None:
+        """Evict one running request from decode rank ``d``: swap its
+        pages to a memory rank (vectored-put job staged for this tick's
+        transfer) or drop them for recompute-replay, per the β cost
+        model."""
+        from repro.serving import pool as pool_lib
+        from repro.serving import tier as tier_lib
+
+        server = self.decode_servers[d]
+        store = self.stores[d]
+        i = next(
+            ix for ix, r in enumerate(server.active)
+            if r is not None and r.rid == rid
+        )
+        req = server.active[i]
+        pos = int(server.positions[i])
+        last = int(server.last_token[i, 0])
+        n_mat = self.playout.pages_for(pos)
+        self.scheduler.entry(rid).generated = max(0, len(req.out) - 1)
+        mode, _, _ = self.scheduler.choose_mode(rid, n_mat)
+        hold = None
+        if mode == "swap":
+            try:
+                store.materialize_through(rid, n_mat)
+                hold = self.tier.plan_swap_out(rid, list(range(n_mat)))
+            except (pool_lib.OutOfPagesError, tier_lib.OutOfSlotsError):
+                mode = "recompute"  # no room to stage: drop and replay
+        if mode == "swap":
+            # stage the victim's CURRENT state into its pool pages (host
+            # mirror of the rank's segment): full prompt pages already
+            # hold these exact bytes (decode never writes them), so
+            # prefix-shared pages are rewritten bit-identically and their
+            # sharers are unaffected; boundary/generated pages are private
+            # by construction.
+            row = self.jax.tree.map(
+                lambda x: x[:, i : i + 1], server.caches
+            )
+            rows = np.asarray(self.playout.flatten(row))
+            table = store.page_table(rid)
+            for lp in range(n_mat):
+                store.mem[table[lp]] = rows[lp]
+            src = [table[lp] * self.playout.page_elems for lp in range(n_mat)]
+            dst = [
+                self.tier.slot_offset(hold.rank, s) for s in hold.slots
+            ]
+            self._swap_jobs.append(
+                (rid, d, src, dst, self.memory_rank(hold.rank))
+            )
+            self.swap_out_bytes += n_mat * self.playout.page_bytes
+        else:
+            store.evict_request(rid)
+            self.queue.append(req)  # resume = re-prefill + replay
+        replay = list(server.replaying.get(i, []))
+        server.evict_row(i)
+        self._preempted[rid] = {
+            "mode": mode,
+            "position": pos,
+            "last_token": last,
+            "n_mat": n_mat,
+            "swapped": False,
+            # a victim caught mid-replay resumes with its replay tail
+            "replay": replay,
+        }
+        self.scheduler.on_preempted(rid, mode)
+
+    def _run_resumes(self) -> None:
+        """Stage swap-ins: a preempted-by-swap request whose pages sit in
+        the tier resumes onto the decode rank with room — one vectored-get
+        job per tick; the fetched pages install into a decode row once the
+        transfer lands."""
+        if not (self.paged and self.tier is not None):
+            return
+        if self._fetch_jobs or self._inflight_fetch is not None:
+            return
+        for rid in self.scheduler.admission_order():
+            snap = self._preempted.get(rid)
+            if (
+                snap is None
+                or snap["mode"] != "swap"
+                or not snap["swapped"]
+                or snap.get("staged")
+                or rid in self._installable
+            ):
+                continue
+            hold = self.tier.holdings[rid]
+            best = None
+            for d in range(self.n_decode):
+                if self.stores[d].n_free >= len(hold.logical):
+                    best = d
+                    break
+            if best is None:
+                continue
+            phys = self.stores[best].admit_resume(rid, hold.logical)
+            remote = [self.tier.slot_offset(hold.rank, s) for s in hold.slots]
+            local = [pp * self.playout.page_elems for pp in phys]
+            self._fetch_jobs.append(
+                (rid, best, remote, local, self.memory_rank(hold.rank))
+            )
+            snap["staged"] = True
+            return
+
+    def _install_resumed(self) -> None:
+        """Bind restored requests to free decode rows: gather the swapped
+        pages back through the fresh table and resume decoding exactly at
+        the preempted position (bit-identical continuation)."""
+        for rid, d in list(self._installable.items()):
+            server = self.decode_servers[d]
+            snap = self._preempted[rid]
+            req = self.by_rid[rid]
+            ok = server.admit_prefilled(
+                req,
+                self.stores[d].gather(rid),
+                first_token=snap["last_token"],
+                position=snap["position"],
+            )
+            if not ok:
+                continue  # no free row yet; pages stay resident
+            if snap.get("replay"):
+                row = next(
+                    ix for ix, r in enumerate(server.active)
+                    if r is not None and r.rid == rid
+                )
+                server.start_replay(row, snap["replay"])
+            self.tier.release(rid)
+            del self._installable[rid]
+            del self._preempted[rid]
+            self.scheduler.on_admitted(rid, time.monotonic())
+
     def _launch_transfer(self) -> Optional[Tuple[Any, ...]]:
         """Build this tick's transfer inputs and dispatch the SPMD program
         (asynchronously — the caller overlaps decode before consuming)."""
@@ -422,10 +735,37 @@ class DisaggCluster:
             for p, push in enumerate(self.pending_push)
             if push is not None
         ]
-        if not pushes and not self._done_queue:
+        if (
+            not pushes
+            and not self._done_queue
+            and not self._swap_jobs
+            and not self._fetch_jobs
+        ):
             return None
         edges = {p: self.decode_rank(d) for p, (_, d, _, _, _) in pushes}
         perm = kv_lib.handoff_permutation(self.n, edges)
+        # tier plane: at most one swap-out and one swap-in job per tick,
+        # each its own completed bijection (decode rank -> memory rank)
+        perm_swap = perm_fetch = None
+        swap_meta = np.zeros((self.n, self.max_swap, 3), np.int32)
+        fetch_meta = np.zeros((self.n, self.max_swap, 3), np.int32)
+        if self.paged and self.n_memory:
+            if self._swap_jobs:
+                job = self._swap_jobs.pop(0)
+                _, d, src, dst, mrank = job
+                rank = self.decode_rank(d)
+                for j, (s, t) in enumerate(zip(src, dst)):
+                    swap_meta[rank, j] = (s, t, 1)
+                perm_swap = kv_lib.handoff_permutation(self.n, {rank: mrank})
+                self._inflight_swap = job
+            if self._fetch_jobs:
+                job = self._fetch_jobs.pop(0)
+                _, d, remote, local, mrank = job
+                rank = self.decode_rank(d)
+                for j, (s, t) in enumerate(zip(remote, local)):
+                    fetch_meta[rank, j] = (s, t, 1)
+                perm_fetch = kv_lib.handoff_permutation(self.n, {rank: mrank})
+                self._inflight_fetch = job
         if self.paged:
             outflat = np.zeros(
                 (self.n, self.playout.n_pages, self.playout.page_elems),
@@ -441,8 +781,10 @@ class DisaggCluster:
             meta[p] = (1, req.rid, slot, self.decode_rank(d))
             if self.paged:
                 for j, (page_id, fresh) in enumerate(zip(aplan.table, aplan.fresh)):
+                    # unmaterialised slots (lazy tail) park at offset 0,
+                    # gated off like prefix-shared pages
                     page_meta[p, j] = (
-                        page_id * self.playout.page_elems,
+                        max(page_id, 0) * self.playout.page_elems,
                         1 if fresh else 0,
                     )
             if not getattr(req, "_push_counted", False):
@@ -451,7 +793,10 @@ class DisaggCluster:
                 if self.paged:
                     n_fresh = sum(aplan.fresh)
                     self.kv_pages_sent += n_fresh
-                    self.kv_pages_shared += self.playout.n_pages - n_fresh
+                    self.kv_pages_shared += sum(
+                        1 for pid, f in zip(aplan.table, aplan.fresh)
+                        if pid >= 0 and not f
+                    )
         done_meta = np.zeros((self.n, self.max_done, 2), np.int32)
         per_rank_counts = [0] * self.n
         leftover: List[Tuple[int, int, int]] = []
@@ -464,7 +809,7 @@ class DisaggCluster:
             else:
                 leftover.append((d, rid_plus1, origin))
         self._done_queue = leftover
-        fn = self._transfer_fn(perm)
+        fn = self._transfer_fn(perm, perm_swap, perm_fetch)
         return fn(
             self.kvseg,
             self.inbox,
@@ -474,6 +819,8 @@ class DisaggCluster:
             meta,
             page_meta,
             done_meta,
+            swap_meta,
+            fetch_meta,
         )
 
     def _decode_step(self) -> None:
@@ -490,6 +837,8 @@ class DisaggCluster:
                     # drop the request's page references; prefix pages
                     # shared with live requests stay resident
                     self.stores[d].release(req.rid)
+                    if self.scheduler is not None:
+                        self.scheduler.on_done(req.rid)
                 origin = getattr(req, "origin_rank", 0)
                 self._done_queue.append((d, req.rid + 1, origin))
 
@@ -501,6 +850,19 @@ class DisaggCluster:
         if self.paged:
             self._alias_store_mem()  # fresh host mirror of the pool shards
         self.dropped_am += int(dropped.sum())
+        # tier plane completions: a landed swap-out releases the victim's
+        # pool pages (never before the bytes are safe in the memory rank);
+        # a landed swap-in becomes installable into a decode row.
+        if self._inflight_swap is not None:
+            rid, d, src, _, _ = self._inflight_swap
+            self.stores[d].evict_request(rid)
+            self._preempted[rid]["swapped"] = True
+            self._inflight_swap = None
+        if self._inflight_fetch is not None:
+            rid, d, remote, _, _ = self._inflight_fetch
+            self._installable[rid] = d
+            self.swap_in_bytes += len(remote) * self.playout.page_bytes
+            self._inflight_fetch = None
         # prefill side: retire acknowledged pushes
         for p, push in enumerate(self.pending_push):
             if push is None:
@@ -531,12 +893,25 @@ class DisaggCluster:
             # pool shard (not any staging copy) is the source of truth
             d = rank - self.n_prefill
             caches_one = self.stores[d].gather(req.rid)
-            return server.admit_prefilled(
+            ok = server.admit_prefilled(
                 req,
                 caches_one,
                 first_token=req.out[0],
                 position=len(req.prompt),
             )
+            if ok and self.scheduler is not None:
+                snap = self._preempted.get(req.rid)
+                if snap is not None and snap["mode"] == "recompute":
+                    # recompute-resume: replay the generated tokens to
+                    # rebuild the KV bit-identically before continuing
+                    row = next(
+                        ix for ix, r in enumerate(server.active)
+                        if r is not None and r.rid == req.rid
+                    )
+                    server.start_replay(row, req.out[1:])
+                    del self._preempted[req.rid]
+                self.scheduler.on_admitted(req.rid, time.monotonic())
+            return ok
         block = self.kvseg[
             rank, slot * self.block_elems : (slot + 1) * self.block_elems
         ]
@@ -549,13 +924,19 @@ class DisaggCluster:
 
     # ------------------------------------------------------------------ #
     def tick(self) -> None:
-        """One cluster tick: prefill, launch the KV transfer, overlap a
-        decode step with it, then consume the transfer results."""
+        """One cluster tick: prefill (possibly preempting for the queue
+        head), stage resumes, launch the KV transfer (admission puts +
+        swap puts + swap-in gets + AM control plane), overlap a decode
+        step with it, consume the results, and install restored
+        requests."""
         self._run_prefills()
+        self._run_resumes()
         results = self._launch_transfer()
         self._decode_step()  # overlaps the in-flight transfer
         if results is not None:
             self._consume_transfer(results)
+        if self.paged and self.tier is not None:
+            self._install_resumed()
 
     def idle(self) -> bool:
         return (
@@ -563,6 +944,12 @@ class DisaggCluster:
             and all(p is None for p in self.pending_push)
             and not any(self.staged[d] for d in range(self.n_decode))
             and not any(any(s.active) or s.queue for s in self.decode_servers)
+            and not self._preempted
+            and not self._swap_jobs
+            and not self._fetch_jobs
+            and not self._installable
+            and self._inflight_swap is None
+            and self._inflight_fetch is None
         )
 
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
@@ -619,4 +1006,14 @@ class DisaggCluster:
                 "prefix_hit_rate": (hits / (hits + misses) if hits + misses else 0.0),
                 "pool_free_pages": sum(s.n_free for s in self.stores),
             })
+            if self.scheduler is not None:
+                stats.update(self.scheduler.stats())
+            if self.tier is not None:
+                stats.update(self.tier.stats())
+                stats.update({
+                    "n_memory_ranks": self.n_memory,
+                    "swap_out_bytes": self.swap_out_bytes,
+                    "swap_in_bytes": self.swap_in_bytes,
+                    "swap_plan": self.swap_plan.describe(),
+                })
         return stats

@@ -60,6 +60,7 @@ __all__ = [
     "PoolError",
     "OutOfPagesError",
     "DoubleFreeError",
+    "UNMATERIALIZED",
     "make_pool",
     "alloc",
     "free",
@@ -72,6 +73,12 @@ __all__ = [
     "fetch_pages",
     "sync_fetch",
 ]
+
+#: Page-table sentinel for a slot whose physical page does not exist yet
+#: (lazy allocation) — it materialises when the first position inside it
+#: is written, and :meth:`PagedKVStore.gather` synthesises the absent page
+#: from :meth:`PagedLayout.empty_page_row`.
+UNMATERIALIZED = -1
 
 
 # --------------------------------------------------------------------------- #
@@ -99,6 +106,7 @@ class PageLeafSpec:
     axis: int  # token axis
     offset: int  # start column inside the carrier page
     size: int  # carrier elements per page for this leaf
+    fill: int = 0  # init value of an unwritten slot (-1 for "pos" leaves)
 
 
 class PagedLayout:
@@ -124,6 +132,7 @@ class PagedLayout:
         self.page_tokens = int(page_tokens)
         self.n_pages = self.cache_len // self.page_tokens
         self.page_elems = sum(leaf.size for leaf in leaves)
+        self._empty_row: Optional[np.ndarray] = None
 
     @classmethod
     def from_struct(
@@ -134,14 +143,15 @@ class PagedLayout:
                 f"cache_len={cache_len} not a multiple of "
                 f"page_tokens={page_tokens}"
             )
-        leaf_structs, treedef = jax.tree_util.tree_flatten(struct)
+        with_path, treedef = jax.tree_util.tree_flatten_with_path(struct)
         leaves: List[PageLeafSpec] = []
         offset = 0
-        for s in leaf_structs:
+        for path, s in with_path:
             ax = token_axis(s.shape, cache_len)
             size = 1
             for i, d in enumerate(s.shape):
                 size *= int(page_tokens) if i == ax else int(d)
+            name = getattr(path[-1], "key", None) if path else None
             leaves.append(
                 PageLeafSpec(
                     shape=tuple(int(d) for d in s.shape),
@@ -149,10 +159,39 @@ class PagedLayout:
                     axis=ax,
                     offset=offset,
                     size=size,
+                    # unwritten cache slots are NOT zeros: position leaves
+                    # init to -1 (the empty-slot sentinel attention masks
+                    # on); payload leaves init to 0 — same rule as the
+                    # model's prefill cache construction.
+                    fill=-1 if name == "pos" else 0,
                 )
             )
             offset += size
         return cls(treedef, leaves, cache_len, page_tokens)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Number of leading pages covering ``n_tokens`` positions."""
+        return -(-max(0, int(n_tokens)) // self.page_tokens)
+
+    def empty_page_row(self) -> np.ndarray:
+        """Carrier row of one ABSENT page: the exact bytes a freshly
+        initialised cache holds at unwritten positions (payloads zero,
+        ``pos`` = -1).  Lazy tables synthesise this row at :meth:`gather`
+        for unmaterialised slots, so a recycled physical page's stale
+        bytes never leak into attention (the ``pos=-1`` init means an
+        absent page is not zeros)."""
+        if self._empty_row is None:
+            cols = []
+            for leaf in self.leaves:
+                shape = tuple(
+                    self.page_tokens if i == leaf.axis else d
+                    for i, d in enumerate(leaf.shape)
+                )
+                v = jnp.full(shape, leaf.fill, leaf.dtype)
+                c = jnp.moveaxis(kv_lib.carrier_cast(v), leaf.axis, 0)
+                cols.append(c.reshape(leaf.size))
+            self._empty_row = np.asarray(jnp.concatenate(cols), np.float32)
+        return self._empty_row
 
     @property
     def page_bytes(self) -> int:
@@ -205,6 +244,49 @@ class PagedLayout:
             for leaf in self.leaves
         ]
         return jax.tree_util.tree_unflatten(self.treedef, vals)
+
+    def decode_views(self, mem: Any) -> Any:
+        """Per-layer page-pool views of a physical pool for the paged
+        decode step: each serving-cache leaf ``(L, 1, cache_len, *tail)``
+        (the ``Model.kv_block_struct`` convention: batch 1, token axis 2)
+        becomes ``(L, n_phys_pages, page_tokens, *tail)`` — the
+        ``k_pages``/``v_pages`` shape ``kernels.paged_attention`` reads
+        through a page table.  ``mem`` is any ``(P, page_elems)`` carrier
+        pool (the rank's shard, possibly with extra scratch rows); the
+        transform is a pure reshape, bit-transparent per leaf dtype."""
+        mem = jnp.asarray(mem)
+        n_phys = mem.shape[0]
+        vals = []
+        for leaf in self.leaves:
+            if len(leaf.shape) < 3 or leaf.axis != 2 or leaf.shape[1] != 1:
+                raise ValueError(
+                    f"decode_views needs (L, 1, cache_len, ...) serving "
+                    f"leaves, got {leaf.shape} (token axis {leaf.axis})"
+                )
+            tail = leaf.shape[3:]
+            col = mem[:, leaf.offset : leaf.offset + leaf.size]
+            x = col.reshape(
+                (n_phys, self.page_tokens, leaf.shape[0], 1) + tail
+            )
+            x = jnp.moveaxis(x, 2, 0)[:, :, :, 0]  # (L, P, T, *tail)
+            vals.append(kv_lib.carrier_uncast(x, leaf.dtype))
+        return jax.tree_util.tree_unflatten(self.treedef, vals)
+
+    def views_to_pool(self, views: Any) -> jax.Array:
+        """Inverse of :meth:`decode_views`: per-layer page pools back into
+        the ``(P, page_elems)`` carrier array (bit-exact round trip)."""
+        vals = jax.tree_util.tree_leaves(views)
+        if len(vals) != len(self.leaves):
+            raise ValueError(
+                f"views have {len(vals)} leaves, layout expects "
+                f"{len(self.leaves)}"
+            )
+        cols = []
+        for v, leaf in zip(vals, self.leaves):
+            x = kv_lib.carrier_cast(v)  # (L, P, T, *tail)
+            x = jnp.moveaxis(x[:, :, :, None], 0, 2)  # (P, T, L, 1, *tail)
+            cols.append(x.reshape(x.shape[0], leaf.size))
+        return jnp.concatenate(cols, axis=1)
 
     def unflatten(self, pages: jax.Array) -> Any:
         """(n_pages, page_elems) carrier pages -> cache pytree."""
@@ -329,8 +411,24 @@ def writable(state: PoolState, page: int) -> Tuple[PoolState, int, bool]:
     return state, fresh, True
 
 
-def check_pool(state: PoolState) -> None:
-    """Assert the allocator invariant (used by the property tests)."""
+def check_pool(
+    state: PoolState,
+    tables: Optional[Sequence[Sequence[int]]] = None,
+    evicted: Optional[Sequence[Sequence[int]]] = None,
+) -> None:
+    """Assert the allocator invariant (used by the property tests).
+
+    With ``tables`` (the resident page tables, possibly holding
+    :data:`UNMATERIALIZED` slots) the check extends to the
+    oversubscription seam: every materialised entry must be live and
+    every reference must be table-borne — ``refcnt[p]`` equals the
+    entry's multiplicity across tables, so unmaterialised slots carry no
+    refcount and no page is referenced off the books.  With ``evicted``
+    (the page tables of swapped-out requests, as snapshotted at
+    preemption) the check asserts those requests hold NO pool reference:
+    an evicted-but-referenced page lives in the memory tier, and its old
+    physical page is either recycled or owned by surviving sharers —
+    never still pinned by the preempted request."""
     if len(set(state.free)) != len(state.free):
         raise AssertionError(f"duplicate pages on free list: {state.free}")
     for p in state.free:
@@ -341,6 +439,37 @@ def check_pool(state: PoolState) -> None:
         raise AssertionError(
             f"{live} live + {state.n_free} free != {state.n_pages} pages"
         )
+    if tables is not None:
+        counts = [0] * state.n_pages
+        for t in tables:
+            for p in t:
+                if p == UNMATERIALIZED:
+                    continue
+                if not (0 <= p < state.n_pages):
+                    raise AssertionError(f"table entry {p} outside pool")
+                counts[p] += 1
+        for p, (want, got) in enumerate(zip(counts, state.refcnt)):
+            if want != got:
+                raise AssertionError(
+                    f"page {p}: {want} table reference(s) vs refcount {got}"
+                )
+    if evicted is not None:
+        resident = (
+            {p for t in tables for p in t if p != UNMATERIALIZED}
+            if tables is not None
+            else None
+        )
+        for t in evicted:
+            for p in t:
+                if p == UNMATERIALIZED:
+                    continue
+                if resident is not None and p in resident:
+                    continue  # recycled to (or shared with) a live request
+                if 0 <= p < state.n_pages and state.refcnt[p] != 0:
+                    raise AssertionError(
+                        f"evicted page {p} still holds refcount "
+                        f"{state.refcnt[p]} with no table referencing it"
+                    )
 
 
 # --------------------------------------------------------------------------- #
@@ -350,14 +479,23 @@ def check_pool(state: PoolState) -> None:
 class AdmitPlan:
     """Placement decision for one request: its page table, which pages are
     fresh (must be written/transferred) vs prefix-shared (already
-    resident — the transfer ships them ``pred=False``)."""
+    resident — the transfer ships them ``pred=False``).  Lazy admissions
+    leave the tail :data:`UNMATERIALIZED` (no physical page yet): those
+    slots are neither fresh nor shared."""
 
     table: Tuple[int, ...]
     fresh: Tuple[bool, ...]
 
     @property
     def shared(self) -> Tuple[int, ...]:
-        return tuple(p for p, f in zip(self.table, self.fresh) if not f)
+        return tuple(
+            p for p, f in zip(self.table, self.fresh)
+            if not f and p != UNMATERIALIZED
+        )
+
+    @property
+    def n_materialized(self) -> int:
+        return sum(1 for p in self.table if p != UNMATERIALIZED)
 
 
 class PagedKVStore:
@@ -393,17 +531,30 @@ class PagedKVStore:
         self.prefix_misses = 0
 
     # ------------------------------------------------------------------ #
-    def plan_admit(self, prompt: Sequence[int]) -> AdmitPlan:
+    def plan_admit(self, prompt: Sequence[int], lazy: bool = False) -> AdmitPlan:
         """Allocate a page table for one request, prefix-sharing resident
         full prompt pages.  Pure allocator mutation; the payload write (or
-        one-sided transfer) of the fresh pages happens separately."""
+        one-sided transfer) of the fresh pages happens separately.
+
+        ``lazy=True`` materialises only the pages the prompt covers; the
+        generation tail stays :data:`UNMATERIALIZED` and pages appear as
+        positions are written (:meth:`prepare_write`) — so the pool can
+        admit an aggregate logical demand larger than its physical
+        capacity (oversubscription)."""
         pt = self.layout.page_tokens
         n_shareable = len(prompt) // pt  # only fully-covered prompt pages
+        n_backed = (
+            self.layout.pages_for(len(prompt)) if lazy else self.layout.n_pages
+        )
         table: List[int] = []
         fresh: List[bool] = []
         prompt = tuple(int(t) for t in prompt)
         chain_live = True
         for p in range(self.layout.n_pages):
+            if p >= n_backed:
+                table.append(UNMATERIALIZED)
+                fresh.append(False)
+                continue
             page_id = None
             if chain_live and p < n_shareable:
                 page_id = self._prefix.get(prompt[: (p + 1) * pt])
@@ -457,43 +608,151 @@ class PagedKVStore:
 
     # ------------------------------------------------------------------ #
     def gather(self, rid: int) -> Any:
-        """Read one request's cache back through its page table."""
-        return self.layout.unflatten(self.mem[list(self.tables[rid])])
+        """Read one request's cache back through its page table.
+        Unmaterialised slots synthesise the absent page
+        (:meth:`PagedLayout.empty_page_row`): a recycled physical page's
+        stale bytes can never reach attention through a lazy table."""
+        table = self.tables[rid]
+        if all(p != UNMATERIALIZED for p in table):
+            return self.layout.unflatten(self.mem[list(table)])
+        empty = self.layout.empty_page_row()
+        rows = np.stack(
+            [self.mem[p] if p != UNMATERIALIZED else empty for p in table]
+        )
+        return self.layout.unflatten(rows)
 
     def page_table(self, rid: int) -> Tuple[int, ...]:
         return self.tables[rid]
 
-    def write_token_page(self, rid: int, position: int, page_row: Any) -> int:
-        """Install the page holding ``position`` after a decode step wrote
-        that token.  ``page_row`` must be the page's FULL carrier row
-        (``PagedLayout.flatten_page``).  Copy-on-write: if the page is
-        still shared with another request, the request's table is
-        repointed at a fresh page first (no payload copy needed — the
-        full row lands below).  Returns the physical page written."""
+    def freeable(self, rid: int) -> int:
+        """Pages that would return to the free list if ``rid`` were
+        evicted — refcount-aware: prefix-shared physical pages stay with
+        their sharers, unmaterialised slots hold nothing.  The victim
+        *value* signal the preemption scheduler sums."""
+        table = self.tables.get(rid, ())
+        return sum(
+            1 for p in table
+            if p != UNMATERIALIZED and self.state.refcnt[p] == 1
+        )
+
+    def device_table(self, rid: int, absent: int) -> Tuple[int, ...]:
+        """The table with unmaterialised slots replaced by ``absent`` (a
+        scratch physical page) — the form the paged-attention kernel
+        consumes: every entry must be a valid physical id, and absent
+        slots are masked by ``lengths`` anyway."""
+        return tuple(
+            absent if p == UNMATERIALIZED else p for p in self.tables[rid]
+        )
+
+    def prepare_write(self, rid: int, position: int) -> int:
+        """Make the page holding ``position`` writable for ``rid`` and
+        return its physical id: a lazy slot materialises (alloc), a
+        shared page copy-on-write splits, and the written page leaves the
+        prefix index (its chain no longer matches).  This is the
+        bookkeeping half of a decode-step write; the payload lands either
+        host-side (:meth:`write_token_page`) or on-device (the paged
+        decode step scattering straight into the pool)."""
         table = list(self.tables[rid])
         p = position // self.layout.page_tokens
         page_id = table[p]
-        self.state, dst, copied = writable(self.state, page_id)
-        if copied:
+        if page_id == UNMATERIALIZED:
+            self.state, (dst,) = alloc(self.state, 1)
             table[p] = dst
             self.tables[rid] = tuple(table)
+            # a materialising page starts absent: synthesise its init row
+            # so the bytes of whoever held it before never resurface
+            self.mem[dst] = self.layout.empty_page_row()
+        else:
+            self.state, dst, copied = writable(self.state, page_id)
+            if copied:
+                table[p] = dst
+                self.tables[rid] = tuple(table)
+                # COW payload copy: the fresh page starts as a bit-exact
+                # copy of the shared original
+                self.mem[dst] = self.mem[page_id]
         # a mutated page no longer matches its prompt chain: drop the key
         key = self._page_key.pop(dst, None)
         if key is not None and self._prefix.get(key) == dst:
             del self._prefix[key]
+        return dst
+
+    def write_token_page(self, rid: int, position: int, page_row: Any) -> int:
+        """Install the page holding ``position`` after a decode step wrote
+        that token.  ``page_row`` must be the page's FULL carrier row
+        (``PagedLayout.flatten_page``).  Copy-on-write and lazy
+        materialisation via :meth:`prepare_write`.  Returns the physical
+        page written."""
+        dst = self.prepare_write(rid, position)
         self.mem[dst] = np.asarray(page_row, np.float32)
         return dst
 
-    def release(self, rid: int) -> None:
-        """Drop one request's references; pages whose last reference drops
-        leave the prefix index with them."""
-        table = self.tables.pop(rid)
-        self.state = free(self.state, table)
-        for page_id in table:
+    def materialize_through(self, rid: int, n_pages: int) -> Tuple[int, ...]:
+        """Allocate physical pages for every unmaterialised slot among the
+        first ``n_pages`` logical pages (the pre-swap staging step: a
+        victim's decode-written positions must have pool pages to ship
+        from).  Returns the freshly allocated physical ids; the caller
+        stages their payloads."""
+        table = list(self.tables[rid])
+        fresh: List[int] = []
+        try:
+            for p in range(min(int(n_pages), len(table))):
+                if table[p] == UNMATERIALIZED:
+                    self.state, (pp,) = alloc(self.state, 1)
+                    table[p] = pp
+                    fresh.append(pp)
+        except OutOfPagesError:
+            # transactional: a partial materialisation must not leak the
+            # pages it already took (the caller falls back to recompute)
+            if fresh:
+                self.state = free(self.state, fresh)
+            raise
+        self.tables[rid] = tuple(table)
+        return tuple(fresh)
+
+    def _drop_refs(self, table: Sequence[int]) -> None:
+        live = [p for p in table if p != UNMATERIALIZED]
+        self.state = free(self.state, live)
+        for page_id in live:
             if self.state.refcnt[page_id] == 0:
                 key = self._page_key.pop(page_id, None)
                 if key is not None and self._prefix.get(key) == page_id:
                     del self._prefix[key]
+
+    def release(self, rid: int) -> None:
+        """Drop one request's references; pages whose last reference drops
+        leave the prefix index with them.  Unmaterialised slots hold no
+        reference."""
+        self._drop_refs(self.tables.pop(rid))
+
+    def evict_request(self, rid: int) -> Tuple[Tuple[int, int], ...]:
+        """Preempt ``rid``: return its materialised ``(logical, physical)``
+        page pairs, then drop every reference exactly like
+        :meth:`release`.  Refcount-aware by construction: a physical page
+        still referenced by a running request (prefix-shared) merely loses
+        this request's reference — its bytes stay resident for the
+        sharers and are never invalidated.  The caller must have captured
+        (or swapped out) the payloads *before* evicting, since a fully
+        dropped page may be recycled immediately."""
+        table = self.tables[rid]
+        pairs = tuple(
+            (lp, pp) for lp, pp in enumerate(table) if pp != UNMATERIALIZED
+        )
+        self._drop_refs(self.tables.pop(rid))
+        return pairs
+
+    def admit_resume(self, rid: int, logical_pages: Sequence[int]) -> Tuple[int, ...]:
+        """Re-admit a preempted request: allocate fresh physical pages for
+        its previously materialised logical pages (the swap-in
+        destination); the rest of the table stays unmaterialised.
+        Resumed tables do not re-enter the prefix index — their chains
+        may have diverged from the resident prompts."""
+        logical = sorted(int(p) for p in logical_pages)
+        self.state, phys = alloc(self.state, len(logical))
+        table = [UNMATERIALIZED] * self.layout.n_pages
+        for lp, pp in zip(logical, phys):
+            table[lp] = pp
+        self.tables[rid] = tuple(table)
+        return phys
 
     # ------------------------------------------------------------------ #
     @property

@@ -1,0 +1,324 @@
+"""Remote KV memory tier: memory-only GAS ranks + page swap over RMA.
+
+The paper's hardware engine exists so a node can export *memory* into the
+global address space independent of where compute runs — FPGA memory
+nodes and CPUs share one PGAS.  This module is that archetype,
+serving-shaped: a new GAS role ``memory`` (``launch.mesh.serve_roles``)
+whose ranks contribute segment capacity but run **no model compute**.
+Their segments form the second tier of the KV hierarchy: when the decode
+pool oversubscribes, preemption victims' pages *swap out* to a memory
+rank and *swap in* again at resume, bit-exactly.
+
+Three pieces:
+
+1. :class:`MemoryTier` — host-side bookkeeping of the tier: a slot
+   allocator per memory rank (LIFO free lists, mirroring the pool
+   allocator) plus per-request holdings mapping each swapped request's
+   logical pages to ``(memory_rank, slot)`` addresses.  One request's
+   pages always land on ONE memory rank, so the whole swap-out is a
+   single vectored put and the swap-in a single vectored get.  For the
+   colocated server the tier also carries host-side slot arrays
+   (``host_mem``); in the disaggregated cluster the bytes live in the
+   memory ranks' GASNet segments and move only over the wire.
+2. :func:`swap_out_pages` — the device half of eviction: read m victim
+   pages out of the local pool shard and land them at their assigned
+   slot offsets of the memory rank's partition with the **vectored put**
+   (``Node.put_nbv`` — m pages + their target offsets + per-page flags in
+   one command block), batched by ``sched.plan_p2p`` like every bulk
+   transfer in the stack.
+3. :func:`install_pages` — the device half of resume: a vectored get
+   (``pool.fetch_pages`` over the memory rank's partition) brings the
+   slots back; ``install_pages`` lands the fetched carrier rows at the
+   freshly allocated pool offsets of the local shard, per-page gated.
+
+:func:`check_tier` extends the pool invariant across the hierarchy: a
+request is resident in exactly one tier, tier slots are never leaked or
+double-freed, and a drained tier holds nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+import numpy as np
+
+from repro.core import sched
+from repro.serving import kv as kv_lib
+
+__all__ = [
+    "TierError",
+    "OutOfSlotsError",
+    "Holding",
+    "MemoryTier",
+    "swap_out_pages",
+    "install_pages",
+    "check_tier",
+]
+
+
+class TierError(RuntimeError):
+    """Base memory-tier bookkeeping error."""
+
+
+class OutOfSlotsError(TierError):
+    """No memory rank has enough free slots for a swap-out."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Holding:
+    """One swapped-out request's tier residency: logical page ``i`` of the
+    request lives in slot ``slots[i]`` of memory rank ``rank``."""
+
+    rank: int  # memory pool index (0-based over the memory ranks)
+    logical: Tuple[int, ...]  # logical page ids, ascending
+    slots: Tuple[int, ...]  # tier slot per logical page
+
+
+class MemoryTier:
+    """Host bookkeeping of the memory ranks' page slots.
+
+    ``n_ranks`` memory ranks export ``slots_per_rank`` page slots of
+    ``page_elems`` carrier elements each.  ``host_backed=True`` (the
+    colocated server) additionally materialises the slot arrays host-side
+    so swap bytes can move without a wire; the disaggregated cluster
+    leaves ``host_mem`` empty and moves bytes one-sided between GASNet
+    segments.
+    """
+
+    def __init__(
+        self,
+        n_ranks: int,
+        slots_per_rank: int,
+        page_elems: int,
+        host_backed: bool = False,
+    ):
+        if n_ranks < 1 or slots_per_rank < 1:
+            raise ValueError(
+                f"memory tier needs >= 1 rank and slot, got "
+                f"{n_ranks}x{slots_per_rank}"
+            )
+        self.n_ranks = n_ranks
+        self.slots_per_rank = slots_per_rank
+        self.page_elems = page_elems
+        self._free: List[List[int]] = [
+            list(range(slots_per_rank - 1, -1, -1)) for _ in range(n_ranks)
+        ]
+        self.holdings: Dict[int, Holding] = {}
+        self.host_mem: Optional[np.ndarray] = (
+            np.zeros((n_ranks, slots_per_rank, page_elems), np.float32)
+            if host_backed
+            else None
+        )
+        self.swapped_out_pages = 0
+        self.swapped_in_pages = 0
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_free(self) -> int:
+        return sum(len(f) for f in self._free)
+
+    def free_slots(self, rank: int) -> int:
+        return len(self._free[rank])
+
+    def slot_offset(self, rank: int, slot: int) -> int:
+        """Flat carrier offset of a tier slot in memory rank ``rank``'s
+        segment partition (the tier analogue of ``PoolMap.offset``)."""
+        del rank  # each rank's partition is self-addressed
+        return int(slot) * self.page_elems
+
+    # ------------------------------------------------------------------ #
+    def plan_swap_out(self, rid: int, logical_pages: Sequence[int]) -> Holding:
+        """Assign tier slots for one request's materialised pages, all on
+        the single memory rank with the most free slots (one vectored put
+        carries the whole request out; one vectored get brings it back).
+        Raises :class:`OutOfSlotsError` when no rank fits."""
+        if rid in self.holdings:
+            raise TierError(f"request {rid} already swapped out")
+        logical = tuple(sorted(int(p) for p in logical_pages))
+        if not logical:
+            raise TierError(f"request {rid} has no materialised pages")
+        rank = max(range(self.n_ranks), key=lambda r: len(self._free[r]))
+        if len(self._free[rank]) < len(logical):
+            raise OutOfSlotsError(
+                f"swap-out of {len(logical)} pages: best memory rank has "
+                f"{len(self._free[rank])}/{self.slots_per_rank} slots free"
+            )
+        slots = tuple(self._free[rank].pop() for _ in logical)
+        h = Holding(rank=rank, logical=logical, slots=slots)
+        self.holdings[rid] = h
+        self.swapped_out_pages += len(logical)
+        return h
+
+    def release(self, rid: int) -> Holding:
+        """Drop one request's tier residency (at swap-in completion, or at
+        abort) and return the slots to their rank's free list."""
+        h = self.holdings.pop(rid, None)
+        if h is None:
+            raise TierError(f"request {rid} holds no tier slots")
+        for s in h.slots:
+            if s in self._free[h.rank]:
+                raise TierError(f"double free of tier slot {h.rank}:{s}")
+            self._free[h.rank].append(s)
+        self.swapped_in_pages += len(h.slots)
+        return h
+
+    # ---- host-backed byte path (colocated server) --------------------- #
+    def host_store(self, rid: int, rows: Any) -> Holding:
+        """Swap-out without a wire: assign slots and copy the page rows
+        into the host-side tier arrays (rows follow ``plan_swap_out``'s
+        ascending logical order)."""
+        if self.host_mem is None:
+            raise TierError("tier is not host-backed")
+        rows = np.asarray(rows, np.float32)
+        h = self.holdings.get(rid)
+        if h is None:
+            raise TierError(f"plan_swap_out({rid}) first")
+        if rows.shape != (len(h.slots), self.page_elems):
+            raise TierError(
+                f"swap rows {rows.shape} != ({len(h.slots)}, {self.page_elems})"
+            )
+        for row, s in zip(rows, h.slots):
+            self.host_mem[h.rank, s] = row
+        return h
+
+    def host_load(self, rid: int) -> np.ndarray:
+        """Swap-in without a wire: the stored rows, ascending logical
+        order (the caller releases the holding after installing them)."""
+        if self.host_mem is None:
+            raise TierError("tier is not host-backed")
+        h = self.holdings[rid]
+        return np.stack([self.host_mem[h.rank, s] for s in h.slots])
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> Dict[str, int]:
+        return {
+            "tier_ranks": self.n_ranks,
+            "tier_slots": self.n_ranks * self.slots_per_rank,
+            "tier_free_slots": self.n_free,
+            "tier_resident_requests": len(self.holdings),
+            "tier_swapped_out_pages": self.swapped_out_pages,
+            "tier_swapped_in_pages": self.swapped_in_pages,
+        }
+
+
+def check_tier(tier: MemoryTier, resident_rids: Sequence[int] = ()) -> None:
+    """Assert the tier invariant: free lists are duplicate-free, holdings
+    and free lists partition every rank's slots exactly, and no request is
+    resident in both tiers (``resident_rids`` = requests holding pool
+    pages)."""
+    used: Dict[int, set] = {r: set() for r in range(tier.n_ranks)}
+    for rid, h in tier.holdings.items():
+        if len(h.slots) != len(h.logical):
+            raise AssertionError(f"holding {rid}: slots != logical pages")
+        for s in h.slots:
+            if s in used[h.rank]:
+                raise AssertionError(
+                    f"tier slot {h.rank}:{s} held by two requests"
+                )
+            used[h.rank].add(s)
+    for r in range(tier.n_ranks):
+        free = tier._free[r]
+        if len(set(free)) != len(free):
+            raise AssertionError(f"duplicate slots on rank {r} free list")
+        if used[r] & set(free):
+            raise AssertionError(f"rank {r}: held slot also on free list")
+        if len(used[r]) + len(free) != tier.slots_per_rank:
+            raise AssertionError(
+                f"rank {r}: {len(used[r])} held + {len(free)} free != "
+                f"{tier.slots_per_rank}"
+            )
+    both = set(tier.holdings) & set(int(r) for r in resident_rids)
+    if both:
+        raise AssertionError(
+            f"request(s) {sorted(both)} resident in pool AND tier"
+        )
+
+
+# --------------------------------------------------------------------------- #
+# device plane: swap bytes over the GAS layer
+# --------------------------------------------------------------------------- #
+def swap_out_pages(
+    node: Any,
+    seg: jax.Array,
+    src_offsets: jax.Array,
+    dst_offsets: jax.Array,
+    *,
+    to: Any,
+    page_elems: int,
+    flags: jax.Array | Sequence[Any] | None = None,
+    plan: Optional[sched.CollectivePlan] = None,
+    n_batches: Optional[int] = None,
+    costs: Optional[Dict[str, sched.EngineCost]] = None,
+) -> Tuple[List[Any], sched.CollectivePlan]:
+    """Initiate the split-phase swap-out of m pool pages to a memory rank.
+
+    Reads each page at flat offset ``src_offsets[j]`` of the local pool
+    shard and lands it at ``dst_offsets[j]`` of node ``pattern(me)``'s
+    partition via the vectored put (``node.put_nbv`` — payloads + command
+    block per batch, batch count from ``sched.plan_p2p`` on the total
+    byte count).  ``flags`` gates per page (a rank swapping fewer than m
+    pages this tick clears the tail).  Returns ``(handles, plan)``; drain
+    with ``kv.sync_push``-style ``node.sync`` per handle.
+    """
+    src = jnp.asarray(src_offsets, jnp.int32).reshape(-1)
+    dst = jnp.asarray(dst_offsets, jnp.int32).reshape(-1)
+    m = int(src.shape[0])
+    if int(dst.shape[0]) != m:
+        raise ValueError(f"swap_out_pages: {m} sources vs {dst.shape[0]} dests")
+    if flags is None:
+        flags = jnp.ones((m,), jnp.int32)
+    else:
+        flags = jnp.asarray(flags).astype(jnp.int32).reshape(-1)
+    local = node.local(seg).reshape(-1)
+    pages = [
+        lax.dynamic_slice(local, (src[j],), (page_elems,)) for j in range(m)
+    ]
+    if plan is None:
+        plan = sched.plan_p2p(
+            nbytes=m * page_elems * 4, engine=node.engine, costs=costs
+        )
+    g = int(plan.n_segments if n_batches is None else n_batches)
+    handles = []
+    for start, count in kv_lib.segment_bounds(m, g):
+        handles.append(
+            node.put_nbv(
+                seg,
+                pages[start : start + count],
+                to=to,
+                indices=dst[start : start + count],
+                pred=flags[start : start + count],
+            )
+        )
+    return handles, plan
+
+
+def install_pages(
+    node: Any,
+    seg: jax.Array,
+    fetched: jax.Array,
+    dst_offsets: jax.Array,
+    flags: jax.Array | Sequence[Any] | None = None,
+) -> jax.Array:
+    """Land swap-in pages (the ``(m, page_elems)`` stack a vectored get of
+    tier slots returned) at ``dst_offsets`` of the local pool shard,
+    per-page gated — the receive epilogue of a resume.  Returns the
+    updated segment."""
+    fetched = jnp.asarray(fetched)
+    m, page_elems = int(fetched.shape[0]), int(fetched.shape[1])
+    dst = jnp.asarray(dst_offsets, jnp.int32).reshape(-1)
+    if flags is None:
+        flags = jnp.ones((m,), jnp.int32)
+    else:
+        flags = jnp.asarray(flags).astype(jnp.int32).reshape(-1)
+    local = node.local(seg)
+    flat = local.reshape(-1)
+    for j in range(m):
+        cur = lax.dynamic_slice(flat, (dst[j],), (page_elems,))
+        flat = lax.dynamic_update_slice(
+            flat, jnp.where(flags[j] > 0, fetched[j], cur), (dst[j],)
+        )
+    return node._restore(seg, flat.reshape(local.shape))

@@ -257,6 +257,33 @@ def main() -> None:
         np.testing.assert_allclose(allv[n], want3)
     print("vectored get (incl. pred-gated) OK")
 
+    # ---- vectored put (put_nbv): m writes + offsets in one command block ---
+    def prog_pnbv(node, seg):
+        datas = jnp.stack(
+            [jnp.full((3,), 1.0 + node.my_id * 10 + j) for j in range(2)]
+        )
+        # per-payload flags: payload 1 ships gated-off from odd ranks
+        h = node.put_nbv(seg, datas, to=gasnet.Shift(1), indices=[2, 20],
+                         pred=[True, (node.my_id % 2) == 0])
+        overlapped = jnp.sum(node.local(seg))  # no dep on the transfer
+        seg = node.sync(h)
+        # blocking wrapper, Perm pattern
+        seg = node.put_v(seg, jnp.full((1, 4), 70.0 + node.my_id),
+                         to=gasnet.Perm(perm), indices=[10])
+        return seg + 0.0 * overlapped
+
+    zseg = aspace.alloc("buf")
+    got = np.asarray(ctx.spmd(prog_pnbv, zseg))
+    for n in range(8):
+        src = (n - 1) % 8
+        np.testing.assert_allclose(got[n, 2:5], 1.0 + src * 10)
+        if src % 2 == 0:
+            np.testing.assert_allclose(got[n, 20:23], 2.0 + src * 10)
+        else:
+            np.testing.assert_allclose(got[n, 20:23], 0.0)
+        np.testing.assert_allclose(got[n, 10:14], 70.0 + perm.index(n))
+    print("vectored put (incl. per-page pred) OK")
+
     def prog_nb_all(node, seg):
         node.put_nb(seg, jnp.full((2,), 1.0, jnp.float32),
                     to=gasnet.Shift(1), index=0)
@@ -301,6 +328,14 @@ def main() -> None:
         gv = node.get_nbv(seg, frm=gasnet.Shift(2), indices=[128, 0, 192],
                           size=64, pred=(node.my_id % 2) == 0)
         gotv = node.sync(gv)
+        # vectored multi-put (per-payload flags): the write-side mirror
+        pv = node.put_nbv(
+            seg,
+            [jnp.full((32,), 5.0 + node.my_id), jnp.full((32,), 9.0)],
+            to=gasnet.Shift(3), indices=[256, 640],
+            pred=[True, (node.my_id % 2) == 0],
+        )
+        seg = node.sync(pv)
         e = node.engine
         bc = collectives.broadcast(e, node.local(x), root=2)
         ex = collectives.exchange(e, node.local(x))
@@ -309,13 +344,13 @@ def main() -> None:
     specs = (P("node"),) * 5
     sw = ctx.spmd(prog_ext, segk, xk, out_specs=specs)
     hw = ctx_hw.spmd(prog_ext, segk, xk, out_specs=specs)
-    for name, a, b in zip(("put_nb/sync", "get_nb", "get_nbv(pred)",
+    for name, a, b in zip(("put_nb/put_nbv/sync", "get_nb", "get_nbv(pred)",
                            "broadcast", "exchange"), sw, hw):
         np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), rtol=1e-6,
             err_msg=f"engine parity: {name}",
         )
-    print("extended engine parity OK (incl. vectored get)")
+    print("extended engine parity OK (incl. vectored get + put)")
 
     # ---- heterogeneous EngineMap: mixed sw/hw nodes, same parity suite -----
     # Alternating software (XLA) and hardware (GAScore) ranks in ONE mesh:
@@ -323,7 +358,7 @@ def main() -> None:
     # produce identical results.
     ctx_mix = gasnet.Context(mesh, node_axis="node", backend="xla,gascore")
     mix = ctx_mix.spmd(prog_ext, segk, xk, out_specs=specs)
-    for name, a, b in zip(("put_nb/sync", "get_nb", "get_nbv(pred)",
+    for name, a, b in zip(("put_nb/put_nbv/sync", "get_nb", "get_nbv(pred)",
                            "broadcast", "exchange"), sw, mix):
         np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), rtol=1e-6,

@@ -474,6 +474,381 @@ def test_paged_server_token_parity_and_pool_drain():
 
 
 # --------------------------------------------------------------------------- #
+# tiered KV memory: vectored put, swap round trip, lazy pool, scheduler
+# --------------------------------------------------------------------------- #
+def test_put_nbv_vectored_put_round_trip(n=4):
+    """m payloads + their target offsets + per-page flags in one command
+    block: flagged payloads land at their offsets of the neighbour's
+    partition, cleared ones leave the receiver untouched."""
+
+    def program(engine):
+        node = gasnet.Node(
+            engine, am.HandlerTable(), am_capacity=4,
+            am_payload_width=1, am_per_peer_capacity=4,
+        )
+        seg = jnp.zeros((1, 16), jnp.float32)
+        datas = jnp.stack(
+            [jnp.full((3,), 10.0 * engine.rank + j) for j in range(2)]
+        )
+        h = node.put_nbv(
+            seg, datas, to=gasnet.Shift(1), indices=[2, 9],
+            pred=[True, engine.rank % 2 == 0],
+        )
+        return node.sync(h)
+
+    outs = run_spmd(program, n)
+    for rank, seg in enumerate(outs):
+        got = np.asarray(seg)[0]
+        src = (rank - 1) % n
+        np.testing.assert_array_equal(got[2:5], 10.0 * src)
+        if src % 2 == 0:
+            np.testing.assert_array_equal(got[9:12], 10.0 * src + 1)
+        else:
+            np.testing.assert_array_equal(got[9:12], 0.0)
+        np.testing.assert_array_equal(got[:2], 0.0)
+
+
+def test_swap_out_swap_in_round_trip(n=3):
+    """Pool pages swap OUT to a memory rank's segment (vectored put) and
+    back IN (vectored get + install) bit-exactly — NaN payloads included
+    (int bit patterns riding the float32 carrier)."""
+    from repro.serving import tier
+
+    page_elems, n_pages = 5, 4
+    rng = np.random.default_rng(0)
+    bits = rng.integers(
+        -(2**31), 2**31 - 1, size=(n_pages, page_elems), dtype=np.int64
+    ).astype(np.int32)
+    pages = jnp.asarray(bits.view(np.float32))
+    src_pages, dst_slots = (3, 1), (0, 2)
+    src_offs = [p * page_elems for p in src_pages]
+    dst_offs = [s * page_elems for s in dst_slots]
+
+    def prog_out(engine):
+        node = gasnet.Node(
+            engine, am.HandlerTable(), am_capacity=4,
+            am_payload_width=1, am_per_peer_capacity=4,
+        )
+        # rank 0 = decode shard holding the pages; rank 1 = memory rank
+        seg = jnp.where(engine.rank == 0, pages.reshape(-1),
+                        jnp.zeros((n_pages * page_elems,)))[None]
+        handles, plan = tier.swap_out_pages(
+            node, seg, src_offs, dst_offs,
+            to=gasnet.Perm(kv.handoff_permutation(n, {0: 1})),
+            page_elems=page_elems,
+            flags=[1, 1] if engine.rank == 0 else [0, 0],
+        )
+        assert plan.op == "p2p"
+        for h in handles:
+            seg = node.sync(h)
+        return seg
+
+    outs = run_spmd(prog_out, n)
+    mem_rank = np.asarray(outs[1])[0].reshape(n_pages, page_elems)
+    for sp, ds in zip(src_pages, dst_slots):
+        assert mem_rank[ds].tobytes() == bits[sp].view(np.float32).tobytes()
+    # untouched slots stay zero, and the non-flagged ranks shipped nothing
+    assert np.asarray(outs[2])[0].tobytes() == b"\x00" * (4 * n_pages * page_elems)
+
+    # swap-in: fetch the tier slots back and install at fresh pool offsets
+    tier_seg = jnp.asarray(mem_rank.reshape(-1))
+    new_offs = [0 * page_elems, 2 * page_elems]
+
+    def prog_in(engine):
+        node = gasnet.Node(
+            engine, am.HandlerTable(), am_capacity=4,
+            am_payload_width=1, am_per_peer_capacity=4,
+        )
+        seg = jnp.where(engine.rank == 1, tier_seg,
+                        jnp.zeros_like(tier_seg))[None]
+        h = node.get_nbv(
+            seg, frm=gasnet.Perm(kv.handoff_permutation(n, {0: 1})),
+            indices=jnp.asarray(dst_offs), size=page_elems,
+            pred=engine.rank == 0,
+        )
+        fetched = node.sync(h)
+        flags = [1, 1] if engine.rank == 0 else [0, 0]
+        return tier.install_pages(node, seg, fetched, new_offs, flags)
+
+    outs = run_spmd(prog_in, n)
+    restored = np.asarray(outs[0])[0].reshape(n_pages, page_elems)
+    for sp, (np_, _) in zip(src_pages, [(0, 0), (2, 2)]):
+        assert restored[np_].tobytes() == bits[sp].view(np.float32).tobytes()
+
+
+def test_memory_tier_bookkeeping():
+    from repro.serving import tier
+
+    t = tier.MemoryTier(2, 3, 4, host_backed=True)
+    h = t.plan_swap_out(7, [0, 2, 1])
+    assert h.logical == (0, 1, 2) and len(h.slots) == 3
+    rows = np.arange(12, dtype=np.float32).reshape(3, 4)
+    t.host_store(7, rows)
+    np.testing.assert_array_equal(t.host_load(7), rows)
+    tier.check_tier(t)
+    with pytest.raises(tier.TierError):
+        t.plan_swap_out(7, [0])  # already resident
+    h2 = t.plan_swap_out(8, [1, 3])
+    assert h2.rank != h.rank  # most-free rank balancing
+    with pytest.raises(tier.OutOfSlotsError):
+        t.plan_swap_out(9, [0, 1, 2, 3])  # no rank has 4 free slots
+    tier.check_tier(t, resident_rids=[1, 2])
+    with pytest.raises(AssertionError, match="pool AND tier"):
+        tier.check_tier(t, resident_rids=[7])
+    t.release(7)
+    t.release(8)
+    tier.check_tier(t)
+    assert t.n_free == 6
+    with pytest.raises(tier.TierError):
+        t.release(7)
+
+
+def test_lazy_admit_gather_synthesis_and_extended_invariant():
+    """Lazy admission materialises only prompt pages; gather synthesises
+    the absent tail from the cache-init bytes (pos=-1, payload 0) even
+    after the physical pages were recycled with stale contents; the
+    extended check_pool covers unmaterialised slots and evicted tables."""
+    struct = {
+        "k": jax.ShapeDtypeStruct((2, 1, 12, 3), jnp.float32),
+        "pos": jax.ShapeDtypeStruct((2, 1, 12), jnp.int32),
+    }
+    layout = pool.PagedLayout.from_struct(struct, cache_len=12, page_tokens=4)
+    store = pool.PagedKVStore(layout, 4)
+    plan = store.plan_admit([1, 2, 3, 4, 5], lazy=True)  # 5 tokens -> 2 pages
+    assert plan.table[2] == pool.UNMATERIALIZED
+    assert plan.n_materialized == 2
+    store.commit(1, plan)
+    # poison the whole pool memory: recycled stale bytes everywhere
+    store.mem[:] = np.nan
+    caches = store.gather(1)
+    kp = np.asarray(caches["pos"])
+    assert (kp[:, :, 8:] == -1).all()  # absent page: init bytes, not stale
+    assert not np.isnan(np.asarray(caches["k"])[:, :, 8:]).any()
+    pool.check_pool(store.state, tables=store.tables.values())
+    # materialise the tail by writing position 8 (page 2)
+    phys = store.prepare_write(1, 8)
+    assert store.tables[1][2] == phys
+    # bitwise: the pos=-1 init bitcasts to NaN in the float32 carrier
+    assert store.mem[phys].tobytes() == layout.empty_page_row().tobytes()
+    pool.check_pool(store.state, tables=store.tables.values())
+    # evict: references drop, snapshot keeps the pairs
+    pairs = store.evict_request(1)
+    assert [lp for lp, _ in pairs] == [0, 1, 2]
+    pool.check_pool(
+        store.state, tables=[], evicted=[[pp for _, pp in pairs]]
+    )
+    assert store.n_free == 4
+    # resume: fresh pages for the same logical set, rest unmaterialised
+    phys2 = store.admit_resume(1, [lp for lp, _ in pairs])
+    assert len(phys2) == 3 and store.tables[1].count(pool.UNMATERIALIZED) == 0
+    pool.check_pool(store.state, tables=store.tables.values())
+    store.release(1)
+    assert store.n_free == 4
+    # materialize_through is transactional: a mid-loop OutOfPagesError
+    # must roll back the pages it already took (no silent pool shrink)
+    p1 = store.plan_admit([1], lazy=True)  # 1 page + 2 unmaterialised
+    store.commit(1, p1)
+    p2 = store.plan_admit([9, 9, 9, 9, 9], lazy=True)
+    store.commit(2, p2)  # 2 more pages: 1 page left free
+    with pytest.raises(pool.OutOfPagesError):
+        store.materialize_through(1, 3)  # needs 2, only 1 free
+    pool.check_pool(store.state, tables=store.tables.values())
+    assert store.n_free == 1  # nothing leaked by the failed attempt
+    assert store.tables[1].count(pool.UNMATERIALIZED) == 2
+    store.release(1)
+    store.release(2)
+    assert store.n_free == 4
+
+
+def test_scheduler_order_victims_and_cost_model():
+    from repro.core.sched import EngineCost
+    from repro.serving.scheduler import SLO, AdmissionScheduler, swap_or_recompute
+
+    s = AdmissionScheduler(page_bytes=1024)
+    s.submit(1, SLO(priority=0, ttft_deadline_s=5.0), now=0.0)
+    s.submit(2, SLO(priority=1), now=1.0)
+    s.submit(3, SLO(priority=0, ttft_deadline_s=1.0), now=0.0)
+    # priority-major, then EDF within a priority
+    assert s.admission_order() == [2, 3, 1]
+    s.on_admitted(2)
+    s.on_preempted(2, "swap")
+    s.submit(4, SLO(priority=1), now=2.0)
+    # resume-first within a priority: the victim outranks the new arrival
+    assert s.admission_order()[:2] == [2, 4]
+    for rid in (2, 4):
+        s.on_admitted(rid)
+    # victims: lowest priority first, never above the beneficiary; strict
+    # excludes equal priority
+    s.on_admitted(1)
+    free = {1: 3, 2: 2, 4: 2}
+    assert s.pick_victims([1, 2, 4], 3, free.get, beneficiary=2) == [1]
+    assert s.pick_victims([1, 4], 2, free.get, beneficiary=3, strict=False) == [1]
+    assert s.pick_victims([4], 2, free.get, beneficiary=3) == []
+    assert s.pick_victims([1], 9, free.get, beneficiary=2) == []  # not enough
+    # beta model: many pages + few generated tokens -> swap; the reverse
+    # -> recompute
+    cost = EngineCost(alpha_us=10.0, beta_us_per_kib=1.0, gamma_us_per_kib=0.0)
+    mode, _, _ = swap_or_recompute(4, 1024, 100, cost,
+                                   decode_step_us=100.0, prefill_us=100.0)
+    assert mode == "swap"
+    mode, _, _ = swap_or_recompute(64, 1 << 20, 1, cost,
+                                   decode_step_us=100.0, prefill_us=100.0)
+    assert mode == "recompute"
+
+
+def test_paged_decode_step_matches_dense_decode():
+    """The end-to-end paged decode (page-table scatter + paged attention)
+    derives the same tokens as the dense cache path, page pool shuffled."""
+    cfg, model, ctx = _smoke_model()
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    cache_len, pt = 32, 8
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, 11).tolist()
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    logits, caches = model.prefill(params, ctx, {"inputs": toks}, cache_len=cache_len)
+    t0 = int(np.argmax(np.asarray(logits)[0]))
+    layout = pool.PagedLayout.from_struct(
+        model.kv_block_struct(ctx, prompt_len=len(prompt), cache_len=cache_len),
+        cache_len=cache_len, page_tokens=pt,
+    )
+    pages = np.asarray(layout.flatten(caches))
+    order = [2, 0, 3, 1]  # scattered physical placement
+    mem = np.zeros((5, layout.page_elems), np.float32)
+    for lp, ph in enumerate(order):
+        mem[ph] = pages[lp]
+    table = jnp.asarray([order], jnp.int32)
+
+    dense, paged = [t0], [t0]
+    pos, last, dc = len(prompt), t0, caches
+    for _ in range(5):
+        lg, dc = model.decode_step(
+            params, ctx, jnp.asarray([[last]], jnp.int32),
+            jnp.asarray([pos], jnp.int32), dc,
+        )
+        last = int(np.argmax(np.asarray(lg)[0]))
+        dense.append(last)
+        pos += 1
+    views = layout.decode_views(jnp.asarray(mem))
+    pos, last = len(prompt), t0
+    for _ in range(5):
+        lg, views = model.decode_step_paged(
+            params, ctx, jnp.asarray([[last]], jnp.int32),
+            jnp.asarray([pos], jnp.int32), views, table,
+        )
+        last = int(np.argmax(np.asarray(lg)[0]))
+        paged.append(last)
+        pos += 1
+    assert dense == paged
+    # views <-> carrier pool round trip is bit-exact
+    back = np.asarray(layout.views_to_pool(layout.decode_views(jnp.asarray(mem))))
+    assert back.tobytes() == mem.tobytes()
+
+
+def test_oversubscribed_paged_server_preempts_bit_identically():
+    """Aggregate KV demand ~1.7x the pool: the scheduler preempts, pages
+    swap to the (host-backed) memory tier, every request resumes and the
+    token streams match the unpressured dense run exactly; pool and tier
+    fully drain.  A recompute-priced run replays instead of swapping and
+    must match too."""
+    from repro.launch.serve import PagedServer, Request, Server
+
+    cfg, model, ctx = _smoke_model()
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+
+    def burst():
+        rng = np.random.default_rng(3)
+        return [
+            Request(
+                rid=r,
+                prompt=rng.integers(0, cfg.vocab,
+                                    size=int(rng.integers(6, 18))).tolist(),
+                max_new=int(rng.integers(6, 12)),
+            )
+            for r in range(6)
+        ]
+
+    dense = Server(model, ctx, params, 3, 32)
+    for r in burst():
+        dense.submit(r)
+    dense.run_until_drained()
+    base = {r.rid: r.out for r in dense.finished}
+
+    for kwargs, expect in (
+        ({}, "sched_swaps"),
+        ({"decode_step_us": 1e-3, "prefill_us": 1e-3}, "sched_recomputes"),
+    ):
+        srv = PagedServer(model, ctx, params, 3, 32, page_tokens=8,
+                          n_pool_pages=7, **kwargs)
+        for r in burst():
+            srv.submit(r)
+        stats = srv.run_until_drained(max_ticks=500)
+        got = {r.rid: r.out for r in srv.finished}
+        assert base.keys() == got.keys()
+        for rid in base:
+            assert base[rid] == got[rid], (rid, base[rid], got[rid])
+        assert stats["sched_evictions"] >= 1
+        assert stats[expect] >= 1
+        assert stats["pool_n_free"] == stats["pool_n_pages"]
+        assert stats["tier_free_slots"] == stats["tier_slots"]
+        pool.check_pool(
+            srv.store.state, tables=list(srv.store.tables.values())
+        )
+
+
+def test_swap_preemption_mid_replay_keeps_tokens_exact():
+    """A request recompute-preempted, resumed, then swap-preempted WHILE
+    still replaying must carry its replay tail across the swap — no
+    re-appended tokens, bit-identical output."""
+    from repro.launch.serve import PagedServer, Request, Server
+
+    cfg, model, ctx = _smoke_model()
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, 9).tolist()
+
+    dense = Server(model, ctx, params, 2, 32)
+    dense.submit(Request(rid=0, prompt=list(prompt), max_new=10))
+    dense.run_until_drained()
+    want = dense.finished[0].out
+
+    srv = PagedServer(model, ctx, params, 2, 32, page_tokens=8)
+    req = Request(rid=0, prompt=list(prompt), max_new=10)
+    srv.submit(req)
+    for _ in range(5):
+        srv.step()
+    srv._preempt(0, "recompute")
+    srv.step()  # resume: re-prefill + arm replay
+    assert srv.replaying, "expected the resumed row to be replaying"
+    srv._preempt(0, "swap")  # swap OUT mid-replay
+    assert srv._preempted[0]["replay"], "replay tail must ride the snapshot"
+    stats = srv.run_until_drained(max_ticks=200)
+    assert [r.out for r in srv.finished] == [want]
+    assert stats["pool_n_free"] == stats["pool_n_pages"]
+    assert stats["tier_free_slots"] == stats["tier_slots"]
+
+
+def test_dense_paged_server_pool_stays_canonical():
+    """paged_decode=False (the PR-4 row path): every decode step writes
+    its dirty page back, so a gather through the page table always
+    returns the row's current bytes."""
+    from repro.launch.serve import PagedServer, Request
+
+    cfg, model, ctx = _smoke_model()
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(6)
+    srv = PagedServer(model, ctx, params, 2, 32, page_tokens=8,
+                      paged_decode=False)
+    srv.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab, 9).tolist(),
+                       max_new=6))
+    for _ in range(4):
+        srv.step()
+    row = srv.jax.tree.map(lambda x: x[:, 0:1], srv.caches)
+    gathered = srv.store.gather(0)
+    for a, b in zip(jax.tree.leaves(row), jax.tree.leaves(gathered)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+# --------------------------------------------------------------------------- #
 # end-to-end: the example's prefill -> KV put -> decode round trip
 # --------------------------------------------------------------------------- #
 @pytest.mark.slow
@@ -502,4 +877,10 @@ def test_disagg_serve_example_smoke():
     # pair maps shared physical pages, tokens stay identical
     assert "prefix-shared pages mapped not moved" in proc.stdout
     assert "parity: paged tokens == dense tokens" in proc.stdout
+    # ...and the tiered act: an oversubscribed pool preempts, pages swap
+    # to the memory-only rank over the vectored put, resumes are
+    # bit-identical and both tiers drain
+    assert "tiered KV memory: 1 memory rank(s)" in proc.stdout
+    assert "bit-identical resume after swap to the memory rank" in proc.stdout
+    assert "pool + memory tier fully drained at shutdown" in proc.stdout
     assert "DISAGG_SERVE_PASS" in proc.stdout
