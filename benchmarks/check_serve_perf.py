@@ -1,0 +1,89 @@
+"""Serving-perf guard over the ``BENCH_serve.json`` artifact.
+
+Parses the serving bench rows and flags the two regressions the paged
+decode rework is specifically not allowed to reintroduce:
+
+- ``serve_paged_decode`` slower than ``serve_dense_decode`` (the paged
+  pool must not tax the decode hot path), and
+- ``paged_fetch_overlap`` gaining nothing over blocking gets
+  (``overlap_gap <= 1.0``) — the split-phase prefetch would be dead
+  weight.
+
+Warnings go to stdout and, when ``$GITHUB_STEP_SUMMARY`` is set, to the
+workflow run's summary page.  Exit code is 0 on warnings (perf noise on
+shared CI runners must not gate merges) and 2 only when the artifact is
+missing or malformed.
+
+Usage: ``python benchmarks/check_serve_perf.py [BENCH_serve.json]``
+"""
+import json
+import os
+import sys
+
+
+def check(rows):
+    """Return a list of human-readable warning strings."""
+    by_name = {r.get("name"): r for r in rows}
+    warnings = []
+
+    dense = by_name.get("serve_dense_decode")
+    paged = by_name.get("serve_paged_decode")
+    if dense and paged:
+        d, p = dense.get("tok_per_s", 0.0), paged.get("tok_per_s", 0.0)
+        if p < d:
+            warnings.append(
+                f"paged decode is SLOWER than dense decode: "
+                f"{p:.1f} tok/s vs {d:.1f} tok/s "
+                f"(the paged pool must not tax the decode hot path)"
+            )
+    else:
+        warnings.append(
+            "missing serve_dense_decode/serve_paged_decode rows "
+            "(paged sections skipped?)"
+        )
+
+    overlap = by_name.get("paged_fetch_overlap")
+    if overlap:
+        gap = overlap.get("overlap_gap", 0.0)
+        if gap <= 1.0:
+            warnings.append(
+                f"split-phase page prefetch gains nothing: overlap_gap "
+                f"{gap:.3f}x <= 1.0x vs blocking gets"
+            )
+    else:
+        warnings.append(
+            "missing paged_fetch_overlap row (overlap bench skipped?)"
+        )
+    return warnings
+
+
+def main(argv):
+    path = argv[1] if len(argv) > 1 else "BENCH_serve.json"
+    try:
+        with open(path) as f:
+            artifact = json.load(f)
+        rows = artifact["rows"]
+    except (OSError, KeyError, ValueError) as e:
+        print(f"check_serve_perf: cannot read {path}: {e}", file=sys.stderr)
+        return 2
+
+    warnings = check(rows)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    lines = []
+    if warnings:
+        lines.append("### :warning: serving perf warnings")
+        lines += [f"- {w}" for w in warnings]
+    else:
+        lines.append(
+            "### serving perf OK — paged decode >= dense, overlap gap > 1.0x"
+        )
+    for line in lines:
+        print(line)
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write("\n".join(lines) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

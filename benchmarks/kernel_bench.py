@@ -40,6 +40,35 @@ def main() -> None:
     ok = bool(jnp.allclose(got, f_ref(q, k, v), atol=2e-4))
     print(f"attention_pallas_parity,0,{ok}")
 
+    # paged attention (decode hot spot) — oracle wall time, pallas parity,
+    # and the DMA-blocking knobs (pages_per_block x block_b) of the
+    # batch-blocked kernel, which must be bit-identical across settings
+    B, Hq, Hkv, D, T, NP, P = 8, 8, 2, 64, 8, 8, 64
+    pq = jnp.asarray(rng.normal(size=(B, Hq, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, T, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, T, Hkv, D)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, P, (B, NP)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, NP * T + 1, (B,)), jnp.int32)
+    f_pref = jax.jit(lambda *t: ref.paged_attention(*t))
+    us = timeit(f_pref, pq, kp, vp, tbl, lens)
+    print(f"paged_attention_ref_B{B}_NP{NP},{us:.0f},oracle")
+    want = f_pref(pq, kp, vp, tbl, lens)
+    base = None
+    for ppb, bb in ((1, 1), (4, 4), (8, 8)):
+        f_pa = jax.jit(lambda *t, _p=ppb, _b=bb: ops.paged_attention(
+            *t, impl="pallas", pages_per_block=_p, block_b=_b))
+        us = timeit(f_pa, pq, kp, vp, tbl, lens, iters=5)
+        got = np.asarray(f_pa(pq, kp, vp, tbl, lens))
+        if base is None:
+            base = got
+            ok = bool(np.allclose(got, np.asarray(want), atol=2e-4))
+            print(f"paged_attention_pallas_parity,0,{ok}")
+        else:
+            # perf knobs must not change a single bit of the output
+            bit = bool((got == base).all())
+            print(f"paged_attention_pallas_bitinv_p{ppb}b{bb},0,{bit}")
+        print(f"paged_attention_pallas_p{ppb}b{bb},{us:.0f},interpret")
+
     # MoE router
     T, E, K = 4096, 64, 8
     logits = jnp.asarray(rng.normal(size=(T, E)), jnp.float32)

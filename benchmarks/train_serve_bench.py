@@ -167,6 +167,14 @@ def paged_sections(report) -> None:
         else:
             server = PagedServer(model, ctx, params, batch_size=8,
                                  cache_len=96, page_tokens=8)
+        # warm the prefill/decode programs so the throughput row measures
+        # serving, not XLA compile time (both kinds get the same warmup);
+        # max_new=12 crosses a page boundary while the pool is already
+        # device-resident, compiling the page-patch program too
+        server.submit(Request(rid=10_000, prompt=burst()[0].prompt[:16],
+                              max_new=12))
+        server.run_until_drained()
+        server.finished.clear()
         for req in burst():
             server.submit(req)
         stats = server.run_until_drained()
@@ -241,16 +249,21 @@ def oversub_sections(report) -> None:
     peak_demand = batch * n_pages  # every row at a full table
 
     def burst():
+        # long generations so every concurrent row grows toward a full
+        # page table: peak demand actually reaches batch * n_pages and
+        # the pressured pools must preempt (swap or recompute)
         rng = np.random.default_rng(9)
-        return [
-            Request(
+        reqs = []
+        for rid in range(10):
+            prompt_len = int(rng.integers(10, 30))
+            max_new = int(rng.integers(24, 34))
+            max_new = min(max_new, cache_len - prompt_len)
+            reqs.append(Request(
                 rid=rid,
-                prompt=rng.integers(0, cfg.vocab,
-                                    int(rng.integers(10, 30))).tolist(),
-                max_new=int(rng.integers(8, 16)),
-            )
-            for rid in range(10)
-        ]
+                prompt=rng.integers(0, cfg.vocab, prompt_len).tolist(),
+                max_new=max_new,
+            ))
+        return reqs
 
     baseline = None
     for pressure in (1.0, 1.5, 2.0):
@@ -265,6 +278,11 @@ def oversub_sections(report) -> None:
             baseline = toks
         else:
             assert toks == baseline  # preemption is semantics-transparent
+        if pressure >= 1.5:
+            # the pressured pools are too small for peak demand: the run
+            # is only meaningful if the scheduler actually preempted
+            assert stats["sched_swaps"] + stats["sched_recomputes"] >= 1, (
+                pressure, stats["sched_swaps"], stats["sched_recomputes"])
         lat = sorted(r.t_done - r.t_enqueue for r in server.finished)
         p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))] if lat else 0.0
         us = stats["wall_s"] / max(stats["decoded_tokens"], 1) * 1e6
@@ -311,13 +329,20 @@ def oversub_sections(report) -> None:
 
 
 def overlap_bench(report) -> None:
-    """Measure the split-phase win: prefetch m remote pages with the
-    vectored get while the paged-attention kernel chews on local pages,
-    vs the same fetch completed before the kernel starts."""
+    """Measure the split-phase win of nonblocking page prefetch.
+
+    A decode tick that needs K remote page batches can either issue
+    *blocking* gets — each get's sync completes before the next statement
+    runs, serialising host dispatch with the wire — or initiate all K
+    vectored gets nonblocking, run the paged-attention kernel over local
+    pages, and sync the handles afterwards.  The overlap variant pipelines
+    initiation with execution (the GASNet split-phase idiom); the gap is
+    the dispatch+sync latency the blocking semantics cannot hide.
+    """
     from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
-    from repro.core import am, gasnet
+    from repro.core import gasnet
     from repro.kernels import ops
     from repro.serving import pool as pool_lib
 
@@ -325,13 +350,17 @@ def overlap_bench(report) -> None:
     B, Hq, Hkv, D, T, NP = 4, 8, 2, 64, 8, 8
     pages_per_rank = 64
     page_elems = T * Hkv * D * 2  # K and V halves of one page
+    n_batches, pages_per_batch = 8, 4
     pmap = pool_lib.PoolMap(n, pages_per_rank, page_elems)
     mesh = jax.make_mesh((n,), ("node",))
     ctx_gas = gasnet.Context(mesh, node_axis="node", backend="xla")
 
     rng = np.random.default_rng(0)
-    seg = jnp.asarray(
-        rng.normal(size=(n, pages_per_rank * page_elems)), jnp.float32
+    seg = jax.device_put(
+        jnp.asarray(
+            rng.normal(size=(n, pages_per_rank * page_elems)), jnp.float32
+        ),
+        jax.sharding.NamedSharding(mesh, P("node")),
     )
     q = jnp.asarray(rng.normal(size=(B, Hq, D)), jnp.float32)
     kv_pages = jnp.asarray(
@@ -344,58 +373,83 @@ def overlap_bench(report) -> None:
         rng.integers(0, pages_per_rank, (B, NP)), jnp.int32
     )
     lengths = jnp.full((B,), NP * T, jnp.int32)
-    fetch_ids = [int(x) for x in rng.integers(0, pages_per_rank, 16)]
-    offsets = jnp.asarray([pmap.offset(g) for g in fetch_ids], jnp.int32)
 
-    def make_prog(overlap: bool):
-        def prog(node, seg, q, kp, vp, tbl, lens):
-            # initiate the vectored page prefetch from the neighbour shard
+    def make_fetch(offsets):
+        def prog(node, s):
             handles, _ = pool_lib.fetch_pages(
-                node, seg, offsets, frm=gasnet.Shift(1),
+                node, s, offsets, frm=gasnet.Shift(1),
                 page_elems=page_elems,
             )
-            if not overlap:
-                fetched = pool_lib.sync_fetch(node, handles)
-            # decode attention over LOCAL pool pages: no data dependence on
-            # the in-flight fetch, so split-phase overlaps the two
-            out = ops.paged_attention(q, kp, vp, tbl, lens, impl="pallas")
-            if overlap:
-                fetched = pool_lib.sync_fetch(node, handles)
-            return out[None], fetched[None]
+            return pool_lib.sync_fetch(node, handles)[None]
 
-        rep = P()
         return jax.jit(shard_map(
-            lambda s, *a: prog(ctx_gas.make_node(), s, *a),
-            mesh=mesh,
-            in_specs=(P("node"),) + (rep,) * 5,
-            out_specs=(P("node"), P("node")),
+            lambda s: prog(ctx_gas.make_node(), s),
+            mesh=mesh, in_specs=(P("node"),), out_specs=P("node"),
             check_vma=False,
         ))
 
-    args = (seg, q, kv_pages, v_pages, table, lengths)
-    times = {}
+    fetch_fns = []
+    fetch_ids = []
+    for _ in range(n_batches):
+        ids = [int(x) for x in rng.integers(0, pages_per_rank, pages_per_batch)]
+        fetch_ids.extend(ids)
+        fetch_fns.append(make_fetch(
+            jnp.asarray([pmap.offset(g) for g in ids], jnp.int32)
+        ))
+    attn_fn = jax.jit(lambda q, kp, vp, t, l: ops.paged_attention(
+        q, kp, vp, t, l, impl="pallas"))
+
+    for fn in fetch_fns:
+        jax.block_until_ready(fn(seg))
+    jax.block_until_ready(attn_fn(q, kv_pages, v_pages, table, lengths))
+
+    def run_blocking():
+        fetched = [None] * n_batches
+        for i, fn in enumerate(fetch_fns):
+            fetched[i] = fn(seg)
+            jax.block_until_ready(fetched[i])  # blocking-get semantics
+        out = attn_fn(q, kv_pages, v_pages, table, lengths)
+        jax.block_until_ready(out)
+        return out, fetched
+
+    def run_overlap():
+        # initiate every get nonblocking, decode, then sync the handles
+        fetched = [fn(seg) for fn in fetch_fns]
+        out = attn_fn(q, kv_pages, v_pages, table, lengths)
+        jax.block_until_ready(out)
+        for f in fetched:
+            jax.block_until_ready(f)
+        return out, fetched
+
+    samples = {"blocking": [], "overlap": []}
     outs = {}
-    for kind, overlap in (("blocking", False), ("overlap", True)):
-        fn = make_prog(overlap)
-        o = fn(*args)
-        jax.block_until_ready(o)
-        iters = 10
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            o = fn(*args)
-        jax.block_until_ready(o)
-        times[kind] = (time.perf_counter() - t0) / iters * 1e6
-        outs[kind] = tuple(np.asarray(x) for x in o)
+    iters = 30
+    run_blocking()  # warm both programs
+    run_overlap()
+    for _ in range(iters):
+        # interleave the variants so machine-load drift during the run
+        # lands on both equally instead of biasing whichever ran last
+        for kind, run in (("blocking", run_blocking), ("overlap", run_overlap)):
+            t0 = time.perf_counter()
+            o = run()
+            samples[kind].append(time.perf_counter() - t0)
+            out, fetched = o
+            outs[kind] = [np.asarray(out)] + [np.asarray(f) for f in fetched]
+    # best-of-N: the structural cost each variant cannot avoid, with
+    # scheduler noise (which only ever adds time) stripped out
+    times = {k: float(np.min(v)) * 1e6 for k, v in samples.items()}
     for a, b in zip(outs["blocking"], outs["overlap"]):
         np.testing.assert_allclose(a, b, rtol=1e-6)
     gap = times["blocking"] / max(times["overlap"], 1e-9)
     fetch_bytes = len(fetch_ids) * page_elems * 4
     report("paged_fetch_blocking", times["blocking"],
-           f"{fetch_bytes}B fetched", op="paged_overlap",
-           fetch_bytes=fetch_bytes)
+           f"{fetch_bytes}B fetched in {n_batches} blocking gets",
+           op="paged_overlap", fetch_bytes=fetch_bytes,
+           n_batches=n_batches)
     report("paged_fetch_overlap", times["overlap"],
            f"{gap:.2f}x vs blocking", op="paged_overlap",
-           fetch_bytes=fetch_bytes, overlap_gap=round(gap, 3))
+           fetch_bytes=fetch_bytes, n_batches=n_batches,
+           overlap_gap=round(gap, 3))
 
 
 if __name__ == "__main__":

@@ -78,14 +78,22 @@ def paged_attention(
     scale: Optional[float] = None,
     impl: str = "ref",
     interpret: bool = True,
+    pages_per_block: Optional[int] = None,
+    block_b: Optional[int] = None,
 ) -> jax.Array:
     """Decode attention through a page table (the paged KV pool's compute
     side): q (B, Hq, D) against (P, T, Hkv, D) physical pages addressed by
-    page_table (B, NP), masked at lengths (B,)."""
+    page_table (B, NP), masked at lengths (B,).
+
+    ``pages_per_block``/``block_b`` tune the pallas kernel's DMA blocking
+    (pages streamed per grid step / requests sharing a burst) — pure perf
+    knobs, bit-identical output across settings; ignored by the oracle.
+    """
     if impl == "pallas":
         return _pa.paged_attention(
             q, k_pages, v_pages, page_table, lengths,
             scale=scale, interpret=interpret,
+            pages_per_block=pages_per_block, block_b=block_b,
         )
     return ref.paged_attention(
         q, k_pages, v_pages, page_table, lengths, scale=scale

@@ -6,18 +6,34 @@ fixed-size token pages scattered through one physical pool array, and the
 decode step must attend over them *in place* — no dense gather, no
 per-request contiguous copy.
 
-The page table rides the scalar-prefetch lane
-(``pltpu.PrefetchScalarGridSpec``): it is available before the kernel
-body runs, so the K/V ``BlockSpec`` index maps resolve the *physical*
-page for grid step (b, h, p) and the HBM->VMEM pipeline DMAs exactly the
-pages the request owns — the hardware analogue of the pool's one-sided
-``get_nbv`` page fetch, one level down the memory hierarchy.
+Serving-grade blocking (the SMI lesson: decouple message granularity
+from transfer granularity — here, page granularity from kernel-grid
+granularity):
 
-Online-softmax accumulation over the (sequential, innermost) logical-page
-grid dimension, exactly like ``flash_attention``; GQA is resolved in the
-index maps (one KV head's pages serve its whole query group).  Positions
-past ``lengths[b]`` are masked, so padded page-table entries may point at
-any physical page.
+- **Batch blocking** — the grid is ``(B/BLOCK_B, Hkv, NP/PAGES_PER_BLOCK)``,
+  so one kernel program serves ``BLOCK_B`` requests at once and their
+  page DMAs are issued as one burst per block instead of one grid step
+  per (request, page).
+- **Page-block streaming** — K/V stay in HBM (``memory_space=ANY``); the
+  kernel resolves physical pages through the scalar-prefetched table and
+  copies ``BLOCK_B x PAGES_PER_BLOCK`` pages per grid step into VMEM
+  scratch with explicit ``make_async_copy`` DMAs — the hardware analogue
+  of the pool's one-sided vectored ``get_nbv`` page fetch, one level down
+  the memory hierarchy.
+- **Double buffering** — two VMEM slots: the next page block's DMA burst
+  is issued *before* the current block's compute, so the wire hides
+  behind the online-softmax work exactly like the split-phase GASNet
+  ops hide behind the decode step.
+
+Blocking is a pure perf knob, never a semantics knob: the per-request
+online-softmax update is computed page by page in logical order with
+shapes independent of ``BLOCK_B``/``PAGES_PER_BLOCK``, so the output is
+bit-identical across block settings (property-tested in
+``tests/test_properties.py``).
+
+Positions past ``lengths[b]`` are masked *before* the running max and V
+is zeroed at masked positions, so padded page-table entries may point at
+any physical page — even one holding NaN garbage.
 
 Oracle: ``repro.kernels.ref.paged_attention``.  Validated under interpret
 mode; on real TPUs pass ``interpret=False``.
@@ -35,72 +51,135 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
 
-__all__ = ["paged_attention"]
+__all__ = ["paged_attention", "DEFAULT_PAGES_PER_BLOCK", "DEFAULT_BLOCK_B"]
 
 NEG_INF = -1e30
+
+# Default blocking: 4 requests share each DMA burst, 4 pages stream per
+# grid step (tuned for decode shapes where pages are small and the grid
+# overhead of one-(request, page)-per-step dominates).
+DEFAULT_BLOCK_B = 4
+DEFAULT_PAGES_PER_BLOCK = 4
 
 
 def _pa_kernel(
     table_ref,  # scalar prefetch: (B * NP,) physical page ids
     len_ref,  # scalar prefetch: (B,) live lengths
-    q_ref,  # (1, group, D)
-    k_ref,  # (1, T, 1, D) — the physical page picked by the index map
-    v_ref,  # (1, T, 1, D)
-    o_ref,  # (1, group, D)
-    m_scr,
+    q_ref,  # (BLOCK_B, group, D)
+    k_hbm,  # (P, T, Hkv, D) — full pool, memory_space=ANY
+    v_hbm,  # (P, T, Hkv, D)
+    o_ref,  # (BLOCK_B, group, D)
+    k_buf,  # VMEM (2, BLOCK_B, PPB, T, D) double-buffered page blocks
+    v_buf,
+    sems,  # DMA semaphores (2, 2, BLOCK_B, PPB)
+    m_scr,  # (BLOCK_B, group)
     l_scr,
-    acc_scr,
+    acc_scr,  # (BLOCK_B, group, D)
     *,
     scale: float,
     page_tokens: int,
     n_pages: int,
+    block_b: int,
+    pages_per_block: int,
 ):
-    del table_ref  # consumed by the index maps
-    b = pl.program_id(0)
-    p = pl.program_id(2)
+    bb = pl.program_id(0)
+    h = pl.program_id(1)
+    pb = pl.program_id(2)
+    npb = pl.num_programs(2)
+    T = page_tokens
 
-    @pl.when(p == 0)
+    def issue(slot, blk):
+        """One DMA burst: every (request, page) of one page block."""
+        for i in range(block_b):
+            gb = bb * block_b + i
+            for j in range(pages_per_block):
+                # clamp ragged tails: the copied page is fully masked
+                gp = jnp.minimum(blk * pages_per_block + j, n_pages - 1)
+                page = table_ref[gb * n_pages + gp]
+                pltpu.make_async_copy(
+                    k_hbm.at[page, :, h, :], k_buf.at[slot, i, j],
+                    sems.at[0, slot, i, j],
+                ).start()
+                pltpu.make_async_copy(
+                    v_hbm.at[page, :, h, :], v_buf.at[slot, i, j],
+                    sems.at[1, slot, i, j],
+                ).start()
+
+    def wait(slot):
+        for i in range(block_b):
+            for j in range(pages_per_block):
+                pltpu.make_async_copy(
+                    k_hbm.at[0, :, h, :], k_buf.at[slot, i, j],
+                    sems.at[0, slot, i, j],
+                ).wait()
+                pltpu.make_async_copy(
+                    v_hbm.at[0, :, h, :], v_buf.at[slot, i, j],
+                    sems.at[1, slot, i, j],
+                ).wait()
+
+    @pl.when(pb == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
+        issue(0, 0)
 
-    q = q_ref[0].astype(jnp.float32) * scale  # (G, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)  # (T, D)
-    v = v_ref[0, :, 0].astype(jnp.float32)  # (T, D)
+    @pl.when(pb + 1 < npb)
+    def _prefetch():
+        # next block's wire time hides behind this block's compute
+        issue((pb + 1) % 2, pb + 1)
 
-    s = lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (G, T)
-    kpos = p * page_tokens + lax.broadcasted_iota(
-        jnp.int32, s.shape, dimension=1
-    )
-    mask = kpos < len_ref[b]
-    s = jnp.where(mask, s, NEG_INF)
+    slot = pb % 2
+    wait(slot)
 
-    m_prev = m_scr[:, 0]
-    l_prev = l_scr[:, 0]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1))
-    pexp = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
-    alpha = jnp.exp(m_prev - m_new)
-    l_new = alpha * l_prev + pexp.sum(axis=-1)
-    acc = acc_scr[...] * alpha[:, None] + lax.dot_general(
-        pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
+    for i in range(block_b):
+        gb = bb * block_b + i
+        q = q_ref[i].astype(jnp.float32) * scale  # (G, D)
+        m_prev = m_scr[i, :]
+        l_prev = l_scr[i, :]
+        acc = acc_scr[i]
+        # pages combine in logical order with BLOCK-INDEPENDENT shapes:
+        # bit-identical across (block_b, pages_per_block) settings
+        for j in range(pages_per_block):
+            gp = pb * pages_per_block + j
+            k = k_buf[slot, i, j].astype(jnp.float32)  # (T, D)
+            v = v_buf[slot, i, j].astype(jnp.float32)
+            s = lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (G, T)
+            kpos = gp * T + lax.broadcasted_iota(
+                jnp.int32, s.shape, dimension=1
+            )
+            mask = kpos < len_ref[gb]
+            # mask BEFORE the running max and zero V at masked slots:
+            # garbage (even NaN) in padded pages never reaches the output
+            s = jnp.where(mask, s, NEG_INF)
+            v = jnp.where(mask[0][:, None], v, 0.0)
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            pexp = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+            alpha = jnp.exp(m_prev - m_new)
+            l_prev = alpha * l_prev + pexp.sum(axis=-1)
+            acc = acc * alpha[:, None] + lax.dot_general(
+                pexp, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            m_prev = m_new
+        m_scr[i, :] = m_prev
+        l_scr[i, :] = l_prev
+        acc_scr[i] = acc
 
-    m_scr[:, 0] = m_new
-    l_scr[:, 0] = l_new
-    acc_scr[...] = acc
-
-    @pl.when(p == n_pages - 1)
+    @pl.when(pb == npb - 1)
     def _finalize():
-        l = l_scr[:, 0]
-        denom = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+        for i in range(block_b):
+            l = l_scr[i, :]
+            denom = jnp.where(l == 0.0, 1.0, l)
+            o_ref[i] = (acc_scr[i] / denom[:, None]).astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("scale", "interpret")
+    jax.jit,
+    static_argnames=("scale", "pages_per_block", "block_b", "interpret"),
 )
 def paged_attention(
     q: jax.Array,
@@ -110,6 +189,8 @@ def paged_attention(
     lengths: jax.Array,
     *,
     scale: Optional[float] = None,
+    pages_per_block: Optional[int] = None,
+    block_b: Optional[int] = None,
     interpret: bool = True,
 ) -> jax.Array:
     """Decode attention over a paged KV pool.
@@ -119,8 +200,13 @@ def paged_attention(
       k_pages, v_pages: (P, T, Hkv, D) — the physical page pool.
       page_table: (B, NP) int32 — physical page id of request b's logical
         page p; entries at or past ``ceil(lengths[b] / T)`` are masked and
-        may hold any valid physical id.
+        may hold any valid physical id (even pages holding garbage).
       lengths: (B,) int32 — live cache positions per request.
+      pages_per_block: physical pages streamed per grid step (default
+        ``DEFAULT_PAGES_PER_BLOCK``, clamped to NP).  Perf knob only —
+        the output is bit-identical across settings.
+      block_b: requests sharing one DMA burst (default
+        ``DEFAULT_BLOCK_B``, clamped to B).  Perf knob only.
     Returns:
       (B, Hq, D) in q.dtype.
     """
@@ -140,42 +226,60 @@ def paged_attention(
     NP = page_table.shape[1]
     if scale is None:
         scale = 1.0 / (D**0.5)
+    ppb = max(1, min(pages_per_block or DEFAULT_PAGES_PER_BLOCK, NP))
+    blk_b = max(1, min(block_b or DEFAULT_BLOCK_B, B))
+    npb = -(-NP // ppb)
+
+    # pad the batch to a multiple of the block; padded rows have length 0
+    # (their output is zeros and dropped below) and table entries 0
+    Bp = -(-B // blk_b) * blk_b
+    table = page_table.astype(jnp.int32)
+    lens = lengths.astype(jnp.int32)
+    qq = q
+    if Bp != B:
+        qq = jnp.pad(q, ((0, Bp - B), (0, 0), (0, 0)))
+        table = jnp.pad(table, ((0, Bp - B), (0, 0)))
+        lens = jnp.pad(lens, ((0, Bp - B),))
 
     kernel = functools.partial(
-        _pa_kernel, scale=scale, page_tokens=T, n_pages=NP
+        _pa_kernel,
+        scale=scale,
+        page_tokens=T,
+        n_pages=NP,
+        block_b=blk_b,
+        pages_per_block=ppb,
     )
-
-    def kv_map(b, h, p, table, lens):
-        del lens
-        return (table[b * NP + p], 0, h, 0)
 
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
-            grid=(B, Hkv, NP),
+            grid=(Bp // blk_b, Hkv, npb),
             in_specs=[
                 pl.BlockSpec(
-                    (1, group, D), lambda b, h, p, table, lens: (b, h, 0)
+                    (blk_b, group, D),
+                    lambda b, h, p, table, lens: (b, h, 0),
                 ),
-                pl.BlockSpec((1, T, 1, D), kv_map),
-                pl.BlockSpec((1, T, 1, D), kv_map),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
             ],
             out_specs=pl.BlockSpec(
-                (1, group, D), lambda b, h, p, table, lens: (b, h, 0)
+                (blk_b, group, D), lambda b, h, p, table, lens: (b, h, 0)
             ),
             scratch_shapes=[
-                pltpu.VMEM((group, 1), jnp.float32),
-                pltpu.VMEM((group, 1), jnp.float32),
-                pltpu.VMEM((group, D), jnp.float32),
+                pltpu.VMEM((2, blk_b, ppb, T, D), k_pages.dtype),
+                pltpu.VMEM((2, blk_b, ppb, T, D), v_pages.dtype),
+                pltpu.SemaphoreType.DMA((2, 2, blk_b, ppb)),
+                pltpu.VMEM((blk_b, group), jnp.float32),
+                pltpu.VMEM((blk_b, group), jnp.float32),
+                pltpu.VMEM((blk_b, group, D), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((Bp, Hq, D), q.dtype),
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=compat.tpu_interpret(interpret),
         name="paged_attention_decode",
-    )(page_table.reshape(-1).astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pages, v_pages)
-    return out
+    )(table.reshape(-1), lens, qq, k_pages, v_pages)
+    return out[:B]

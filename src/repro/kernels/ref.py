@@ -155,7 +155,10 @@ def paged_attention(
     valid = jnp.arange(S)[None, :] < lengths[:, None]  # (B, S)
     s = jnp.where(valid[:, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhs,bhsd->bhd", p, vx.astype(jnp.float32))
+    # zero V at masked positions too: masked probabilities are ~0 but
+    # 0 * NaN = NaN, and padded table slots may point at garbage pages
+    vx = jnp.where(valid[:, None, :, None], vx.astype(jnp.float32), 0.0)
+    out = jnp.einsum("bhs,bhsd->bhd", p, vx)
     any_visible = valid.any(axis=-1)[:, None, None]
     return jnp.where(any_visible, out, 0.0).astype(q.dtype)
 

@@ -28,10 +28,113 @@ CPU-scale demo: ``python -m repro.launch.serve --arch qwen3-4b --smoke``.
 """
 import argparse
 import dataclasses
+import functools
 import time
 from typing import Any, Dict, List, Optional
 
 import numpy as np
+
+
+def _paged_decode_fn(model, ctx, layout):
+    """Build the fused paged decode step: pool carrier -> decode views ->
+    ``model.decode_step_paged`` -> carrier, all inside ONE jit.
+
+    Keeping the reshape/bitcast chain on device (and, for the colocated
+    :class:`PagedServer`, the carrier itself resident across ticks) removes
+    the per-tick host round trip over the whole pool that made the paged
+    decode path slower than the dense baseline.  The carrier has one extra
+    *scratch* row past the pool: dead rows and unmaterialised table slots
+    scatter there, and it is wiped every step so garbage never accumulates.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    empty_row = np.asarray(layout.empty_page_row())
+
+    @jax.jit
+    def step(params, token, positions, mem, tables):
+        mem = mem.at[mem.shape[0] - 1].set(
+            jnp.asarray(empty_row, mem.dtype)
+        )
+        views = layout.decode_views(mem)
+        logits, views = model.decode_step_paged(
+            params, ctx, token, positions, views, tables
+        )
+        return logits, layout.views_to_pool(views)
+
+    return step
+
+
+def _paged_decode_views_fn(model, ctx, layout):
+    """The colocated variant of :func:`_paged_decode_fn`: the pool stays
+    resident ON DEVICE in *decode-views* form (the per-layer page-pool
+    pytree) across ticks, so a steady-state step runs zero carrier
+    repacks — the carrier<->views conversion happens only at host sync
+    points.  The views buffers are donated: the per-layer token scatter
+    updates in place instead of copying every pool."""
+    import jax
+    import jax.numpy as jnp
+
+    empty_views = layout.decode_views(
+        jnp.asarray(np.asarray(layout.empty_page_row())[None])
+    )
+
+    @functools.partial(jax.jit, donate_argnums=(3,))
+    def step(params, token, positions, views, tables):
+        # wipe the scratch page (page axis 1 of every (L, P, T, ...)
+        # pool): dead rows and unmaterialised slots scattered garbage
+        # into it last step
+        views = jax.tree_util.tree_map(
+            lambda pool, init: pool.at[:, pool.shape[1] - 1].set(
+                init[:, 0]
+            ),
+            views, empty_views,
+        )
+        logits, views = model.decode_step_paged(
+            params, ctx, token, positions, views, tables
+        )
+        return logits, views
+
+    return step
+
+
+_PATCH_CHUNK = 8
+
+
+def _pool_patch_fn(layout):
+    """Jitted device-side pool patch for the views-resident pool: scatter
+    ``rows`` (fresh page payloads — admissions, lazy materialisations)
+    at ``write_dst`` and duplicate ``copy_src -> copy_dst`` (COW splits),
+    without ever round-tripping the whole pool through the host.  All
+    index operands are fixed-width (:data:`_PATCH_CHUNK`), padded with
+    the scratch page index so one compilation serves every patch."""
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def patch(views, write_dst, rows, copy_src, copy_dst):
+        rowviews = layout.decode_views(rows)
+
+        def apply(pool, rv):
+            # writes first: a copy source may itself be a page written
+            # this very tick (same-tick admission then COW share)
+            pool = pool.at[:, write_dst].set(rv)
+            pool = pool.at[:, copy_dst].set(pool[:, copy_src])
+            return pool
+
+        return jax.tree_util.tree_map(apply, views, rowviews)
+
+    return patch
+
+
+def _pool_write_need(store, layout, rid: int, position: int) -> int:
+    """Fresh pages the next decode write needs: one when the position
+    lands on an unmaterialised slot (lazy growth) or a shared page
+    (copy-on-write split), none otherwise."""
+    table = store.tables[rid]
+    p = table[position // layout.page_tokens]
+    if p < 0:
+        return 1
+    return 1 if store.state.refcnt[p] > 1 else 0
 
 
 @dataclasses.dataclass
@@ -307,11 +410,68 @@ class PagedServer(Server):
         )
         self._by_rid: Dict[int, Request] = {}
         self._preempted: Dict[int, Dict[str, Any]] = {}
-        self._decode_paged = self.jax.jit(
-            lambda p, t, pos, c, tb: model.decode_step_paged(
-                p, ctx, t, pos, c, tb
+        self._decode_paged = _paged_decode_views_fn(model, ctx, self.layout)
+        # device-resident pool in decode-views form (each per-layer pool
+        # has P+1 rows, scratch last), kept across ticks; None whenever
+        # the host mirror is authoritative
+        self._dev_views = None
+        # live high-water mark of page-table width (monotonic; each
+        # growth is one fused-step recompile)
+        self._table_width = 1
+        # host-side page mutations queued for the device-resident pool:
+        # fresh payload rows (admissions, lazy materialisations) and COW
+        # src->dst splits, applied by the jitted patch program before the
+        # next decode step (or before any host sync)
+        self._patch = _pool_patch_fn(self.layout)
+        self._pending_rows: Dict[int, np.ndarray] = {}
+        self._pending_copies: List[tuple] = []
+
+    def _apply_pending(self) -> None:
+        """Flush queued page writes/copies into the device-resident pool.
+        Writes flush (in chunks) before any copy: a COW split may source
+        a page admitted this same tick."""
+        jnp = self.jnp
+        P = self.store.state.n_pages  # scratch index pads the chunks
+        elems = self.layout.page_elems
+        rows = list(self._pending_rows.items())
+        copies = list(self._pending_copies)
+        self._pending_rows.clear()
+        self._pending_copies.clear()
+        pad_idx = np.full((_PATCH_CHUNK,), P, np.int32)
+        pad_rows = np.zeros((_PATCH_CHUNK, elems), np.float32)
+        while rows:
+            chunk, rows = rows[:_PATCH_CHUNK], rows[_PATCH_CHUNK:]
+            wd, wr = pad_idx.copy(), pad_rows.copy()
+            for j, (pg, row) in enumerate(chunk):
+                wd[j], wr[j] = pg, row
+            self._dev_views = self._patch(
+                self._dev_views, jnp.asarray(wd), jnp.asarray(wr),
+                jnp.asarray(pad_idx), jnp.asarray(pad_idx),
             )
-        )
+        while copies:
+            chunk, copies = copies[:_PATCH_CHUNK], copies[_PATCH_CHUNK:]
+            cs, cd = pad_idx.copy(), pad_idx.copy()
+            for j, (src, dst) in enumerate(chunk):
+                cs[j], cd[j] = src, dst
+            self._dev_views = self._patch(
+                self._dev_views, pad_idx, pad_rows,
+                jnp.asarray(cs), jnp.asarray(cd),
+            )
+
+    def _sync_host(self) -> None:
+        """Land the device-resident pool back in the host mirror before
+        any host-side read or write of page payloads (swap staging,
+        resume restores, bulk admission rewrites).  Queued page patches
+        flush to the device first so the download is complete.  The
+        device copy is dropped; the next decode step re-uploads the
+        mutated mirror."""
+        if self._dev_views is not None:
+            if self._pending_rows or self._pending_copies:
+                self._apply_pending()
+            P = self.store.state.n_pages
+            mem = self.layout.views_to_pool(self._dev_views)
+            self.store.mem[:] = np.asarray(mem)[:P]
+            self._dev_views = None
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
@@ -343,18 +503,12 @@ class PagedServer(Server):
         return self.store.freeable(rid)
 
     def _write_need(self, rid: int, position: int) -> int:
-        """Fresh pages the next decode write needs: one when the position
-        lands on an unmaterialised slot (lazy growth) or a shared page
-        (copy-on-write split), none otherwise."""
-        table = self.store.tables[rid]
-        p = table[position // self.layout.page_tokens]
-        if p < 0:
-            return 1
-        return 1 if self.store.state.refcnt[p] > 1 else 0
+        return _pool_write_need(self.store, self.layout, rid, position)
 
     def _preempt(self, rid: int, mode: Optional[str] = None) -> None:
         from repro.serving import tier as tier_lib
 
+        self._sync_host()  # swap staging reads page payloads
         slot = self._slot_of(rid)
         req = self._by_rid[rid]
         table = self.store.page_table(rid)
@@ -420,6 +574,7 @@ class PagedServer(Server):
     def _resume(self, rid: int, slot: int) -> bool:
         st = self._preempted[rid]
         req = self._by_rid[rid]
+        self._sync_host()  # restores / re-prefills write page payloads
         if st["mode"] == "swap":
             if self.store.n_free < len(st["logical"]):
                 return False
@@ -466,6 +621,15 @@ class PagedServer(Server):
             plan = self.store.plan_admit(req.prompt, lazy=True)
             self.store.write_pages(plan, pages)
             self.store.commit(req.rid, plan)
+            if self._dev_views is not None:
+                # the pool stays device-resident across admissions: queue
+                # only the fresh prompt pages as patches instead of
+                # round-tripping the whole pool through the host mirror
+                for page_id, is_fresh in zip(plan.table, plan.fresh):
+                    if is_fresh:
+                        self._pending_rows[page_id] = self.store.mem[
+                            page_id
+                        ].copy()
             if not req.out:
                 req.out.append(tok)
             self._bind_row(req, slot, len(req.prompt), req.out[0])
@@ -507,6 +671,8 @@ class PagedServer(Server):
         # under-reservation across rows); a row that cannot get one (even
         # after preempting eligible victims) self-preempts and resumes
         # once pages free up.
+        from repro.serving.pool import UNMATERIALIZED
+
         for i in list(live):
             req = self.active[i]
             if req is None:
@@ -516,29 +682,58 @@ class PagedServer(Server):
                 if not self._make_room(need, req.rid, strict=False):
                     self._preempt(req.rid)
                     continue
-            self.store.prepare_write(req.rid, int(self.positions[i]))
+            pos = int(self.positions[i])
+            if need and self._dev_views is not None:
+                # materialisation / COW split mutates page payloads: mirror
+                # the host-side bookkeeping write as a device patch rather
+                # than syncing the whole pool down and back up
+                before = self.store.tables[req.rid][
+                    pos // self.layout.page_tokens
+                ]
+                dst = self.store.prepare_write(req.rid, pos)
+                if before == UNMATERIALIZED:
+                    self._pending_rows[dst] = np.asarray(
+                        self.layout.empty_page_row()
+                    )
+                elif dst != before:  # COW split: clone the shared payload
+                    self._pending_copies.append((int(before), int(dst)))
+            else:
+                self.store.prepare_write(req.rid, pos)
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
             return 0
         # device tables: unmaterialised slots (and dead rows) target the
-        # scratch page appended past the pool — always masked by lengths
+        # scratch page appended past the pool — always masked by lengths.
+        # The table is sized to the batch's live high-water mark (grown
+        # monotonically so the fused step recompiles at most once per
+        # growth step, never thrashes): paged attention then reads ONLY
+        # pages any request can occupy, instead of paying the full
+        # cache_len width the dense rows are stuck with.
         P = self.store.state.n_pages
-        tables = np.full((self.B, self.layout.n_pages), P, np.int32)
+        T = self.layout.page_tokens
+        need = max(int(self.positions[i]) // T + 1 for i in live)
+        need = min(self.layout.n_pages, -(-need // 4) * 4)  # 4-page buckets
+        self._table_width = max(self._table_width, need)
+        tables = np.full((self.B, self._table_width), P, np.int32)
         for i in live:
-            tables[i] = self.store.device_table(self.active[i].rid, absent=P)
-        mem = np.concatenate(
-            [self.store.mem, self.layout.empty_page_row()[None]], axis=0
-        )
-        views = self.layout.decode_views(self.jnp.asarray(mem))
-        logits, views = self._decode_paged(
+            row = self.store.device_table(self.active[i].rid, absent=P)
+            tables[i] = row[: self._table_width]
+        if self._dev_views is None:  # (re-)upload the mutated host mirror
+            self._dev_views = self.layout.decode_views(self.jnp.asarray(
+                np.concatenate(
+                    [self.store.mem, self.layout.empty_page_row()[None]],
+                    axis=0,
+                )
+            ))
+        if self._pending_rows or self._pending_copies:
+            self._apply_pending()
+        logits, self._dev_views = self._decode_paged(
             self.params,
             self.jnp.asarray(self.last_token),
             self.jnp.asarray(self.positions),
-            views,
+            self._dev_views,
             self.jnp.asarray(tables),
         )
-        newmem = np.asarray(self.layout.views_to_pool(views))
-        self.store.mem[:] = newmem[:P]
         for i in live:
             if i not in self.replaying:  # replays are not new generation
                 self.scheduler.on_step(self.active[i].rid)
@@ -570,10 +765,137 @@ class PagedServer(Server):
 
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
         stats = super().run_until_drained(max_ticks)
+        self._sync_host()  # callers may inspect the pool post-drain
         stats.update({f"pool_{k}": v for k, v in self.store.stats().items()})
         stats.update(self.tier.stats())
         stats.update(self.scheduler.stats())
         return stats
+
+
+class PooledDecodeServer(Server):
+    """Decode server whose KV lives in an EXTERNAL paged store — the
+    disaggregated cluster's per-rank pool shard.
+
+    Rows are bound to page tables by rid (:meth:`admit_paged`); no dense
+    cache row is ever built, and every tick decodes through
+    ``Model.decode_step_paged`` — the same single decode path the
+    colocated :class:`PagedServer` runs, so dense ``decode_step`` survives
+    only as the test oracle.
+
+    Division of labour with the cluster:
+
+    - the cluster owns prefill, admission (page puts over the GAS layer),
+      preemption policy, release, and resume;
+    - the server owns the per-tick write-page claim
+      (``store.prepare_write``) and the batched paged decode;
+    - :meth:`drain_dirty` exposes the physical pages each tick wrote so
+      the cluster can replay them onto a freshly *consumed* pool segment
+      — the decode step overlaps an in-flight transfer program whose
+      result replaces the whole segment the store's mirror aliases.
+
+    When the pool shard runs dry mid-growth (tiered clusters
+    oversubscribe), ``on_page_shortage(rid, need)`` asks the cluster to
+    preempt; if pages still aren't free the row *stalls* one tick: its
+    write slot is remapped to the scratch page (so a pending
+    copy-on-write split can't corrupt sharers) and its logits are
+    discarded — it retries once the swap-out lands.
+    """
+
+    def __init__(self, model, ctx, params, batch_size: int, cache_len: int,
+                 store, eos_id: int = -1, greedy: bool = True, seed: int = 0,
+                 on_page_shortage=None):
+        super().__init__(model, ctx, params, batch_size, cache_len,
+                         eos_id=eos_id, greedy=greedy, seed=seed)
+        self.store = store
+        self.layout = store.layout
+        self.on_page_shortage = on_page_shortage
+        self.paged_decode_steps = 0
+        self._dirty: Dict[int, np.ndarray] = {}
+        self._decode_paged = _paged_decode_fn(model, ctx, self.layout)
+
+    def _admit(self) -> None:
+        """Admission belongs to the cluster (prefill nodes + GAS puts)."""
+
+    def admit_paged(
+        self, req: Request, first_token: int, position: int
+    ) -> bool:
+        """Bind an installed request's decode row to its page table: the
+        pool shard — not any dense copy — is the KV source of truth.
+        Returns False when no decode row is free."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        if not req.out:
+            req.out.append(int(first_token))
+        if not req.t_first:
+            req.t_first = time.monotonic()
+        self.active[slot] = req
+        self.positions[slot] = position
+        self.last_token[slot, 0] = int(first_token)
+        return True
+
+    def drain_dirty(self) -> Dict[int, np.ndarray]:
+        """Physical page -> row payload written since the last drain."""
+        d = self._dirty
+        self._dirty = {}
+        return d
+
+    def step(self) -> int:
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        jnp = self.jnp
+        # row -> the physical page this tick's write lands in; rows absent
+        # here at decode time are stalled (no write page) and discarded
+        written: Dict[int, int] = {}
+        for i in list(live):
+            req = self.active[i]
+            if req is None:
+                continue  # evicted by an earlier row's shortage handling
+            pos = int(self.positions[i])
+            need = _pool_write_need(self.store, self.layout, req.rid, pos)
+            if need and self.store.n_free < need:
+                ok = bool(self.on_page_shortage) and self.on_page_shortage(
+                    req.rid, need
+                )
+                if self.active[i] is None:
+                    continue  # the shortage handler preempted this row
+                if not ok:
+                    continue  # stall: retry once freed pages land
+            written[i] = self.store.prepare_write(req.rid, pos)
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        P = self.store.state.n_pages
+        tables = np.full((self.B, self.layout.n_pages), P, np.int32)
+        for i in live:
+            tables[i] = self.store.device_table(self.active[i].rid, absent=P)
+            if i not in written:
+                # stalled: scatter into scratch, never a shared page
+                slot = int(self.positions[i]) // self.layout.page_tokens
+                tables[i, slot] = P
+        mem = np.concatenate(
+            [self.store.mem, self.layout.empty_page_row()[None]], axis=0
+        )
+        logits, newmem = self._decode_paged(
+            self.params,
+            jnp.asarray(self.last_token),
+            jnp.asarray(self.positions),
+            jnp.asarray(mem),
+            jnp.asarray(tables),
+        )
+        self.paged_decode_steps += 1
+        # download ONLY the pages this tick wrote — the rest of the shard
+        # is bit-identical to the mirror the transfer program already read
+        pages = sorted(set(written.values()))
+        if pages:
+            rows = np.asarray(newmem[np.asarray(pages, np.int32)])
+            for pp, row in zip(pages, rows):
+                self.store.mem[pp] = row
+                self._dirty[pp] = row
+        advanced = [i for i in live if i in written]
+        self._advance(advanced, np.asarray(logits))
+        return len(advanced)
 
 
 def main() -> None:

@@ -113,7 +113,7 @@ class DisaggCluster:
 
         from repro.core import am, gasnet, sched
         from repro.compat import shard_map
-        from repro.launch.serve import Server
+        from repro.launch.serve import PooledDecodeServer, Server
         from repro.serving import pool as pool_lib
         from repro.serving import scheduler as sched_lib
         from repro.serving import tier as tier_lib
@@ -253,10 +253,28 @@ class DisaggCluster:
             self._alias_store_mem()
 
         # ---- pools ------------------------------------------------------
-        self.decode_servers = [
-            Server(model, ctx, params, decode_batch, cache_len, eos_id=eos_id)
-            for _ in range(n_decode)
-        ]
+        # paged clusters decode THROUGH the page table — the same single
+        # decode path (Model.decode_step_paged) as the colocated
+        # PagedServer; the dense Server survives only as the oracle for
+        # the unpaged (paged=False) handoff.
+        if paged:
+            self.decode_servers = [
+                PooledDecodeServer(
+                    model, ctx, params, decode_batch, cache_len,
+                    store=self.stores[d], eos_id=eos_id,
+                    on_page_shortage=(
+                        lambda rid, need, d=d:
+                        self._decode_shortage(d, rid, need)
+                    ),
+                )
+                for d in range(n_decode)
+            ]
+        else:
+            self.decode_servers = [
+                Server(model, ctx, params, decode_batch, cache_len,
+                       eos_id=eos_id)
+                for _ in range(n_decode)
+            ]
         self._prefill_fn = jax.jit(
             lambda p, b: model.prefill(p, ctx, b, cache_len=cache_len)
         )
@@ -305,8 +323,11 @@ class DisaggCluster:
     def _alias_store_mem(self) -> None:
         """Point each decode store's physical page array at its rank's
         partition of the (freshly consumed) pool segment — the host
-        mirror of the PGAS shard.  Stores never write in disaggregated
-        mode; pages arrive only over the wire."""
+        mirror of the PGAS shard.  Pages arrive over the wire (admission
+        puts, swap-in gets) AND from the paged decode step, which writes
+        each tick's token page in place; decode writes made while a
+        transfer was in flight are replayed onto the fresh mirror by
+        :meth:`_apply_decode_writes`."""
         pool_elems = self.pages_per_rank * self.playout.page_elems
         for d, store in enumerate(self.stores):
             store.mem = self.kvseg[self.decode_rank(d)][:pool_elems].reshape(
@@ -345,6 +366,7 @@ class DisaggCluster:
         gasnet = self.gasnet
         from jax.sharding import PartitionSpec as P
 
+        from repro.serving import pool as pool_lib
         from repro.serving import tier as tier_lib
 
         spec = P(self.node_axis)
@@ -398,7 +420,7 @@ class DisaggCluster:
             # vectored get — both split-phase, in flight alongside the
             # admission puts and the AM control plane.
             swap_handles = []
-            geth = None
+            fetch_handles = None
             if perm_swap is not None:
                 swap_handles, _ = tier_lib.swap_out_pages(
                     node, kvseg,
@@ -409,11 +431,19 @@ class DisaggCluster:
                     plan=self.swap_plan,
                 )
             if perm_fetch is not None:
-                geth = node.get_nbv(
+                # in-step page prefetch: the pool's split-phase vectored
+                # fetch (plan-batched get_nbv) is issued HERE and drained
+                # only after the puts and control plane below — and the
+                # host overlaps one whole paged decode step before
+                # consuming this program, so the wire hides behind the
+                # decode compute.
+                fetch_handles, _ = pool_lib.fetch_pages(
+                    node,
                     kvseg,
+                    fetch_meta[0, :, 0],
                     frm=gasnet.Perm(perm_fetch),
-                    indices=fetch_meta[0, :, 0],
-                    size=self.playout.page_elems,
+                    page_elems=self.playout.page_elems,
+                    plan=self.swap_plan,
                     pred=fetch_meta[0, :, 2].max() > 0,
                 )
             # control plane rides while the puts are in flight
@@ -434,8 +464,8 @@ class DisaggCluster:
             kvseg = kv_lib.sync_push(node, kvseg, handles)
             for h in swap_handles:
                 kvseg = node.sync(h)
-            if geth is not None:
-                fetched = node.sync(geth)
+            if fetch_handles is not None:
+                fetched = pool_lib.sync_fetch(node, fetch_handles)
                 kvseg = tier_lib.install_pages(
                     node, kvseg, fetched,
                     fetch_meta[0, :, 1], fetch_meta[0, :, 2],
@@ -627,19 +657,13 @@ class DisaggCluster:
             except (pool_lib.OutOfPagesError, tier_lib.OutOfSlotsError):
                 mode = "recompute"  # no room to stage: drop and replay
         if mode == "swap":
-            # stage the victim's CURRENT state into its pool pages (host
-            # mirror of the rank's segment): full prompt pages already
-            # hold these exact bytes (decode never writes them), so
-            # prefix-shared pages are rewritten bit-identically and their
-            # sharers are unaffected; boundary/generated pages are private
-            # by construction.
-            row = self.jax.tree.map(
-                lambda x: x[:, i : i + 1], server.caches
-            )
-            rows = np.asarray(self.playout.flatten(row))
+            # the pool shard IS the victim's current state: the paged
+            # decode step writes every generated token's page in place,
+            # and prompt pages are written once at admission (prefix
+            # sharers included) — so unlike the old dense decode rows
+            # there is nothing to stage; the swap-out job just ships the
+            # victim's resident pages as they sit in the mirror.
             table = store.page_table(rid)
-            for lp in range(n_mat):
-                store.mem[table[lp]] = rows[lp]
             src = [table[lp] * self.playout.page_elems for lp in range(n_mat)]
             dst = [
                 self.tier.slot_offset(hold.rank, s) for s in hold.slots
@@ -664,6 +688,55 @@ class DisaggCluster:
         }
         self.scheduler.on_preempted(rid, mode)
 
+    def _decode_shortage(self, d: int, rid: int, need: int) -> bool:
+        """A decode row's lazy page growth found rank ``d``'s pool shard
+        dry mid-tick (tiered clusters oversubscribe): preempt victims for
+        the growing row.  Returns False when no pages freed up *this
+        tick* — a swap-mode victim's pages are released only once its
+        vectored put lands on the memory rank — in which case the row
+        stalls one tick and retries (see PooledDecodeServer.step)."""
+        if self.scheduler is None:
+            return False
+        store = self.stores[d]
+        # pages are already on their way: a staged/in-flight swap-out from
+        # this rank frees its victim's pages when the vectored put lands —
+        # stall instead of preempting MORE (else two residents ping-pong
+        # through swap/resume without ever decoding)
+        if any(job[1] == d for job in self._swap_jobs) or (
+            self._inflight_swap is not None and self._inflight_swap[1] == d
+        ):
+            return False
+        running = [
+            r.rid for r in self.decode_servers[d].active
+            if r is not None and r.rid != rid
+        ]
+        victims = self.scheduler.pick_victims(
+            running, need - store.n_free,
+            lambda v, d=d: self._freeable(d, v),
+            beneficiary=rid, strict=False,
+        )
+        # no eligible victim and no landing pending: the growing row
+        # preempts itself so its pages can serve whoever CAN progress
+        for v in (victims or [rid]):
+            self._preempt(d, v)
+        return store.n_free >= need
+
+    def _apply_decode_writes(self) -> None:
+        """Replay this tick's decode-written pages onto the pool mirror.
+
+        The decode step overlaps an in-flight transfer program whose
+        consumed result REPLACES the whole segment the stores alias, so
+        page writes made during the overlap must land again on the fresh
+        mirror.  Transfer targets are disjoint from decode write pages by
+        construction: admission puts and swap-in installs land only in
+        freshly allocated (hence non-free, non-writable) pages, and
+        swap-out destinations live on memory ranks."""
+        if not self.paged:
+            return
+        for d, server in enumerate(self.decode_servers):
+            for pp, row in server.drain_dirty().items():
+                self.stores[d].mem[pp] = row
+
     def _run_resumes(self) -> None:
         """Stage swap-ins: a preempted-by-swap request whose pages sit in
         the tier resumes onto the decode rank with room — one vectored-get
@@ -684,9 +757,16 @@ class DisaggCluster:
             ):
                 continue
             hold = self.tier.holdings[rid]
+            # growth headroom: when the resume position opens a FRESH page
+            # (position on a page boundary), the first decode tick after
+            # install needs one page beyond the restored set — resuming
+            # without it would bounce straight back out
+            need = len(hold.logical)
+            if snap["position"] % self.playout.page_tokens == 0:
+                need += 1
             best = None
             for d in range(self.n_decode):
-                if self.stores[d].n_free >= len(hold.logical):
+                if self.stores[d].n_free >= need:
                     best = d
                     break
             if best is None:
@@ -701,16 +781,16 @@ class DisaggCluster:
             return
 
     def _install_resumed(self) -> None:
-        """Bind restored requests to free decode rows: gather the swapped
-        pages back through the fresh table and resume decoding exactly at
-        the preempted position (bit-identical continuation)."""
+        """Bind restored requests to free decode rows: the swapped pages
+        landed back in the pool shard at their new table slots, so the
+        row resumes decoding through the page table exactly at the
+        preempted position (bit-identical continuation)."""
         for rid, d in list(self._installable.items()):
             server = self.decode_servers[d]
             snap = self._preempted[rid]
             req = self.by_rid[rid]
-            ok = server.admit_prefilled(
+            ok = server.admit_paged(
                 req,
-                self.stores[d].gather(rid),
                 first_token=snap["last_token"],
                 position=snap["position"],
             )
@@ -889,15 +969,12 @@ class DisaggCluster:
 
     def _install(self, server, rank: int, slot: int, req) -> bool:
         if self.paged:
-            # read the request's cache back THROUGH its page table: the
-            # pool shard (not any staging copy) is the source of truth
-            d = rank - self.n_prefill
-            caches_one = self.stores[d].gather(req.rid)
-            ok = server.admit_prefilled(
-                req,
-                caches_one,
-                first_token=req.out[0],
-                position=len(req.prompt),
+            # bind the decode row straight to the page table: the pool
+            # shard is the KV source of truth and every decode tick runs
+            # THROUGH it (Model.decode_step_paged) — no dense row is ever
+            # gathered in the cluster hot path.
+            ok = server.admit_paged(
+                req, first_token=req.out[0], position=len(req.prompt)
             )
             if ok and self.scheduler is not None:
                 snap = self._preempted.get(req.rid)
@@ -935,6 +1012,7 @@ class DisaggCluster:
         self._decode_step()  # overlaps the in-flight transfer
         if results is not None:
             self._consume_transfer(results)
+        self._apply_decode_writes()
         if self.paged and self.tier is not None:
             self._install_resumed()
 
@@ -1005,6 +1083,10 @@ class DisaggCluster:
                 "kv_pages_shared": self.kv_pages_shared,
                 "prefix_hit_rate": (hits / (hits + misses) if hits + misses else 0.0),
                 "pool_free_pages": sum(s.n_free for s in self.stores),
+                "decode_paged_steps": sum(
+                    getattr(s, "paged_decode_steps", 0)
+                    for s in self.decode_servers
+                ),
             })
             if self.scheduler is not None:
                 stats.update(self.scheduler.stats())

@@ -130,6 +130,82 @@ def test_paged_attention_masks_padded_pages():
         )
 
 
+# adversarial parity sweep for the batch-blocked kernel: GQA ratios, page
+# counts that don't divide the DMA block, boundary lengths, and garbage in
+# masked slots — every case checked against the jnp oracle
+PA_ADV_CASES = [
+    # (B, Hq, Hkv, NP, pages_per_block, block_b)
+    (1, 1, 1, 1, 4, 4),     # B=1, MHA ratio 1, single page
+    (2, 4, 1, 5, 4, 4),     # GQA 4, NP not a multiple of pages_per_block
+    (3, 8, 1, 3, 2, 2),     # GQA 8, odd page count, B not multiple of blk_b
+    (5, 8, 2, 7, 4, 2),     # odd B, NP=7 vs ppb=4 (partial last burst)
+    (2, 8, 8, 2, 1, 1),     # ratio 1 with many heads, degenerate blocking
+]
+
+
+@pytest.mark.parametrize(
+    "case", PA_ADV_CASES, ids=[str(c) for c in PA_ADV_CASES]
+)
+def test_paged_attention_adversarial_parity(case):
+    B, Hq, Hkv, NP, ppb, bb = case
+    D, T = 16, 4
+    P = B * NP + 2
+    q = _rand((B, Hq, D))
+    kp = _rand((P, T, Hkv, D))
+    vp = _rand((P, T, Hkv, D))
+    table = jnp.asarray(
+        RNG.permutation(P)[: B * NP].reshape(B, NP), jnp.int32
+    )
+    # boundary lengths: 0, 1, exactly one page, exact page multiple, full
+    edge = [0, 1, T, min(2 * T, NP * T), NP * T]
+    lengths = jnp.asarray((edge * ((B + 4) // 5))[:B], jnp.int32)
+    got = ops.paged_attention(
+        q, kp, vp, table, lengths, impl="pallas",
+        pages_per_block=ppb, block_b=bb,
+    )
+    want = ref.paged_attention(q, kp, vp, table, lengths)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=2e-6, rtol=2e-6
+    )
+    # a row at length 0 attends to nothing: output must be exactly zero
+    zero_rows = np.asarray(lengths) == 0
+    if zero_rows.any():
+        assert (np.asarray(got)[zero_rows] == 0).all()
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_paged_attention_nan_in_masked_slots(impl):
+    """NaN/Inf garbage behind ``lengths`` and in padded table slots must
+    never reach the output (0 * NaN = NaN, so masking scores alone is not
+    enough — the kernel has to zero V at masked positions too)."""
+    B, Hq, Hkv, D, T, NP = 2, 4, 2, 16, 4, 3
+    P = 8
+    q = _rand((B, Hq, D))
+    kp = np.asarray(_rand((P, T, Hkv, D))).copy()
+    vp = np.asarray(_rand((P, T, Hkv, D))).copy()
+    table = np.asarray([[0, 1, 2], [3, 4, 5]], np.int32)
+    lengths = jnp.asarray([5, 9], jnp.int32)
+    # poison everything past the live prefix: tail of the partial page and
+    # the fully-dead pages (6, 7 stay clean as the pool's free pages)
+    kp[2], vp[2] = np.nan, np.inf     # dead page of row 0
+    kp[1, 1:], vp[1, 1:] = np.inf, np.nan  # masked tail of row 0's page 1
+    kp[5, 1:], vp[5, 1:] = np.nan, np.nan  # masked tail of row 1's page 5
+    clean = ops.paged_attention(
+        jnp.asarray(q),
+        jnp.asarray(np.nan_to_num(kp, nan=0.0, posinf=0.0, neginf=0.0)),
+        jnp.asarray(np.nan_to_num(vp, nan=0.0, posinf=0.0, neginf=0.0)),
+        jnp.asarray(table), lengths, impl=impl,
+    )
+    got = ops.paged_attention(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+        jnp.asarray(table), lengths, impl=impl,
+    )
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(clean), atol=1e-6, rtol=1e-6
+    )
+
+
 # --------------------------------------------------------------------------- #
 # MoE router
 # --------------------------------------------------------------------------- #

@@ -778,3 +778,47 @@ def test_chunked_attention_matches_ref(b, hq, g, s, dh, window, seed):
         np.asarray(got), np.asarray(jnp.moveaxis(want, 1, 2)),
         atol=2e-5, rtol=2e-5,
     )
+
+
+# --------------------------------------------------------------------------- #
+# paged-attention DMA blocking is a pure perf knob
+# --------------------------------------------------------------------------- #
+SET_PA = settings(max_examples=8, deadline=None)  # interpret mode is slow
+
+
+@SET_PA
+@given(
+    b=st.integers(1, 5),
+    hq=st.sampled_from([2, 4, 8]),
+    g=st.sampled_from([1, 2]),
+    np_=st.integers(1, 5),
+    ppb=st.sampled_from([1, 2, 4]),
+    bb=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_paged_attention_bitexact_across_blocking(b, hq, g, np_, ppb, bb, seed):
+    """``pages_per_block``/``block_b`` tune the kernel's DMA burst shape
+    only: any setting must produce BIT-identical output to the default
+    (the serving stack retunes them per batch shape, so a single ULP of
+    drift would break the preemption replay's exact-token assertion)."""
+    from repro.kernels import ops
+
+    hkv = max(1, hq // g)
+    d, t = 8, 4
+    rng = np.random.default_rng(seed)
+    pool_pages = b * np_ + 1
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(pool_pages, t, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(pool_pages, t, hkv, d)), jnp.float32)
+    table = jnp.asarray(
+        rng.integers(0, pool_pages, size=(b, np_)), jnp.int32
+    )
+    lengths = jnp.asarray(rng.integers(0, np_ * t + 1, size=(b,)), jnp.int32)
+    base = np.asarray(ops.paged_attention(
+        q, kp, vp, table, lengths, impl="pallas"
+    ))
+    got = np.asarray(ops.paged_attention(
+        q, kp, vp, table, lengths, impl="pallas",
+        pages_per_block=ppb, block_b=bb,
+    ))
+    assert got.tobytes() == base.tobytes()

@@ -473,6 +473,86 @@ def test_paged_server_token_parity_and_pool_drain():
     pool.check_pool(paged.store.state)
 
 
+def test_pooled_decode_server_runs_only_the_paged_path(monkeypatch):
+    """The disagg decode server (:class:`PooledDecodeServer`) decodes
+    through ``Model.decode_step_paged`` exclusively — dense
+    ``decode_step`` is never called — and its tokens match the dense
+    oracle exactly."""
+    from repro.launch.serve import PooledDecodeServer, Request, Server
+
+    cfg, model, ctx = _smoke_model()
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    cache_len, pt = 32, 8
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, int(n)).tolist()
+               for n in (11, 7, 14)]
+    max_new = [5, 6, 4]
+
+    # dense oracle first, with the unpatched model
+    dense = Server(model, ctx, params, 2, cache_len)
+    for rid, (p, m) in enumerate(zip(prompts, max_new)):
+        dense.submit(Request(rid=rid, prompt=p, max_new=m))
+    dense.run_until_drained()
+    want = {r.rid: r.out for r in dense.finished}
+
+    calls = {"paged": 0, "dense": 0}
+    orig_paged, orig_dense = model.decode_step_paged, model.decode_step
+
+    def spy_paged(*a, **k):
+        calls["paged"] += 1
+        return orig_paged(*a, **k)
+
+    def spy_dense(*a, **k):
+        calls["dense"] += 1
+        return orig_dense(*a, **k)
+
+    monkeypatch.setattr(model, "decode_step_paged", spy_paged)
+    monkeypatch.setattr(model, "decode_step", spy_dense)
+
+    layout = pool.PagedLayout.from_struct(
+        model.kv_block_struct(ctx, prompt_len=8, cache_len=cache_len),
+        cache_len=cache_len, page_tokens=pt,
+    )
+    store = pool.PagedKVStore(layout, n_pages=16)
+    server = PooledDecodeServer(
+        model, ctx, params, 2, cache_len, store=store
+    )
+    # play the cluster: prefill each prompt, put its pages into the pool
+    # shard, bind the decode row by rid (no dense cache row anywhere)
+    pending = []
+    for rid, (p, m) in enumerate(zip(prompts, max_new)):
+        toks = jnp.asarray(p, jnp.int32)[None]
+        logits, caches = model.prefill(
+            params, ctx, {"inputs": toks}, cache_len=cache_len
+        )
+        t0 = int(np.argmax(np.asarray(logits)[0]))
+        pages = np.asarray(layout.flatten(caches))
+        pending.append(
+            (Request(rid=rid, prompt=p, max_new=m), t0, len(p), pages)
+        )
+    pending_later = None
+    for req, t0, position, pages in pending:
+        if server.admit_paged(req, t0, position):
+            store.admit(req.rid, req.prompt, pages)
+        else:
+            pending_later = (req, t0, position, pages)
+    for _ in range(200):
+        if server.step() == 0:
+            # a decode row freed up: bind the queued third request
+            if pending_later is not None:
+                req, t0, position, pages = pending_later
+                assert server.admit_paged(req, t0, position)
+                store.admit(req.rid, req.prompt, pages)
+                pending_later = None
+                continue
+            break
+    got = {r.rid: r.out for r in server.finished}
+    assert got == want
+    assert calls["paged"] >= 1        # decode went through the paged path
+    assert calls["dense"] == 0        # dense decode is only the oracle
+    assert server.paged_decode_steps >= max(max_new)
+
+
 # --------------------------------------------------------------------------- #
 # tiered KV memory: vectored put, swap round trip, lazy pool, scheduler
 # --------------------------------------------------------------------------- #
