@@ -1,21 +1,28 @@
-"""Serving-perf guard over the ``BENCH_serve.json`` artifact.
+"""Serving-perf gate over the ``BENCH_serve.json`` artifact.
 
-Parses the serving bench rows and flags the two regressions the paged
+Parses the serving bench rows and flags the regressions the paged
 decode rework is specifically not allowed to reintroduce:
 
 - ``serve_paged_decode`` slower than ``serve_dense_decode`` (the paged
-  pool must not tax the decode hot path), and
+  pool must not tax the decode hot path),
 - ``paged_fetch_overlap`` gaining nothing over blocking gets
   (``overlap_gap <= 1.0``) — the split-phase prefetch would be dead
-  weight.
+  weight, and
+- the tensor-parallel decode group losing to a single rank at the same
+  per-rank byte budget (``serve_tp_decode_tp2`` <= ``serve_tp_decode_tp1``
+  rank-concurrent tok/s), when the TP section is present in the artifact.
 
-Warnings go to stdout and, when ``$GITHUB_STEP_SUMMARY`` is set, to the
-workflow run's summary page.  Exit code is 0 on warnings (perf noise on
-shared CI runners must not gate merges) and 2 only when the artifact is
-missing or malformed.
+Findings go to stdout and, when ``$GITHUB_STEP_SUMMARY`` is set, to the
+workflow run's summary page.  By default any finding FAILS the check
+(exit 1): the serving benches run single-process on a pinned smoke
+config, so these orderings are stable, not noise.  Nightly/scheduled
+runs on shared runners can pass ``--warn-only`` to keep the old
+advisory behaviour (exit 0 on findings).  Exit 2 means the artifact is
+missing or malformed either way.
 
-Usage: ``python benchmarks/check_serve_perf.py [BENCH_serve.json]``
+Usage: ``python benchmarks/check_serve_perf.py [--warn-only] [BENCH_serve.json]``
 """
+import argparse
 import json
 import os
 import sys
@@ -54,34 +61,67 @@ def check(rows):
         warnings.append(
             "missing paged_fetch_overlap row (overlap bench skipped?)"
         )
+
+    # TP section rides the same artifact but is optional (older artifacts
+    # predate it) — only gate the ordering when both rows are present.
+    tp1 = by_name.get("serve_tp_decode_tp1")
+    tp2 = by_name.get("serve_tp_decode_tp2")
+    if tp1 and tp2:
+        t1, t2 = tp1.get("tok_per_s", 0.0), tp2.get("tok_per_s", 0.0)
+        if t2 <= t1:
+            warnings.append(
+                f"tp=2 decode group does not beat the tp=1 rank at the "
+                f"same byte budget: {t2:.1f} tok/s vs {t1:.1f} tok/s "
+                f"(head-sharded pages fit ~2x the pages, so the "
+                f"weights-bound decode should run ~2x the batch)"
+            )
     return warnings
 
 
 def main(argv):
-    path = argv[1] if len(argv) > 1 else "BENCH_serve.json"
+    ap = argparse.ArgumentParser(
+        prog="check_serve_perf",
+        description="gate CI on the BENCH_serve.json serving-perf rows",
+    )
+    ap.add_argument(
+        "--warn-only", action="store_true",
+        help="report findings but exit 0 (nightly runs on shared runners)",
+    )
+    ap.add_argument(
+        "path", nargs="?", default="BENCH_serve.json",
+        help="bench artifact to check (default: BENCH_serve.json)",
+    )
+    args = ap.parse_args(argv[1:])
     try:
-        with open(path) as f:
+        with open(args.path) as f:
             artifact = json.load(f)
         rows = artifact["rows"]
     except (OSError, KeyError, ValueError) as e:
-        print(f"check_serve_perf: cannot read {path}: {e}", file=sys.stderr)
+        print(
+            f"check_serve_perf: cannot read {args.path}: {e}",
+            file=sys.stderr,
+        )
         return 2
 
     warnings = check(rows)
     summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
     lines = []
     if warnings:
-        lines.append("### :warning: serving perf warnings")
+        head = "warning" if args.warn_only else "x"
+        lines.append(f"### :{head}: serving perf regressions")
         lines += [f"- {w}" for w in warnings]
     else:
         lines.append(
-            "### serving perf OK — paged decode >= dense, overlap gap > 1.0x"
+            "### serving perf OK — paged decode >= dense, overlap gap "
+            "> 1.0x, tp=2 > tp=1"
         )
     for line in lines:
         print(line)
     if summary_path:
         with open(summary_path, "a") as f:
             f.write("\n".join(lines) + "\n")
+    if warnings and not args.warn_only:
+        return 1
     return 0
 
 

@@ -18,6 +18,7 @@ if __name__ == "__main__":
     )
 
 import argparse
+import json
 import time
 
 import jax
@@ -29,8 +30,28 @@ from _report import make_report, new_result, write_artifact
 RESULT = new_result()
 report = make_report(RESULT)
 
+SECTIONS = ("train", "serve", "disagg", "paged", "oversub", "tp")
 
-def main(json_path: str | None = None) -> None:
+
+def merge_artifact(result: dict, path: str) -> None:
+    """Write ``result``'s rows into an existing artifact, replacing rows
+    of the same name and keeping the rest — how a single-section run
+    (``--sections tp``) refreshes its slice of ``BENCH_serve.json``
+    without discarding the other sections' measurements."""
+    try:
+        with open(path) as f:
+            artifact = json.load(f)
+    except (OSError, ValueError):
+        artifact = new_result()
+    fresh = {r["name"] for r in result["rows"]}
+    artifact["rows"] = [
+        r for r in artifact.get("rows", []) if r.get("name") not in fresh
+    ] + result["rows"]
+    write_artifact(artifact, path)
+
+
+def main(json_path: str | None = None,
+         sections: tuple | None = None) -> None:
     from repro.configs.registry import SMOKE
     from repro.data.synthetic import SyntheticLM
     from repro.models.build import build_model
@@ -40,7 +61,11 @@ def main(json_path: str | None = None) -> None:
 
     ctx = RunCtx(mesh=None, remat="none")
 
-    for arch in ("qwen3-4b", "falcon-mamba-7b", "arctic-480b"):
+    def want(s: str) -> bool:
+        return sections is None or s in sections
+
+    for arch in () if not want("train") else (
+            "qwen3-4b", "falcon-mamba-7b", "arctic-480b"):
         cfg = SMOKE[arch]
         model = build_model(cfg)
         tr = Trainer(model, ctx, adamw.AdamWConfig(lr=1e-3),
@@ -67,24 +92,27 @@ def main(json_path: str | None = None) -> None:
     cfg = SMOKE["qwen3-4b"]
     model = build_model(cfg)
     params, _ = model.init(ctx, jax.random.PRNGKey(0))
-    server = Server(model, ctx, params, batch_size=8, cache_len=96)
-    rng = np.random.default_rng(0)
-    for rid in range(16):
-        server.submit(Request(rid=rid,
-                              prompt=rng.integers(0, cfg.vocab, 16).tolist(),
-                              max_new=16))
-    stats = server.run_until_drained()
-    us = stats["wall_s"] / max(stats["decoded_tokens"], 1) * 1e6
-    report("serve_decode_qwen3", us, f"{stats['tok_per_s']:.1f}tok/s",
-           op="serve_decode", tok_per_s=round(stats["tok_per_s"], 1),
-           p50_latency_s=round(stats["p50_latency_s"], 4))
-    report("serve_p50_ttft", stats["p50_ttft_s"] * 1e6,
-           f"{stats['requests']}req", op="serve_ttft",
-           requests=stats["requests"])
+    if want("serve"):
+        server = Server(model, ctx, params, batch_size=8, cache_len=96)
+        rng = np.random.default_rng(0)
+        for rid in range(16):
+            server.submit(Request(
+                rid=rid, prompt=rng.integers(0, cfg.vocab, 16).tolist(),
+                max_new=16))
+        stats = server.run_until_drained()
+        us = stats["wall_s"] / max(stats["decoded_tokens"], 1) * 1e6
+        report("serve_decode_qwen3", us, f"{stats['tok_per_s']:.1f}tok/s",
+               op="serve_decode", tok_per_s=round(stats["tok_per_s"], 1),
+               p50_latency_s=round(stats["p50_latency_s"], 4))
+        report("serve_p50_ttft", stats["p50_ttft_s"] * 1e6,
+               f"{stats['requests']}req", op="serve_ttft",
+               requests=stats["requests"])
 
     # ---- disaggregated serving: prefill pool -> KV put -> decode pool ----- #
     # (only when the forced host device count allows >= 2 ranks)
-    if jax.device_count() >= 4:
+    if not want("disagg"):
+        pass
+    elif jax.device_count() >= 4:
         from repro.serving.disagg import DisaggCluster
 
         cluster = DisaggCluster(
@@ -117,13 +145,22 @@ def main(json_path: str | None = None) -> None:
         print("serve_disagg skipped: needs >= 4 host devices")
 
     # ---- paged KV pool: paged vs dense decode, page traffic, overlap ------ #
-    paged_sections(report)
+    if want("paged"):
+        paged_sections(report)
 
     # ---- tiered KV memory: oversubscription + swap/recompute crossover ---- #
-    oversub_sections(report)
+    if want("oversub"):
+        oversub_sections(report)
+
+    # ---- tensor-parallel decode groups: memory aggregation win ------------ #
+    if want("tp"):
+        tp_sections(report)
 
     if json_path:
-        write_artifact(RESULT, json_path)
+        if sections is None:
+            write_artifact(RESULT, json_path)
+        else:
+            merge_artifact(RESULT, json_path)
     print("TRAIN_SERVE_BENCH_DONE")
 
 
@@ -328,6 +365,237 @@ def oversub_sections(report) -> None:
     )
 
 
+def tp_sections(report) -> None:
+    """The tensor-parallel-decode section of ``BENCH_serve.json``.
+
+    Run on a scaled-up smoke config (~8M params) where the decode step
+    is weights-bound, the regime the >= 8B configs live in: step cost is
+    nearly batch-independent, so decode throughput is set by how many
+    requests run CONCURRENTLY.  That is what the TP group buys on equal
+    hardware — not FLOPs (every member computes 1/tp of each step, so
+    aggregate compute is unchanged) but AGGREGATE MEMORY: at a fixed
+    per-rank pool byte budget, head-sharded pages are ~1/tp the bytes,
+    the group fits ~tp x the pages, and the decode batch scales with
+    them.  Here tp=1's budget caps the batch at 4 while the tp=2
+    group's aggregated pool runs batch 8.
+
+    Every ``serve_tp_decode_tp{1,2,4}`` row carries two timings:
+
+    - ``us_serialized``: the raw wall of the real shard_map step on this
+      host — every rank's shard compute AND every all-reduce hop
+      serialized back-to-back onto the local cores (this host simulates
+      the group's devices on shared cores, so what it clocks is the
+      group's total WORK, not its latency).
+    - ``us`` (headline, feeds ``tok_per_s``): the group's RANK-CONCURRENT
+      decode-step latency, ``us_serialized / tp`` — un-serializing what
+      the ranks run simultaneously.  Cross-checked against
+      ``us_rank_compute``, one rank's OWN step program (its head shard of
+      the weights and pool, collectives elided) clocked alone: a hard
+      lower bound on any rank's concurrent step, asserted to stay below
+      the headline so the division never claims time the measured
+      single-rank program disproves.
+
+    Token parity vs an unsharded reference server is asserted from REAL
+    ``TPPagedServer`` runs (actual planned all-reduces on the wire, all
+    preemption machinery live) for every tp before any timing is
+    reported.  tp=4 runs a ``n_kv_heads=4`` variant (4 does not divide
+    the base config's 2 KV heads) against its own reference — its row
+    shows the trend; only tp2/tp1 (same config) is the gated
+    ``serve_tp_speedup`` ratio.
+    """
+    import dataclasses
+
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.registry import SMOKE
+    from repro.core import sched as core_sched
+    from repro.launch.serve import (PagedServer, Request, TPPagedServer,
+                                    _paged_decode_views_fn,
+                                    _tp_paged_decode_fn)
+    from repro.models.build import build_model
+    from repro.parallel import tp as tp_lib
+    from repro.parallel.ctx import RunCtx
+    from repro.serving.pool import PagedLayout
+
+    ctx = RunCtx(mesh=None, remat="none")
+    # weights-bound decode: scale the 405B smoke shape up until weight
+    # streaming dominates per-step dispatch (~8M params, 31MB f32)
+    base = SMOKE["llama3-405b"]
+    base = dataclasses.replace(base, n_layers=8, d_model=256, d_ff=1024,
+                               head_dim=32)
+    cache_len, pt, max_batch = 64, 8, 8
+    n_pages = cache_len // pt
+    costs = core_sched.load_costs("BENCH_gas.json")
+
+    def burst(cfg):
+        rng = np.random.default_rng(17)
+        reqs = []
+        for rid in range(12):
+            plen = int(rng.integers(10, 24))
+            reqs.append(Request(
+                rid=rid, prompt=rng.integers(0, cfg.vocab, plen).tolist(),
+                max_new=min(int(rng.integers(28, 38)), cache_len - plen),
+            ))
+        return reqs
+
+    def run(server, cfg):
+        for req in burst(cfg):
+            server.submit(req)
+        stats = server.run_until_drained(max_ticks=4000)
+        return {r.rid: list(r.out) for r in server.finished}, stats
+
+    def timed_step(call, state, iters=12):
+        """Per-step wall of ``call(state) -> (logits, state)``; the state
+        (the pool views — donated by the real step programs) is threaded
+        through so every iteration runs on a live buffer."""
+        logits, state = call(state)  # compile + warm
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            logits, state = call(state)
+        jax.block_until_ready(logits)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    # the per-rank byte budget: one rank's pool barely fits batch 4 of
+    # full pages; the tp=2 group's half-size pages fit batch 8
+    base_layout = PagedLayout.from_struct(
+        build_model(base).kv_block_struct(ctx, prompt_len=4,
+                                          cache_len=cache_len),
+        cache_len=cache_len, page_tokens=pt,
+    )
+    budget_bytes = (4 * n_pages + 1) * base_layout.page_bytes
+
+    models = {}
+
+    def get_model(cfg):
+        if cfg not in models:
+            model = build_model(cfg)
+            params, _ = model.init(ctx, jax.random.PRNGKey(0))
+            models[cfg] = (model, params, None)
+        return models[cfg]
+
+    # pass 1 — step timing at the budget-planned batch, in a clean
+    # process state: the serving runs below allocate large pools and
+    # churn donated buffers, which perturbs step walls clocked after
+    setups = {}
+    timing = {}
+    for tp in (1, 2, 4):
+        if jax.device_count() < tp:
+            print(f"serve_tp_decode_tp{tp} skipped: needs >= {tp} devices")
+            continue
+        cfg = base if tp <= 2 else dataclasses.replace(base, n_kv_heads=4)
+        model, params, _ = get_model(cfg)
+        layout = PagedLayout.from_struct(
+            model.kv_block_struct(ctx, prompt_len=4, cache_len=cache_len),
+            cache_len=cache_len, page_tokens=pt,
+        )
+        shard_layout, _cols = layout.shard_heads(tp, cfg.n_kv_heads)
+        n_pool = max(n_pages + 1, budget_bytes // shard_layout.page_bytes)
+        batch = max(1, min(max_batch, n_pool // n_pages))
+        setups[tp] = (cfg, layout, shard_layout, n_pool, batch)
+        tok = jnp.zeros((batch, 1), jnp.int32)
+        pos = jnp.full((batch,), 8, jnp.int32)
+        tab = jnp.zeros((batch, n_pages), jnp.int32)
+        if tp == 1:
+            fn = _paged_decode_views_fn(model, ctx, layout)
+            views0 = layout.decode_views(
+                jnp.zeros((n_pool + 1, layout.page_elems), jnp.float32))
+            serialized = compute = timed_step(
+                lambda v: fn(params, tok, pos, v, tab), views0)
+        else:
+            # the REAL planned-collective shard_map program the TP
+            # server decodes with, clocked on this host
+            mesh = Mesh(np.array(jax.devices()[:tp]), ("tp",))
+            sharding = NamedSharding(mesh, P("tp"))
+            sparams = jax.device_put(
+                tp_lib.stack_shards(params, tp), sharding)
+            fn = _tp_paged_decode_fn(model, ctx, shard_layout, tp, "xla",
+                                     mesh)
+            dev0 = jax.device_put(
+                jnp.zeros((tp, n_pool + 1, shard_layout.page_elems),
+                          jnp.float32), sharding)
+            serialized = timed_step(
+                lambda v: fn(sparams, tok, pos, v, tab), dev0)
+            # one rank's OWN step program (its head shard of the weights
+            # and pool, collectives elided), clocked alone
+            group = tp_lib.TPGroup(tp, lambda x: x)
+            p0 = jax.device_put(tp_lib.shard_decode_params(params, tp, 0))
+
+            @jax.jit
+            def rank_step(p, token, position, views, tables=tab):
+                return model.decode_step_paged(
+                    p, ctx, token, position, views, tables, tp=group)
+
+            sv0 = shard_layout.decode_views(
+                jnp.zeros((n_pool + 1, shard_layout.page_elems),
+                          jnp.float32))
+            compute = timed_step(
+                lambda v: rank_step(p0, tok, pos, v), sv0)
+        timing[tp] = (serialized, compute)
+
+    # pass 2 — real serving runs: actual planned all-reduces on the
+    # wire, all preemption machinery live, token parity asserted
+    tok_s = {}
+    for tp, (cfg, layout, shard_layout, n_pool, batch) in setups.items():
+        model, params, ref_toks = get_model(cfg)
+        if ref_toks is None:
+            ref = PagedServer(model, ctx, params, batch, cache_len,
+                              page_tokens=pt)
+            ref_toks, _ = run(ref, cfg)
+            models[cfg] = (model, params, ref_toks)
+        kw = dict(page_tokens=pt, n_pool_pages=n_pool)
+        if tp == 1:
+            server = PagedServer(model, ctx, params, batch, cache_len, **kw)
+        else:
+            server = TPPagedServer(model, ctx, params, batch, cache_len,
+                                   tp=tp, tp_backend="xla", **kw)
+        toks, stats = run(server, cfg)
+        assert toks == ref_toks, f"tp={tp} token parity failed"
+
+        serialized, compute = timing[tp]
+        concurrent = serialized / tp
+        if tp == 1:
+            ar_us = 0.0
+            ar_note = "none (single rank)"
+        else:
+            assert compute <= concurrent * 1.05, (
+                f"tp={tp}: one rank's measured step ({compute:.0f}us) "
+                f"exceeds the un-serialized group step ({concurrent:.0f}us)"
+            )
+            # 2 partial-sum all-reduces per layer (attention wo + mlp
+            # w2), (batch, 1, d_model) f32 payloads; their serialized
+            # in-program cost is the wall the shard compute can't explain
+            ar_us = max(0.0, serialized - tp * compute)
+            plan = core_sched.plan_collective(
+                "all_reduce", nbytes=batch * cfg.d_model * 4,
+                n_nodes=tp, costs=costs)
+            n_ar = 2 * cfg.n_layers
+            ar_note = (f"{n_ar} x {plan.algorithm}, "
+                       f"~{ar_us / n_ar:.0f}us each serialized in-program")
+        tps = batch / concurrent * 1e6
+        tok_s[tp] = tps
+        report(f"serve_tp_decode_tp{tp}", concurrent,
+               f"{tps:.0f}tok/s @batch{batch}", op="serve_tp",
+               tp=tp, tok_per_s=round(tps, 1), batch=batch,
+               us_serialized=round(serialized, 1),
+               us_rank_compute=round(compute, 1),
+               tok_per_s_serialized=round(batch / serialized * 1e6, 1),
+               serve_tok_per_s=round(stats["tok_per_s"], 1),
+               allreduce_us=round(ar_us, 1), allreduce_plan=ar_note,
+               pool_pages=n_pool,
+               shard_page_bytes=shard_layout.page_bytes,
+               budget_bytes=budget_bytes,
+               n_kv_heads=cfg.n_kv_heads)
+    if 1 in tok_s and 2 in tok_s:
+        speedup = tok_s[2] / max(tok_s[1], 1e-9)
+        report("serve_tp_speedup", speedup,
+               f"tp2 {tok_s[2]:.0f} vs tp1 {tok_s[1]:.0f} tok/s", unit="x",
+               op="serve_tp", tp_from=1, tp_to=2,
+               tok_per_s_tp1=round(tok_s[1], 1),
+               tok_per_s_tp2=round(tok_s[2], 1))
+
+
 def overlap_bench(report) -> None:
     """Measure the split-phase win of nonblocking page prefetch.
 
@@ -459,4 +727,16 @@ if __name__ == "__main__":
         metavar="PATH",
         help="write the machine-readable artifact (default: BENCH_serve.json)",
     )
-    main(json_path=ap.parse_args().json)
+    ap.add_argument(
+        "--sections", default=None, metavar="A,B,...",
+        help=f"run only these sections (of {','.join(SECTIONS)}) and MERGE "
+             "their rows into the --json artifact instead of rewriting it",
+    )
+    args = ap.parse_args()
+    picked = None
+    if args.sections is not None:
+        picked = tuple(s.strip() for s in args.sections.split(",") if s.strip())
+        unknown = [s for s in picked if s not in SECTIONS]
+        if unknown:
+            ap.error(f"unknown sections {unknown}; choose from {SECTIONS}")
+    main(json_path=args.json, sections=picked)

@@ -104,22 +104,33 @@ DEFAULT_DEPTH = 2  # double-buffered command FIFO
 
 def load_costs(path: str) -> Dict[str, EngineCost]:
     """Read per-engine constants from a ``BENCH_gas.json`` artifact
-    (``engine_costs`` key); unknown engines fall back to defaults."""
+    (``engine_costs`` key); unknown engines fall back to defaults.
+
+    When the artifact also carries measured *pair* costs (an
+    ``engine_pair_costs`` key with ``"a->b"`` entries — the edge cost of
+    a heterogeneous hop, e.g. an xla rank pushing into a gascore rank's
+    FIFO), those land in the same table under their ``"a->b"`` keys and
+    :func:`cost_of` prefers them for mixed :class:`~repro.core.engine.
+    EngineMap` groups.  Pair entries are strictly optional: a missing or
+    partial table degrades to the analytic worst-member α/β model, never
+    to a lookup error.
+    """
     costs = dict(DEFAULT_COSTS)
     try:
         with open(path) as f:
             data = json.load(f)
     except (OSError, ValueError):
         return costs
-    for name, c in (data.get("engine_costs") or {}).items():
-        try:
-            costs[name] = EngineCost(
-                float(c["alpha_us"]),
-                float(c["beta_us_per_kib"]),
-                float(c.get("gamma_us_per_kib", 0.05)),
-            )
-        except (KeyError, TypeError, ValueError):
-            continue
+    for section in ("engine_costs", "engine_pair_costs"):
+        for name, c in (data.get(section) or {}).items():
+            try:
+                costs[name] = EngineCost(
+                    float(c["alpha_us"]),
+                    float(c["beta_us_per_kib"]),
+                    float(c.get("gamma_us_per_kib", 0.05)),
+                )
+            except (KeyError, TypeError, ValueError):
+                continue
     return costs
 
 
@@ -128,17 +139,40 @@ def cost_of(
     costs: Optional[Dict[str, EngineCost]] = None,
 ) -> EngineCost:
     """Planning constants for an engine; a heterogeneous map plans against
-    the worst member (the ring is paced by its slowest edge)."""
+    the worst member (the ring is paced by its slowest edge).
+
+    If the cost table carries measured pair entries (``"a->b"`` keys from
+    ``load_costs``), a mixed map plans against the worst measured *edge*
+    between its member backends instead of the analytic per-engine worst.
+    Missing pair entries fall back to the analytic model via ``.get`` —
+    never a KeyError, so a partially-measured ``BENCH_gas.json`` still
+    plans every group.
+    """
     table = costs or DEFAULT_COSTS
     fallback = table.get("xla") or next(iter(table.values()))
     if engine is None:
         return fallback
     if isinstance(engine, EngineMap):
+        members = sorted(set(engine.backends))
         acc = None
-        for b in set(engine.backends):
+        for b in members:
             c = table.get(b, fallback)
             acc = c if acc is None else acc.worst(c)
-        return acc or fallback
+        analytic = acc or fallback
+        if len(members) > 1:
+            pairs = [
+                table.get(f"{a}->{b}")
+                for a in members
+                for b in members
+                if a != b
+            ]
+            measured = [p for p in pairs if p is not None]
+            if measured and len(measured) == len(pairs):
+                worst = measured[0]
+                for p in measured[1:]:
+                    worst = worst.worst(p)
+                return worst
+        return analytic
     return table.get(engine.name, fallback)
 
 

@@ -28,6 +28,7 @@ __all__ = [
     "mesh_axes",
     "node_backends",
     "serve_roles",
+    "decode_groups",
     "role_backends",
 ]
 
@@ -87,7 +88,7 @@ def node_backends(
 
 
 def serve_roles(
-    n_prefill: int, n_decode: int, n_memory: int = 0
+    n_prefill: int, n_decode: int, n_memory: int = 0, tp: int = 1
 ) -> Tuple[str, ...]:
     """Per-rank roles of a disaggregated serving ring: the first
     ``n_prefill`` ranks are the prefill pool, then the decode pool, then
@@ -100,16 +101,43 @@ def serve_roles(
     dispatch targets, the KV handoff permutation, swap destinations, and
     segment slot ownership from rank order alone, so every node agrees on
     it without any exchange (the SPMD analogue of a static cluster map).
+
+    ``tp`` carves the decode pool into tensor-parallel groups of ``tp``
+    consecutive ranks (see :func:`decode_groups`): it must divide
+    ``n_decode``, and every member of a group keeps the ``"decode"``
+    role — group structure is a decode-pool refinement, not a new role.
     """
     if n_prefill < 1 or n_decode < 1 or n_memory < 0:
         raise ValueError(
             f"need at least 1 prefill and 1 decode rank (memory >= 0), got "
             f"{n_prefill}/{n_decode}/{n_memory}"
         )
+    if tp < 1 or n_decode % tp:
+        raise ValueError(
+            f"tp={tp} must divide the decode pool (n_decode={n_decode})"
+        )
     return (
         ("prefill",) * n_prefill
         + ("decode",) * n_decode
         + ("memory",) * n_memory
+    )
+
+
+def decode_groups(
+    n_prefill: int, n_decode: int, tp: int = 1
+) -> Tuple[Tuple[int, ...], ...]:
+    """The decode pool carved into TP groups of ``tp`` consecutive ranks.
+
+    Group ``g`` is ranks ``[n_prefill + g*tp, n_prefill + (g+1)*tp)``;
+    its first member is the *group leader* — the rank whose pool shard
+    backs the group's page allocator and which receives the control-plane
+    AMs (KV-ready, acks).  Consecutive placement keeps the per-step
+    all-reduce on ring-adjacent edges.
+    """
+    serve_roles(n_prefill, n_decode, tp=tp)  # validate
+    return tuple(
+        tuple(range(n_prefill + g * tp, n_prefill + (g + 1) * tp))
+        for g in range(n_decode // tp)
     )
 
 

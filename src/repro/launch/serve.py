@@ -718,6 +718,19 @@ class PagedServer(Server):
         for i in live:
             row = self.store.device_table(self.active[i].rid, absent=P)
             tables[i] = row[: self._table_width]
+        logits = self._decode_via_tables(tables)
+        for i in live:
+            if i not in self.replaying:  # replays are not new generation
+                self.scheduler.on_step(self.active[i].rid)
+        self._advance(live, logits)
+        return len(live)
+
+    def _decode_via_tables(self, tables: np.ndarray) -> np.ndarray:
+        """Upload the pool when host-resident, flush queued page patches,
+        run the fused paged decode; returns host logits.  The device-pool
+        representation is this method's private affair — the TP variant
+        swaps in a head-sharded stacked carrier and a ``shard_map``-ped
+        step without touching the scheduler loop above."""
         if self._dev_views is None:  # (re-)upload the mutated host mirror
             self._dev_views = self.layout.decode_views(self.jnp.asarray(
                 np.concatenate(
@@ -734,11 +747,7 @@ class PagedServer(Server):
             self._dev_views,
             self.jnp.asarray(tables),
         )
-        for i in live:
-            if i not in self.replaying:  # replays are not new generation
-                self.scheduler.on_step(self.active[i].rid)
-        self._advance(live, np.asarray(logits))
-        return len(live)
+        return np.asarray(logits)
 
     # ------------------------------------------------------------------ #
     def _post_decode(self, live: List[int], written: Dict[int, int]) -> None:
@@ -770,6 +779,179 @@ class PagedServer(Server):
         stats.update(self.tier.stats())
         stats.update(self.scheduler.stats())
         return stats
+
+
+def _tp_paged_decode_fn(model, ctx, shard_layout, tp: int, backend,
+                        mesh, costs=None):
+    """The tensor-parallel fused paged decode step: a ``shard_map`` over a
+    ``("tp",)`` mesh where every rank holds one head shard of the weights
+    and one head shard of the page pool, and each sub-block's partial sum
+    crosses the group through ``sched.all_reduce`` — the planned,
+    engine-aware collective (``backend`` may be a mixed spec like
+    ``"xla,gascore"``, planning against the worst member edge).  Logits
+    are replicated across the group (bit-identically: the 2-rank ring and
+    recursive-doubling schedules commute)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import sched as core_sched
+    from repro.core.engine import make_engine
+    from repro.parallel.tp import TPGroup
+
+    empty_row = np.asarray(shard_layout.empty_page_row())
+
+    def body(params, token, positions, mem, tables):
+        params = jax.tree_util.tree_map(lambda x: x[0], params)
+        mem = mem[0]
+        mem = mem.at[mem.shape[0] - 1].set(jnp.asarray(empty_row, mem.dtype))
+        engine = make_engine(backend, "tp", tp, interpret=ctx.interpret)
+        group = TPGroup(
+            tp, lambda x: core_sched.all_reduce(engine, x, costs=costs)
+        )
+        views = shard_layout.decode_views(mem)
+        logits, views = model.decode_step_paged(
+            params, ctx, token, positions, views, tables, tp=group
+        )
+        return logits, shard_layout.views_to_pool(views)[None]
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("tp"), P(), P(), P("tp"), P()),
+        out_specs=(P(), P("tp")),
+        check_vma=False,
+    )
+    return jax.jit(fn, donate_argnums=(3,))
+
+
+def _tp_pool_patch_fn():
+    """Stacked-carrier variant of :func:`_pool_patch_fn`: the pool is the
+    raw ``(tp, P+1, shard_page_elems)`` carrier (one head shard per
+    rank), rows arrive pre-sharded ``(tp, chunk, shard_page_elems)``."""
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def patch(pool, write_dst, rows, copy_src, copy_dst):
+        pool = pool.at[:, write_dst].set(rows)
+        pool = pool.at[:, copy_dst].set(pool[:, copy_src])
+        return pool
+
+    return patch
+
+
+class TPPagedServer(PagedServer):
+    """:class:`PagedServer` whose decode runs over a tensor-parallel group
+    of ``tp`` GAS ranks: attention heads and MLP columns sharded per rank
+    (``repro.parallel.tp``), each rank's device pool holding only its
+    heads' slice of every page (``PagedLayout.shard_heads``), one planned
+    all-reduce per sub-block inside the tick program.
+
+    Everything host-side is unchanged from the base class: the allocator,
+    page tables, prefix index, scheduler, tier, and the host ``mem``
+    mirror all stay in the FULL layout (pages are sharded by *bytes*, not
+    by id — every rank holds the same table).  Only the device residency
+    differs: ``_dev_views`` becomes the stacked ``(tp, P+1, shard_elems)``
+    carrier, patches pre-shard queued host rows through ``shard_cols``,
+    and ``_sync_host`` reassembles the shards bit-exactly.  Token streams
+    are identical to ``tp=1`` (asserted in tests and the bench section).
+    """
+
+    def __init__(self, model, ctx, params, batch_size: int, cache_len: int,
+                 tp: int = 2, tp_backend: str = "xla",
+                 sched_cost_table: Optional[Dict[str, Any]] = None, **kw):
+        super().__init__(model, ctx, params, batch_size, cache_len, **kw)
+        import jax
+        from jax.sharding import Mesh, NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel import tp as tp_lib
+
+        tp_lib.validate_tp(model.cfg, tp)
+        if jax.device_count() < tp:
+            raise ValueError(
+                f"tp={tp} needs {tp} devices, have {jax.device_count()} "
+                f"(set --xla_force_host_platform_device_count)"
+            )
+        self.tp = tp
+        self.shard_layout, self.shard_cols = self.layout.shard_heads(
+            tp, model.cfg.n_kv_heads
+        )
+        self._tp_mesh = Mesh(np.array(jax.devices()[:tp]), ("tp",))
+        self._tp_sharding = NamedSharding(self._tp_mesh, P("tp"))
+        self._stacked_params = jax.device_put(
+            tp_lib.stack_shards(params, tp), self._tp_sharding
+        )
+        self._decode_tp = _tp_paged_decode_fn(
+            model, ctx, self.shard_layout, tp, tp_backend, self._tp_mesh,
+            costs=sched_cost_table,
+        )
+        self._patch_tp = _tp_pool_patch_fn()
+
+    # -- device-pool representation overrides --------------------------- #
+    def _apply_pending(self) -> None:
+        jnp = self.jnp
+        Pn = self.store.state.n_pages  # scratch index pads the chunks
+        elems = self.shard_layout.page_elems
+        rows = list(self._pending_rows.items())
+        copies = list(self._pending_copies)
+        self._pending_rows.clear()
+        self._pending_copies.clear()
+        pad_idx = np.full((_PATCH_CHUNK,), Pn, np.int32)
+        pad_rows = np.zeros((self.tp, _PATCH_CHUNK, elems), np.float32)
+        while rows:
+            chunk, rows = rows[:_PATCH_CHUNK], rows[_PATCH_CHUNK:]
+            wd, wr = pad_idx.copy(), pad_rows.copy()
+            for j, (pg, row) in enumerate(chunk):
+                wd[j] = pg
+                wr[:, j] = row[self.shard_cols]  # pre-shard the full row
+            self._dev_views = self._patch_tp(
+                self._dev_views, jnp.asarray(wd), jnp.asarray(wr),
+                jnp.asarray(pad_idx), jnp.asarray(pad_idx),
+            )
+        while copies:
+            chunk, copies = copies[:_PATCH_CHUNK], copies[_PATCH_CHUNK:]
+            cs, cd = pad_idx.copy(), pad_idx.copy()
+            for j, (src, dst) in enumerate(chunk):
+                cs[j], cd[j] = src, dst
+            self._dev_views = self._patch_tp(
+                self._dev_views, pad_idx, pad_rows,
+                jnp.asarray(cs), jnp.asarray(cd),
+            )
+
+    def _sync_host(self) -> None:
+        if self._dev_views is None:
+            return
+        if self._pending_rows or self._pending_copies:
+            self._apply_pending()
+        Pn = self.store.state.n_pages
+        stacked = np.asarray(self._dev_views)  # (tp, P+1, shard_elems)
+        full = np.empty((Pn, self.layout.page_elems), np.float32)
+        for s in range(self.tp):
+            full[:, self.shard_cols[s]] = stacked[s, :Pn]
+        self.store.mem[:] = full
+        self._dev_views = None
+
+    def _decode_via_tables(self, tables: np.ndarray) -> np.ndarray:
+        jnp = self.jnp
+        if self._dev_views is None:  # upload, pre-sharded per rank
+            mem_cat = np.concatenate(
+                [self.store.mem, self.layout.empty_page_row()[None]], axis=0
+            )
+            stacked = np.stack([mem_cat[:, c] for c in self.shard_cols])
+            self._dev_views = self.jax.device_put(
+                jnp.asarray(stacked), self._tp_sharding
+            )
+        if self._pending_rows or self._pending_copies:
+            self._apply_pending()
+        logits, self._dev_views = self._decode_tp(
+            self._stacked_params,
+            jnp.asarray(self.last_token),
+            jnp.asarray(self.positions),
+            self._dev_views,
+            jnp.asarray(tables),
+        )
+        return np.asarray(logits)
 
 
 class PooledDecodeServer(Server):
@@ -874,6 +1056,17 @@ class PooledDecodeServer(Server):
                 # stalled: scatter into scratch, never a shared page
                 slot = int(self.positions[i]) // self.layout.page_tokens
                 tables[i, slot] = P
+        logits = self._decode_and_write(written, tables)
+        advanced = [i for i in live if i in written]
+        self._advance(advanced, logits)
+        return len(advanced)
+
+    def _decode_and_write(self, written: Dict[int, int],
+                          tables: np.ndarray) -> np.ndarray:
+        """Run the fused paged decode over the pool mirror and land this
+        tick's written pages back in it (plus the dirty set the cluster
+        replays after a transfer consume)."""
+        jnp = self.jnp
         mem = np.concatenate(
             [self.store.mem, self.layout.empty_page_row()[None]], axis=0
         )
@@ -893,9 +1086,76 @@ class PooledDecodeServer(Server):
             for pp, row in zip(pages, rows):
                 self.store.mem[pp] = row
                 self._dirty[pp] = row
-        advanced = [i for i in live if i in written]
-        self._advance(advanced, np.asarray(logits))
-        return len(advanced)
+        return np.asarray(logits)
+
+
+class TPPooledDecodeServer(PooledDecodeServer):
+    """One logical decode server for a tensor-parallel GROUP of cluster
+    ranks: the group's page-pool shard is striped across the members'
+    GASNet segments BY HEADS (member ``s`` holds every page's slice for
+    its heads — ``PagedLayout.shard_heads``), and each tick's decode runs
+    as a ``shard_map`` over the group's devices with one planned
+    all-reduce per sub-block (:func:`_tp_paged_decode_fn`).
+
+    The allocator, page tables, and request rows are group-level (one
+    logical server, one store); only page *payloads* are sharded.  The
+    cluster aliases ``shard_mems`` — a live, re-bound-per-consume list of
+    the members' pool-partition mirrors (entry 0 is ``store.mem``, the
+    leader's) — and ``drain_dirty`` hands back stacked ``(tp, elems)``
+    rows so the replay lands on every member mirror."""
+
+    def __init__(self, model, ctx, params, batch_size: int, cache_len: int,
+                 store, shard_mems: List[np.ndarray], tp: int,
+                 tp_backend: str = "xla", tp_mesh=None,
+                 costs: Optional[Dict[str, Any]] = None, eos_id: int = -1,
+                 greedy: bool = True, seed: int = 0, on_page_shortage=None):
+        super().__init__(model, ctx, params, batch_size, cache_len,
+                         store=store, eos_id=eos_id, greedy=greedy,
+                         seed=seed, on_page_shortage=on_page_shortage)
+        import jax
+        from jax.sharding import Mesh, NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel import tp as tp_lib
+
+        tp_lib.validate_tp(model.cfg, tp)
+        self.tp = tp
+        self.shard_mems = shard_mems  # cluster-owned, re-aliased in place
+        if tp_mesh is None:
+            tp_mesh = Mesh(np.array(jax.devices()[:tp]), ("tp",))
+        self._tp_sharding = NamedSharding(tp_mesh, P("tp"))
+        self._stacked_params = jax.device_put(
+            tp_lib.stack_shards(params, tp), self._tp_sharding
+        )
+        # self.layout is the SHARD layout (the store is built with it)
+        self._decode_tp = _tp_paged_decode_fn(
+            model, ctx, self.layout, tp, tp_backend, tp_mesh, costs=costs
+        )
+
+    def _decode_and_write(self, written: Dict[int, int],
+                          tables: np.ndarray) -> np.ndarray:
+        jnp = self.jnp
+        empty = np.asarray(self.layout.empty_page_row())
+        mem = np.stack([
+            np.concatenate([sm, empty[None]], axis=0)
+            for sm in self.shard_mems
+        ])
+        logits, newmem = self._decode_tp(
+            self._stacked_params,
+            jnp.asarray(self.last_token),
+            jnp.asarray(self.positions),
+            jnp.asarray(mem),
+            jnp.asarray(tables),
+        )
+        self.paged_decode_steps += 1
+        pages = sorted(set(written.values()))
+        if pages:
+            rows = np.asarray(newmem[:, np.asarray(pages, np.int32)])
+            for j, pp in enumerate(pages):
+                for s in range(self.tp):
+                    self.shard_mems[s][pp] = rows[s, j]
+                self._dirty[pp] = rows[:, j].copy()
+        return np.asarray(logits)
 
 
 def main() -> None:
@@ -935,15 +1195,25 @@ def main() -> None:
                          "request, prompt prefixes shared by page table")
     ap.add_argument("--page-tokens", type=int, default=8,
                     help="tokens per KV page (must divide --cache-len)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel group size: decode shards "
+                         "attention heads / MLP columns over tp GAS ranks "
+                         "with a planned all-reduce per sub-block "
+                         "(requires --paged; with --role both, tp must "
+                         "divide --n-decode)")
+    ap.add_argument("--tp-backend", default="xla",
+                    help="engine spec of the TP group's all-reduce — a "
+                         "single backend or a mixed per-rank list "
+                         "(e.g. 'xla,gascore')")
     args = ap.parse_args()
 
-    if args.role == "both":
+    if args.role == "both" or (args.role == "decode" and args.tp > 1):
         import os
 
         os.environ.setdefault(
             "XLA_FLAGS",
             "--xla_force_host_platform_device_count="
-            f"{args.n_prefill + args.n_decode + args.n_memory}",
+            f"{max(args.n_prefill + args.n_decode + args.n_memory, args.tp)}",
         )
 
     import jax
@@ -968,10 +1238,17 @@ def main() -> None:
     ]
 
     if args.role == "decode":
-        if args.paged:
+        if args.paged and args.tp > 1:
+            server = TPPagedServer(model, ctx, params, args.batch,
+                                   args.cache_len,
+                                   page_tokens=args.page_tokens,
+                                   tp=args.tp, tp_backend=args.tp_backend)
+        elif args.paged:
             server = PagedServer(model, ctx, params, args.batch,
                                  args.cache_len, page_tokens=args.page_tokens)
         else:
+            if args.tp > 1:
+                raise SystemExit("--tp > 1 requires --paged")
             server = Server(model, ctx, params, args.batch, args.cache_len)
         for req in reqs:
             server.submit(req)
@@ -1026,9 +1303,10 @@ def main() -> None:
             prefill_backend=args.prefill_backend,
             decode_backend=args.decode_backend,
             memory_backend=args.memory_backend,
-            paged=args.paged or args.n_memory > 0,
+            paged=args.paged or args.n_memory > 0 or args.tp > 1,
             page_tokens=args.page_tokens,
             mem_slots_per_rank=args.mem_slots,
+            tp=args.tp, tp_backend=args.tp_backend,
         )
         for req in reqs:
             cluster.submit(req)

@@ -155,6 +155,7 @@ class Model:
         positions: jax.Array,  # (B,) int32 — index of the new token
         pool_caches: Any,
         page_table: jax.Array,  # (B, NP) int32 physical page ids
+        tp=None,
     ) -> Tuple[jax.Array, Any]:
         """Decode one token for every request THROUGH the page table.
 
@@ -165,14 +166,21 @@ class Model:
         The new token's K/V scatter straight into the pool and attention
         runs on ``kernels.paged_attention`` — no dense per-request cache
         rows exist anywhere (the end-to-end paged decode that retires the
-        row gathered at admission)."""
+        row gathered at admission).
+
+        ``tp`` (a :class:`~repro.parallel.tp.TPGroup`) runs this rank's
+        head shard: ``params`` and ``pool_caches`` hold only this rank's
+        heads (``tp.shard_decode_params`` / ``PagedLayout.shard_heads``)
+        and each sub-block's partial sum crosses the group via
+        ``tp.psum`` — one planned all-reduce per attention/MLP, logits
+        replicated."""
         cfg = self.cfg
         pos = positions[:, None]
         x = T.embed(params["io"], cfg, ctx, token)
         x, pool_caches = T.stack_apply(
             self.dec_segments, params["dec"], cfg, ctx, x,
             mode="decode", caches=pool_caches, positions=pos, xkv=None,
-            page_table=page_table,
+            page_table=page_table, tp=tp,
         )
         logits = T.logits_fn(params["io"], cfg, ctx, x)[:, 0]
         return logits, pool_caches

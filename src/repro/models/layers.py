@@ -202,6 +202,7 @@ def apply_attention(
     cache_len: int = 0,
     xkv: Optional[jax.Array] = None,
     page_table: Optional[jax.Array] = None,
+    tp=None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """Self- or cross-attention sub-block (pre-norm, residual added by caller).
 
@@ -219,6 +220,13 @@ def apply_attention(
     token's K/V scatter straight into the request's (COW-resolved,
     materialised) page and attention runs through the table via
     ``kernels.paged_attention`` — no dense per-request rows anywhere.
+
+    Tensor-parallel (``tp`` a :class:`~repro.parallel.tp.TPGroup`): the
+    caller passes head-sharded ``wq/wk/wv/wo`` — every per-head
+    computation (projections, rope, softmax, the paged pool writes) is
+    rank-local and identical to the matching head slice of the
+    unsharded run; only the output projection's partial sum crosses the
+    group, via ``tp.psum``.
     """
     dh = cfg.resolved_head_dim
     scale = 1.0 / math.sqrt(dh)
@@ -257,9 +265,9 @@ def apply_attention(
         new_cache = (
             {"k": k, "v": v, "pos": kpos} if mode == "prefill" else cache
         )
-        o = jnp.einsum(
-            "bshk,hkd->bsd", out, wo.reshape(cfg.n_heads, dh, D)
-        )
+        o = jnp.einsum("bshk,hkd->bsd", out, wo.reshape(-1, dh, D))
+        if tp is not None:
+            o = tp.maybe_psum(o)
         return o.astype(x.dtype), new_cache
 
     k = jnp.einsum("bsd,dhk->bshk", h, wk)
@@ -340,11 +348,9 @@ def apply_attention(
     else:
         raise ValueError(mode)
 
-    o = jnp.einsum(
-        "bshk,hkd->bsd",
-        out,
-        wo.reshape(cfg.n_heads, dh, D),
-    )
+    o = jnp.einsum("bshk,hkd->bsd", out, wo.reshape(-1, dh, D))
+    if tp is not None:
+        o = tp.maybe_psum(o)
     return o.astype(x.dtype), new_cache
 
 
@@ -372,7 +378,7 @@ def mlp_init(cfg: ArchConfig, ctx: RunCtx, key, d_ff: Optional[int] = None):
 
 
 def apply_mlp(p: Params, cfg: ArchConfig, x: jax.Array,
-              ctx: RunCtx = None) -> jax.Array:
+              ctx: RunCtx = None, tp=None) -> jax.Array:
     h = apply_norm(p["norm"], x, cfg.norm)
     act = _act(cfg.act)
     ctx = ctx or RunCtx(mesh=None)
@@ -383,7 +389,10 @@ def apply_mlp(p: Params, cfg: ArchConfig, x: jax.Array,
         z = act(h @ wg) * (h @ wi)
     else:
         z = act(h @ wi)
-    return (z @ wo).astype(x.dtype)
+    y = z @ wo
+    if tp is not None:
+        y = tp.maybe_psum(y)
+    return y.astype(x.dtype)
 
 
 # --------------------------------------------------------------------------- #

@@ -76,6 +76,7 @@ def block_apply(
     positions: jax.Array,
     xkv: Optional[jax.Array],
     page_table: Optional[jax.Array] = None,
+    tp=None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     get = lambda k: None if cache is None else cache.get(k)
     new_cache: Dict[str, Any] = {}
@@ -88,16 +89,18 @@ def block_apply(
         a, ac = L.apply_attention(
             p["attn"], cfg, ctx, x, positions=positions, causal=causal,
             window=window, mode=mode, cache=get("attn"), cache_len=cache_len,
-            page_table=page_table,
+            page_table=page_table, tp=tp,
         )
         x = x + checkpoint_name(a, "attn_out")
         if ac is not None:
             new_cache["attn"] = ac
         if kind == "moe":
+            # MoE experts stay replicated inside a TP group (expert
+            # parallelism is the model-axis story); no psum needed
             x = x + checkpoint_name(L.apply_moe(p["moe"], cfg, ctx, x),
                                     "moe_out")
         else:
-            x = x + checkpoint_name(L.apply_mlp(p["mlp"], cfg, x, ctx),
+            x = x + checkpoint_name(L.apply_mlp(p["mlp"], cfg, x, ctx, tp=tp),
                                     "mlp_out")
     elif kind == "mamba":
         if page_table is not None:
@@ -113,27 +116,28 @@ def block_apply(
         x = x + checkpoint_name(m, "mix_out")
         if mc is not None:
             new_cache["mix"] = mc
-        x = x + checkpoint_name(L.apply_mlp(p["mlp"], cfg, x, ctx), "mlp_out")
+        x = x + checkpoint_name(L.apply_mlp(p["mlp"], cfg, x, ctx, tp=tp),
+                                "mlp_out")
     elif kind in ("cross", "xdec"):
         if page_table is not None:
             raise ValueError(f"paged decode unsupported for {kind!r} blocks")
         a, ac = L.apply_attention(
             p["attn"], cfg, ctx, x, positions=positions, causal=True,
-            mode=mode, cache=get("attn"), cache_len=cache_len,
+            mode=mode, cache=get("attn"), cache_len=cache_len, tp=tp,
         )
         x = x + a
         if ac is not None:
             new_cache["attn"] = ac
         c, cc = L.apply_attention(
             p["xattn"], cfg, ctx, x, positions=positions, mode=mode,
-            cache=get("xattn"), cache_len=cache_len, xkv=xkv,
+            cache=get("xattn"), cache_len=cache_len, xkv=xkv, tp=tp,
         )
         if kind == "cross":
             c = jnp.tanh(p["xgate"]).astype(c.dtype) * c
         x = x + c
         if cc is not None:
             new_cache["xattn"] = cc
-        x = x + L.apply_mlp(p["mlp"], cfg, x, ctx)
+        x = x + L.apply_mlp(p["mlp"], cfg, x, ctx, tp=tp)
     else:
         raise ValueError(kind)
     x = shard(x, ctx, ctx.hidden_spec())
@@ -208,6 +212,7 @@ def stack_apply(
     positions: jax.Array,
     xkv: Optional[jax.Array] = None,
     page_table: Optional[jax.Array] = None,
+    tp=None,
 ) -> Tuple[jax.Array, Optional[List[Any]]]:
     new_caches: List[Any] = []
     for si, (seg, sp) in enumerate(zip(segments, seg_params)):
@@ -221,7 +226,7 @@ def stack_apply(
                     kind, lp[key], cfg, ctx, xc, mode=mode,
                     cache=None if lc is None else lc[key],
                     cache_len=cache_len, positions=positions, xkv=xkv,
-                    page_table=page_table,
+                    page_table=page_table, tp=tp,
                 )
                 if nc is not None:
                     ncs[key] = nc

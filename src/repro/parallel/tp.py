@@ -1,0 +1,138 @@
+"""Tensor-parallel decode groups: head/column sharding over GAS ranks.
+
+A *TP group* is ``tp`` GAS ranks jointly serving one logical decode
+server: attention heads and MLP columns split over the group, each rank
+holding only its shard of the weights (and, in paged serving, only its
+heads' slice of the KV page pool).  The per-layer partial sums meet in
+one all-reduce per sub-block — planned by :mod:`repro.core.sched`
+(size-aware ring/tree/recursive-doubling, heterogeneous
+:class:`~repro.core.engine.EngineMap` members allowed), which is the
+paper's offloaded-collective-engine archetype at decode-step payload
+sizes.
+
+The model layers stay pure: they receive a :class:`TPGroup` whose
+``psum`` closes over whatever transport the caller runs under —
+``sched.all_reduce`` inside a ``shard_map`` for real groups,
+``lax.psum`` under ``vmap(axis_name=...)`` for single-device property
+tests, or the identity at ``tp=1``.
+
+Sharding is by parameter *name*, mirroring the ``*_init`` spec trees in
+:mod:`repro.models.layers` (axes counted from the end so the rules hold
+for scan-stacked leaves too):
+
+=============  ===========================  =========================
+leaf           unstacked shape              shard
+=============  ===========================  =========================
+``wq/wk/wv``   (D, H, dh) / (D, KH, dh)     head axis (-2)
+``wi``/``wg``  (D, F)                       columns (-1)
+``wo``         (H*dh, D) or (F, D)          rows (-2; head-major)
+MoE subtree    —                            replicated (expert
+                                            parallelism is the
+                                            ``model``-axis story)
+everything     norms, router, io, gates     replicated
+=============  ===========================  =========================
+
+Every sharded matmul's partial output is summed by ``tp.psum``; all
+activations (and therefore the logits) are replicated across the group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+import jax
+
+__all__ = [
+    "TPGroup",
+    "validate_tp",
+    "shard_axis_for",
+    "shard_decode_params",
+    "stack_shards",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPGroup:
+    """One tensor-parallel decode group, as seen from inside a layer.
+
+    ``size``  — number of ranks in the group.
+    ``psum``  — sum a partial activation over the group; must be callable
+                from traced code (all engine collectives and
+                ``lax.psum`` qualify).
+    """
+
+    size: int
+    psum: Callable[[jax.Array], jax.Array]
+
+    def maybe_psum(self, x: jax.Array) -> jax.Array:
+        return self.psum(x) if self.size > 1 else x
+
+
+def validate_tp(cfg: Any, tp: int) -> None:
+    """TP degree must divide both head counts (GQA group size preserved:
+    each rank keeps H/tp query heads over KH/tp KV heads)."""
+    if tp <= 1:
+        return
+    if cfg.n_heads % tp or cfg.n_kv_heads % tp:
+        raise ValueError(
+            f"tp={tp} must divide n_heads={cfg.n_heads} and "
+            f"n_kv_heads={cfg.n_kv_heads}"
+        )
+
+
+def _path_names(path) -> list:
+    return [p.key if hasattr(p, "key") else str(p) for p in path]
+
+
+def shard_axis_for(path) -> Optional[int]:
+    """The axis (negative, from the end) a leaf shards over, or None to
+    replicate.  ``path`` is a ``tree_map_with_path`` key path."""
+    names = _path_names(path)
+    if "moe" in names:  # the whole MoE subtree (incl. shared/dense_res)
+        return None
+    name = names[-1] if names else ""
+    if name in ("wq", "wk", "wv"):
+        return -2
+    if name in ("wi", "wg"):
+        return -1
+    if name == "wo":
+        return -2
+    return None
+
+
+def _slice_axis(x, axis: int, tp: int, rank: int):
+    n = x.shape[axis]
+    if n % tp:
+        raise ValueError(
+            f"cannot shard axis {axis} of shape {x.shape} over tp={tp}"
+        )
+    k = n // tp
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(rank * k, (rank + 1) * k)
+    return x[tuple(idx)]
+
+
+def shard_decode_params(params: Any, tp: int, rank: int) -> Any:
+    """Rank ``rank``'s parameter shard (replicated leaves pass through)."""
+    if tp <= 1:
+        return params
+
+    def f(path, leaf):
+        ax = shard_axis_for(path)
+        return leaf if ax is None else _slice_axis(leaf, ax, tp, rank)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def stack_shards(params: Any, tp: int) -> Any:
+    """Stack all ranks' shards on a new leading axis: the ``(tp, ...)``
+    operand a ``shard_map`` over a ``("tp",)`` mesh scatters one shard
+    per device (replicated leaves are duplicated — fine at decode scale,
+    where the KV pool dominates memory, not the weights)."""
+    shards = [
+        jax.tree.map(np.asarray, shard_decode_params(params, tp, r))
+        for r in range(tp)
+    ]
+    return jax.tree.map(lambda *xs: np.stack(xs), *shards)

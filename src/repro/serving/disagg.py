@@ -107,19 +107,33 @@ class DisaggCluster:
         mem_slots_per_rank: Optional[int] = None,
         decode_step_us: float = 2000.0,
         prefill_us: float = 4000.0,
+        tp: int = 1,
+        tp_backend: Optional[str] = None,
     ):
         import jax
         import jax.numpy as jnp
 
         from repro.core import am, gasnet, sched
         from repro.compat import shard_map
-        from repro.launch.serve import PooledDecodeServer, Server
+        from repro.launch.serve import (
+            PooledDecodeServer, Server, TPPooledDecodeServer,
+        )
         from repro.serving import pool as pool_lib
         from repro.serving import scheduler as sched_lib
         from repro.serving import tier as tier_lib
 
         if n_memory and not paged:
             raise ValueError("memory ranks require paged=True (page swap)")
+        if tp > 1:
+            if not paged:
+                raise ValueError(
+                    "tp > 1 requires paged=True (the TP group shards the "
+                    "page pool by heads)"
+                )
+            if n_memory:
+                raise ValueError(
+                    "TP decode groups not yet composed with memory tiering"
+                )
 
         self.jax, self.jnp = jax, jnp
         self.gasnet = gasnet
@@ -134,8 +148,11 @@ class DisaggCluster:
         self.max_done = decode_batch
         self.costs = costs
         self.paged = paged
+        self.tp = tp
+        self.tp_backend = tp_backend or decode_backend
+        self.n_groups = n_decode // tp if tp else n_decode
 
-        self.roles = mesh_lib.serve_roles(n_prefill, n_decode, n_memory)
+        self.roles = mesh_lib.serve_roles(n_prefill, n_decode, n_memory, tp=tp)
         backends = mesh_lib.role_backends(
             self.roles, prefill=prefill_backend, decode=decode_backend,
             memory=memory_backend,
@@ -163,16 +180,24 @@ class DisaggCluster:
             )
             self.block_elems = self.playout.n_pages * self.playout.page_elems
             self.block_bytes = self.block_elems * 4
-            self.seg_elems = self.pages_per_rank * self.playout.page_elems
-            # per-PAGE put plan: each page is its own planned transfer
+            # TP groups stripe every page BY HEADS across the group's
+            # member segments: each member's pool partition holds the
+            # shard-layout slice of all pages (tp=1: the full layout, an
+            # identity stripe — one unified code path).
+            self.shard_layout, self.shard_cols = self.playout.shard_heads(
+                tp, model.cfg.n_kv_heads
+            )
+            self.seg_elems = self.pages_per_rank * self.shard_layout.page_elems
+            # per-PAGE put plan: each page (shard slice) is its own
+            # planned transfer
             self.plan = sched.plan_p2p(
-                nbytes=self.playout.page_bytes,
+                nbytes=self.shard_layout.page_bytes,
                 engine=self.gas.make_engine(),
                 costs=costs,
             )
             self.stores = [
-                pool_lib.PagedKVStore(self.playout, self.pages_per_rank)
-                for _ in range(n_decode)
+                pool_lib.PagedKVStore(self.shard_layout, self.pages_per_rank)
+                for _ in range(self.n_groups)
             ]
             # ---- tiered KV memory: memory-only ranks + preemption ------
             self.max_swap = self.playout.n_pages  # one request per tick
@@ -249,6 +274,12 @@ class DisaggCluster:
         self.inbox = np.zeros((self.n, n_slots, 3), np.int32)
         self.acks = np.zeros((self.n, n_slots), np.int32)
         self.done = np.zeros((self.n, 1), np.int32)
+        # live views of each group member's pool-partition mirror, re-bound
+        # in place after every transfer consume (entry 0 = the leader's,
+        # aliased as store.mem)
+        self.shard_mems: List[List[Optional[np.ndarray]]] = [
+            [None] * tp for _ in range(self.n_groups)
+        ]
         if paged:
             self._alias_store_mem()
 
@@ -257,7 +288,30 @@ class DisaggCluster:
         # decode path (Model.decode_step_paged) as the colocated
         # PagedServer; the dense Server survives only as the oracle for
         # the unpaged (paged=False) handoff.
-        if paged:
+        if paged and tp > 1:
+            from jax.sharding import Mesh
+
+            devices = jax.devices()
+            self.decode_servers = [
+                TPPooledDecodeServer(
+                    model, ctx, params, decode_batch, cache_len,
+                    store=self.stores[g], shard_mems=self.shard_mems[g],
+                    tp=tp, tp_backend=self.tp_backend,
+                    tp_mesh=Mesh(
+                        np.array(devices[
+                            self.decode_rank(g): self.decode_rank(g) + tp
+                        ]),
+                        ("tp",),
+                    ),
+                    costs=costs, eos_id=eos_id,
+                    on_page_shortage=(
+                        lambda rid, need, g=g:
+                        self._decode_shortage(g, rid, need)
+                    ),
+                )
+                for g in range(self.n_groups)
+            ]
+        elif paged:
             self.decode_servers = [
                 PooledDecodeServer(
                     model, ctx, params, decode_batch, cache_len,
@@ -285,9 +339,11 @@ class DisaggCluster:
         self.finished: List[Any] = []
         # one in-flight push per prefill worker: (request, pool, slot, block)
         self.pending_push: List[Optional[Tuple]] = [None] * n_prefill
-        self.staged: List[Dict[int, int]] = [dict() for _ in range(n_decode)]
-        self._done_queue: List[Tuple[int, int, int]] = []  # (d, rid+1, origin)
-        self._finished_seen = [0] * n_decode
+        self.staged: List[Dict[int, int]] = [
+            dict() for _ in range(self.n_groups)
+        ]
+        self._done_queue: List[Tuple[int, int, int]] = []  # (g, rid+1, origin)
+        self._finished_seen = [0] * self.n_groups
         self._rr_decode = 0
         self._transfer_fns: Dict[Tuple, Any] = {}
         self.kv_transfers = 0
@@ -315,24 +371,38 @@ class DisaggCluster:
     # role views
     # ------------------------------------------------------------------ #
     def decode_rank(self, d: int) -> int:
-        return self.n_prefill + d
+        """Rank of decode GROUP ``d``'s leader (= its only member at
+        tp=1): the rank whose pool partition backs the group's store and
+        which receives the group's control-plane AMs."""
+        return self.n_prefill + d * self.tp
+
+    def member_rank(self, g: int, s: int) -> int:
+        """Rank of member ``s`` of decode group ``g`` (its head shard)."""
+        return self.n_prefill + g * self.tp + s
 
     def memory_rank(self, m: int) -> int:
         return self.n_prefill + self.n_decode + m
 
     def _alias_store_mem(self) -> None:
-        """Point each decode store's physical page array at its rank's
-        partition of the (freshly consumed) pool segment — the host
-        mirror of the PGAS shard.  Pages arrive over the wire (admission
-        puts, swap-in gets) AND from the paged decode step, which writes
-        each tick's token page in place; decode writes made while a
-        transfer was in flight are replayed onto the fresh mirror by
-        :meth:`_apply_decode_writes`."""
-        pool_elems = self.pages_per_rank * self.playout.page_elems
-        for d, store in enumerate(self.stores):
-            store.mem = self.kvseg[self.decode_rank(d)][:pool_elems].reshape(
-                self.pages_per_rank, self.playout.page_elems
-            )
+        """Point each decode store's physical page array at its group
+        leader's partition of the (freshly consumed) pool segment — the
+        host mirror of the PGAS shard — and re-bind every group member's
+        shard mirror (``shard_mems``) in place.  Pages arrive over the
+        wire (admission puts, swap-in gets) AND from the paged decode
+        step, which writes each tick's token page in place; decode writes
+        made while a transfer was in flight are replayed onto the fresh
+        mirror by :meth:`_apply_decode_writes`."""
+        pool_elems = self.pages_per_rank * self.shard_layout.page_elems
+        for g, store in enumerate(self.stores):
+            views = [
+                self.kvseg[self.member_rank(g, s)][:pool_elems].reshape(
+                    self.pages_per_rank, self.shard_layout.page_elems
+                )
+                for s in range(self.tp)
+            ]
+            store.mem = views[0]
+            for s in range(self.tp):
+                self.shard_mems[g][s] = views[s]
 
     # ------------------------------------------------------------------ #
     # request intake
@@ -387,22 +457,26 @@ class DisaggCluster:
             return handles
 
         def data_plane_paged(node, kvseg, outflat, meta, page_meta):
-            # one pred-gated put per page, landing at the allocator's slot
-            # (page_meta[j] = flat pool offset, send flag); prefix-shared
-            # pages trace with pred=False and ship nothing.
+            # one pred-gated put per page PER HEAD SHARD, each shard's
+            # slice landing at the allocator's slot of its group member's
+            # segment (page_meta[j] = flat pool offset, send flag — the
+            # same offset on every member: the partitions are congruent);
+            # prefix-shared pages trace with pred=False and ship nothing.
+            # ``perm`` is a tuple of per-shard permutations (length tp).
             has = meta[0, 0] > 0
             handles = []
-            for j in range(self.playout.n_pages):
-                hs, _ = kv_lib.push_block(
-                    node,
-                    kvseg,
-                    outflat[0, j],
-                    to=gasnet.Perm(perm),
-                    base_index=page_meta[0, j, 0],
-                    pred=has & (page_meta[0, j, 1] > 0),
-                    plan=self.plan,
-                )
-                handles.extend(hs)
+            for s, pm in enumerate(perm):
+                for j in range(self.playout.n_pages):
+                    hs, _ = kv_lib.push_block(
+                        node,
+                        kvseg,
+                        outflat[0, s, j],
+                        to=gasnet.Perm(pm),
+                        base_index=page_meta[0, j, 0],
+                        pred=has & (page_meta[0, j, 1] > 0),
+                        plan=self.plan,
+                    )
+                    handles.extend(hs)
             return handles
 
         def body(kvseg, inbox, acks, done, outflat, meta, page_meta,
@@ -506,7 +580,7 @@ class DisaggCluster:
         tried in order of *prefix affinity* — the rank whose pool already
         holds the longest leading run of the prompt's pages wins, so the
         shared pages are mapped instead of moved."""
-        order = [(self._rr_decode + i) % self.n_decode for i in range(self.n_decode)]
+        order = [(self._rr_decode + i) % self.n_groups for i in range(self.n_groups)]
         if self.paged and prompt is not None:
             matches = {d: self.stores[d].prefix_match(prompt) for d in order}
             best = max(matches.values())
@@ -530,7 +604,7 @@ class DisaggCluster:
                     continue
             for slot in range(self.n_slots):
                 if slot not in self.staged[d]:
-                    self._rr_decode = (d + 1) % self.n_decode
+                    self._rr_decode = (d + 1) % self.n_groups
                     return d, slot
         return None
 
@@ -578,9 +652,13 @@ class DisaggCluster:
                 # and prefix-shared pages ship nothing at all.  Lazy: only
                 # prompt pages materialise, so the pool oversubscribes.
                 pages = np.asarray(self.playout.flatten(caches_one))
+                # pre-stripe each page by heads for the group members:
+                # (tp, n_pages, shard_page_elems); tp=1 is the identity
+                # stripe (one unified path)
+                shards = pages[:, self.shard_cols].transpose(1, 0, 2)
                 plan = self.stores[d].plan_admit(req.prompt, lazy=True)
                 self.stores[d].commit(req.rid, plan)
-                self.pending_push[p] = (req, d, slot, pages, plan)
+                self.pending_push[p] = (req, d, slot, shards, plan)
             else:
                 header = np.asarray([tok, len(req.prompt)], np.int32).view(np.float32)
                 flat = np.concatenate(
@@ -608,7 +686,7 @@ class DisaggCluster:
         need = self.playout.pages_for(len(req.prompt))
         slo = getattr(req, "slo", None) or SLO()
         expired = time.monotonic() > req.t_enqueue + slo.ttft_deadline_s
-        for d in range(self.n_decode):
+        for d in range(self.n_groups):
             shortage = need - self.stores[d].n_free
             if shortage <= 0:
                 continue  # pages are not this rank's blocker (slots are)
@@ -733,9 +811,14 @@ class DisaggCluster:
         swap-out destinations live on memory ranks."""
         if not self.paged:
             return
-        for d, server in enumerate(self.decode_servers):
+        for g, server in enumerate(self.decode_servers):
             for pp, row in server.drain_dirty().items():
-                self.stores[d].mem[pp] = row
+                if self.tp > 1:
+                    # stacked (tp, shard_elems) rows: one slice per member
+                    for s in range(self.tp):
+                        self.shard_mems[g][s][pp] = row[s]
+                else:
+                    self.stores[g].mem[pp] = row
 
     def _run_resumes(self) -> None:
         """Stage swap-ins: a preempted-by-swap request whose pages sit in
@@ -765,7 +848,7 @@ class DisaggCluster:
             if snap["position"] % self.playout.page_tokens == 0:
                 need += 1
             best = None
-            for d in range(self.n_decode):
+            for d in range(self.n_groups):
                 if self.stores[d].n_free >= need:
                     best = d
                     break
@@ -822,8 +905,20 @@ class DisaggCluster:
             and not self._fetch_jobs
         ):
             return None
-        edges = {p: self.decode_rank(d) for p, (_, d, _, _, _) in pushes}
-        perm = kv_lib.handoff_permutation(self.n, edges)
+        if self.paged:
+            # one handoff permutation per head shard: prefill rank p's
+            # shard-s slice goes to member s of its target group (at tp=1
+            # a 1-tuple of the classic leader permutation)
+            perm = tuple(
+                kv_lib.handoff_permutation(
+                    self.n,
+                    {p: self.member_rank(d, s) for p, (_, d, _, _, _) in pushes},
+                )
+                for s in range(self.tp)
+            )
+        else:
+            edges = {p: self.decode_rank(d) for p, (_, d, _, _, _) in pushes}
+            perm = kv_lib.handoff_permutation(self.n, edges)
         # tier plane: at most one swap-out and one swap-in job per tick,
         # each its own completed bijection (decode rank -> memory rank)
         perm_swap = perm_fetch = None
@@ -848,7 +943,8 @@ class DisaggCluster:
                 self._inflight_fetch = job
         if self.paged:
             outflat = np.zeros(
-                (self.n, self.playout.n_pages, self.playout.page_elems),
+                (self.n, self.tp, self.playout.n_pages,
+                 self.shard_layout.page_elems),
                 np.float32,
             )
             page_meta = np.zeros((self.n, self.playout.n_pages, 2), np.int32)
@@ -864,7 +960,7 @@ class DisaggCluster:
                     # unmaterialised slots (lazy tail) park at offset 0,
                     # gated off like prefix-shared pages
                     page_meta[p, j] = (
-                        max(page_id, 0) * self.playout.page_elems,
+                        max(page_id, 0) * self.shard_layout.page_elems,
                         1 if fresh else 0,
                     )
             if not getattr(req, "_push_counted", False):
@@ -1020,7 +1116,7 @@ class DisaggCluster:
         return (
             not self.queue
             and all(p is None for p in self.pending_push)
-            and not any(self.staged[d] for d in range(self.n_decode))
+            and not any(self.staged[d] for d in range(self.n_groups))
             and not any(any(s.active) or s.queue for s in self.decode_servers)
             and not self._preempted
             and not self._swap_jobs
@@ -1076,6 +1172,8 @@ class DisaggCluster:
             misses = sum(s.prefix_misses for s in self.stores)
             stats.update({
                 "paged": True,
+                "tp": self.tp,
+                "n_decode_groups": self.n_groups,
                 "page_tokens": self.playout.page_tokens,
                 "page_bytes": self.playout.page_bytes,
                 "pages_per_rank": self.pages_per_rank,

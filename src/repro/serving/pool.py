@@ -288,6 +288,75 @@ class PagedLayout:
             cols.append(x.reshape(x.shape[0], leaf.size))
         return jnp.concatenate(cols, axis=1)
 
+    def shard_heads(
+        self, tp: int, n_kv_heads: int
+    ) -> Tuple["PagedLayout", np.ndarray]:
+        """Head-shard axis for tensor-parallel decode groups.
+
+        Returns ``(shard_layout, cols)``: the :class:`PagedLayout` of ONE
+        rank's pool shard (``k``/``v`` leaves keep only ``KH/tp`` heads;
+        ``pos`` and other head-free leaves replicated) plus an
+        ``(tp, shard_page_elems)`` int array of full-page carrier columns
+        such that shard ``s`` of a page row is ``row[cols[s]]`` — and the
+        full row is rebuilt by scattering every shard back through its
+        columns (``k``/``v`` columns partition; replicated columns agree
+        bit-for-bit on every shard, so reassembly order is immaterial).
+
+        Page ids, page tables, the allocator and the prefix index are all
+        shard-invariant: every rank of a group holds the same table and
+        the same page count, just ``1/tp``-th of each page's bytes.
+        """
+        if tp <= 1:
+            return self, np.arange(self.page_elems)[None]
+        if n_kv_heads % tp:
+            raise ValueError(
+                f"tp={tp} must divide n_kv_heads={n_kv_heads}"
+            )
+        kh_l = n_kv_heads // tp
+        with_path, _ = jax.tree_util.tree_flatten_with_path(
+            self.page_struct()
+        )
+        cols: List[List[np.ndarray]] = [[] for _ in range(tp)]
+        shard_vals = []
+        for (path, _), leaf in zip(with_path, self.leaves):
+            name = getattr(path[-1], "key", None) if path else None
+            inner = (
+                (self.page_tokens,)
+                + leaf.shape[: leaf.axis]
+                + leaf.shape[leaf.axis + 1 :]
+            )
+            idx = np.arange(leaf.size).reshape(inner) + leaf.offset
+            if name in ("k", "v"):
+                if (
+                    len(leaf.shape) < 4
+                    or leaf.axis != 2
+                    or leaf.shape[3] != n_kv_heads
+                ):
+                    raise ValueError(
+                        f"cannot head-shard {name!r} leaf {leaf.shape}: "
+                        f"expected (L, 1, cache_len, {n_kv_heads}, ...)"
+                    )
+                # inner layout is (T, L, 1, KH, *rest): head axis 3
+                for s in range(tp):
+                    sel = idx[:, :, :, s * kh_l : (s + 1) * kh_l]
+                    cols[s].append(sel.reshape(-1))
+                shape = (
+                    leaf.shape[:3] + (kh_l,) + leaf.shape[4:]
+                )
+            else:
+                for s in range(tp):
+                    cols[s].append(idx.reshape(-1))
+                shape = leaf.shape
+            shard_vals.append(jax.ShapeDtypeStruct(shape, leaf.dtype))
+        shard_struct = jax.tree_util.tree_unflatten(self.treedef, shard_vals)
+        shard_layout = PagedLayout.from_struct(
+            shard_struct, cache_len=self.cache_len,
+            page_tokens=self.page_tokens,
+        )
+        return shard_layout, np.stack(
+            [np.concatenate(c) for c in cols]
+        )
+
     def unflatten(self, pages: jax.Array) -> Any:
         """(n_pages, page_elems) carrier pages -> cache pytree."""
         pages = jnp.asarray(pages)

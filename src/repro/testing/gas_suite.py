@@ -396,6 +396,38 @@ def main() -> None:
         )
     print("segmented + planned collectives OK")
 
+    # ---- TP-group all-reduce at decode-step payloads -----------------------
+    # the per-sub-block partial sum of a tensor-parallel decode group:
+    # (B, 1, D)-shaped activations, f32 and bf16, must agree across pure
+    # software, pure hardware, and mixed engine maps (the ISSUE's
+    # heterogeneous TP groups) and match the numpy sum
+    def prog_tp(node, x):
+        return sched.all_reduce(node.engine, node.local(x))[None]
+
+    for dt, tol in ((jnp.float32, 1e-6), (jnp.bfloat16, 0.05)):
+        xa = (jnp.arange(8.0 * 4 * 1 * 128).reshape(8, 4, 1, 128) / 37.0
+              - 5.0).astype(dt)
+        want = np.tile(
+            np.asarray(xa.astype(jnp.float32)).sum(0), (8, 1, 1, 1)
+        )
+        outs = {
+            name: np.asarray(
+                c.spmd(prog_tp, xa, out_specs=P("node"))
+            ).astype(np.float32)
+            for name, c in (("xla", ctx), ("gascore", ctx_hw),
+                            ("mixed", ctx_mix))
+        }
+        for name, o in outs.items():
+            np.testing.assert_allclose(
+                o, want, rtol=tol,
+                err_msg=f"TP all-reduce vs numpy on {name} ({dt.__name__})",
+            )
+            np.testing.assert_allclose(
+                o, outs["xla"], rtol=tol,
+                err_msg=f"TP all-reduce engine parity: {name}",
+            )
+    print("TP-group all-reduce parity OK (decode payloads, f32+bf16)")
+
     print("GAS_SUITE_PASS")
 
 

@@ -299,6 +299,39 @@ def main() -> None:
             )
     print("AM request/reply parity OK (xla/gascore/mixed)")
 
+    # ---- TP-group all-reduce at decode-step payloads ----------------------
+    # the tensor-parallel decode group's per-sub-block partial sum:
+    # (B, 1, D)-shaped activations, f32 and bf16, planned by the
+    # scheduler, bit-for-bit-comparable across software, hardware, and
+    # mixed engine maps within dtype tolerance
+    def tp_prog(backend, dt):
+        def prog(a):
+            e = make_engine(backend, "node", N, interpret=True)
+            out = sched.all_reduce(e, a[0].astype(dt))
+            return out.astype(jnp.float32)[None]
+        return prog
+
+    xd = jnp.arange(4.0 * 4 * 1 * 128).reshape(4, 4, 1, 128) / 29.0 - 9.0
+    for dt, tol in ((jnp.float32, 1e-6), (jnp.bfloat16, 0.05)):
+        want = np.tile(
+            np.asarray(xd.astype(dt).astype(jnp.float32)).sum(0),
+            (N, 1, 1, 1),
+        )
+        outs = [
+            np.asarray(run(tp_prog(b, dt), xd, in_specs=(P("node"),)))
+            for b in BACKENDS
+        ]
+        for b, o in zip(BACKENDS, outs):
+            np.testing.assert_allclose(
+                o, want, rtol=tol,
+                err_msg=f"TP all-reduce vs numpy on {b} ({dt.__name__})",
+            )
+            np.testing.assert_allclose(
+                o, outs[0], rtol=tol,
+                err_msg=f"TP all-reduce engine parity vs {b}",
+            )
+    print("TP-group decode-payload all-reduce parity OK (f32+bf16)")
+
     print("GASCORE_SUITE_PASS")
 
 

@@ -19,6 +19,12 @@ def test_gascore_suite(suite_runner):
 
 
 @pytest.mark.slow
+def test_tp_suite(suite_runner):
+    out = suite_runner("repro.testing.tp_suite", devices=3)
+    assert "TP_SUITE_PASS" in out
+
+
+@pytest.mark.slow
 def test_dist_suite(suite_runner):
     out = suite_runner("repro.testing.dist_suite", devices=8, timeout=1800)
     assert "DIST_SUITE_PASS" in out

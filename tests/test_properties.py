@@ -822,3 +822,143 @@ def test_paged_attention_bitexact_across_blocking(b, hq, g, np_, ppb, bb, seed):
         pages_per_block=ppb, block_b=bb,
     ))
     assert got.tobytes() == base.tobytes()
+
+
+# --------------------------------------------------------------------------- #
+# tensor-parallel sharded decode == tp=1 decode
+# --------------------------------------------------------------------------- #
+SET_TP = settings(max_examples=6, deadline=None)
+
+
+@SET_TP
+@given(
+    heads=st.sampled_from([(4, 2, 2), (8, 2, 2), (4, 4, 2), (8, 4, 4),
+                           (8, 8, 4)]),
+    prompt_len=st.integers(3, 14),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tp_sharded_decode_matches_tp1(heads, prompt_len, seed):
+    """Head-sharded paged decode (``repro.parallel.tp`` shard rules +
+    ``PagedLayout.shard_heads`` + per-sub-block psum) is token-identical
+    to ``tp=1`` across random head counts and page-table states: logits
+    replicate BITWISE across the group, ``pos`` pool leaves stay bitwise
+    equal, and the written k/v pages match to float tolerance (the psum
+    reorders each sub-block's reduction, so activations past the first
+    block differ from tp=1 in the last bits).
+
+    The group runs as ``jax.vmap(axis_name="tp")`` + ``lax.psum`` — the
+    single-device stand-in for the ``shard_map`` the servers use (the
+    multi-device path is covered by ``repro.testing.tp_suite``)."""
+    import dataclasses
+
+    from jax import lax
+
+    from repro.configs.registry import SMOKE
+    from repro.models.build import build_model
+    from repro.parallel import tp as tp_lib
+    from repro.parallel.ctx import RunCtx
+    from repro.serving import pool
+
+    H, KH, TP = heads
+    cfg = dataclasses.replace(
+        SMOKE["llama3-405b"], n_heads=H, n_kv_heads=KH, head_dim=8,
+        n_layers=2, d_model=32, d_ff=64, vocab=64,
+    )
+    model = build_model(cfg)
+    ctx = RunCtx(mesh=None, remat="none")
+    params, _ = model.init(ctx, jax.random.PRNGKey(seed % 997))
+
+    rng = np.random.default_rng(seed)
+    cache_len, pt, steps = 24, 4, 3
+    prompt = rng.integers(0, cfg.vocab, prompt_len).tolist()
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    logits0, caches = model.prefill(
+        params, ctx, {"inputs": toks}, cache_len=cache_len
+    )
+    t0 = int(np.argmax(np.asarray(logits0)[0]))
+
+    layout = pool.PagedLayout.from_struct(
+        model.kv_block_struct(ctx, prompt_len=prompt_len, cache_len=cache_len),
+        cache_len=cache_len, page_tokens=pt,
+    )
+    pages = np.asarray(layout.flatten(caches))
+    # random page-table state: logical pages scattered over a larger pool
+    n_pool = layout.n_pages + int(rng.integers(1, 4))
+    order = rng.permutation(n_pool)[: layout.n_pages]
+    mem = np.zeros((n_pool, layout.page_elems), np.float32)
+    mem[order] = pages
+    table = jnp.asarray(order[None], jnp.int32)
+
+    def decode(run_step, mem_state):
+        toks_out, pos, last = [t0], prompt_len, t0
+        for _ in range(steps):
+            lg, mem_state = run_step(
+                mem_state, jnp.asarray([[last]], jnp.int32),
+                jnp.asarray([pos], jnp.int32),
+            )
+            lgn = np.asarray(lg)
+            if lgn.ndim == 3:  # stacked (tp, B, vocab): bitwise-replicated
+                for s in range(1, TP):
+                    assert lgn[s].tobytes() == lgn[0].tobytes()
+                lgn = lgn[0]
+            last = int(np.argmax(lgn[0]))
+            toks_out.append(last)
+            pos += 1
+        return toks_out, mem_state
+
+    # ---- tp=1 oracle -------------------------------------------------------
+    def full_step(mem_state, token, position):
+        views = layout.decode_views(mem_state)
+        lg, views = model.decode_step_paged(
+            params, ctx, token, position, views, table
+        )
+        return lg, layout.views_to_pool(views)
+
+    full_toks, full_mem = decode(jax.jit(full_step), jnp.asarray(mem))
+    full_mem = np.asarray(full_mem)
+
+    # ---- sharded group -----------------------------------------------------
+    shard_layout, cols = layout.shard_heads(TP, KH)
+    sparams = jax.tree.map(
+        jnp.asarray, tp_lib.stack_shards(params, TP)
+    )
+    group = tp_lib.TPGroup(TP, lambda x: lax.psum(x, "tp"))
+
+    def one_shard(p_shard, mem_shard, token, position):
+        vs = shard_layout.decode_views(mem_shard)
+        lg, vs = model.decode_step_paged(
+            p_shard, ctx, token, position, vs, table, tp=group
+        )
+        return lg, shard_layout.views_to_pool(vs)
+
+    vstep = jax.jit(jax.vmap(
+        one_shard, in_axes=(0, 0, None, None), axis_name="tp"
+    ))
+    stacked = jnp.asarray(np.stack([mem[:, c] for c in cols]))
+    tp_toks, tp_mem = decode(
+        lambda m, t, p: vstep(sparams, m, t, p), stacked
+    )
+    tp_mem = np.asarray(tp_mem)
+
+    assert tp_toks == full_toks
+    # pool state leaf-wise: pos bitwise, k/v to float tolerance
+    with_path, _ = jax.tree_util.tree_flatten_with_path(
+        shard_layout.page_struct()
+    )
+    for s in range(TP):
+        want = full_mem[:, cols[s]]
+        for (path, _), leaf in zip(with_path, shard_layout.leaves):
+            name = getattr(path[-1], "key", None) if path else None
+            sl = slice(leaf.offset, leaf.offset + leaf.size)
+            cols_per_page = shard_layout.page_elems
+            got_l = tp_mem[s].reshape(-1, cols_per_page)[:, sl]
+            want_l = want.reshape(-1, cols_per_page)[:, sl]
+            if name in ("k", "v"):
+                np.testing.assert_allclose(
+                    got_l, want_l, rtol=2e-5, atol=2e-6,
+                    err_msg=f"shard {s} leaf {name}",
+                )
+            else:
+                assert got_l.tobytes() == want_l.tobytes(), (
+                    f"shard {s} leaf {name} not bitwise"
+                )

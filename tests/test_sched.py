@@ -138,6 +138,53 @@ def test_engine_map_plans_against_worst_member():
     assert c.alpha_us == max(cx.alpha_us, cg.alpha_us)
 
 
+def test_load_costs_reads_engine_pair_costs(tmp_path):
+    path = tmp_path / "BENCH_gas.json"
+    path.write_text(json.dumps({
+        "engine_pair_costs": {
+            "xla->gascore": {"alpha_us": 55.0, "beta_us_per_kib": 0.9,
+                             "gamma_us_per_kib": 0.3},
+            "gascore->xla": {"alpha_us": 60.0, "beta_us_per_kib": 0.7},
+        }
+    }))
+    costs = sched.load_costs(str(path))
+    assert costs["xla->gascore"].alpha_us == 55.0
+    assert costs["gascore->xla"].beta_us_per_kib == 0.7
+    assert "xla" in costs  # per-engine defaults retained alongside pairs
+
+
+def test_engine_map_prefers_measured_pair_costs():
+    m = EngineMap("node", ("xla", "gascore", "xla", "gascore"))
+    table = dict(sched.DEFAULT_COSTS)
+    table["xla->gascore"] = sched.EngineCost(100.0, 2.0, 0.5)
+    table["gascore->xla"] = sched.EngineCost(90.0, 3.0, 0.4)
+    c = sched.cost_of(m, table)
+    # the worst measured edge paces the group, not the analytic worst member
+    assert c.alpha_us == 100.0 and c.beta_us_per_kib == 3.0
+
+
+def test_engine_map_missing_pair_falls_back_to_analytic():
+    # one direction measured, the other absent: plan_collective must not
+    # KeyError — it degrades to the analytic worst-member model
+    m = EngineMap("node", ("xla", "gascore", "xla", "gascore"))
+    table = dict(sched.DEFAULT_COSTS)
+    table["xla->gascore"] = sched.EngineCost(100.0, 2.0, 0.5)
+    c = sched.cost_of(m, table)
+    cx, cg = table["xla"], table["gascore"]
+    assert c.alpha_us == max(cx.alpha_us, cg.alpha_us)
+    p = sched.plan_collective(
+        "all_reduce", nbytes=1 << 12, n_nodes=4, engine=m, costs=table
+    )
+    assert p.est_us > 0.0  # planned, not crashed
+
+
+def test_homogeneous_map_ignores_pair_costs():
+    m = EngineMap("node", ("xla", "xla"))
+    table = dict(sched.DEFAULT_COSTS)
+    table["xla->gascore"] = sched.EngineCost(999.0, 9.0, 9.0)
+    assert sched.cost_of(m, table).alpha_us == table["xla"].alpha_us
+
+
 # --------------------------------------------------------------------------- #
 # heterogeneous node map construction
 # --------------------------------------------------------------------------- #
