@@ -12,6 +12,13 @@ decode rework is specifically not allowed to reintroduce:
   per-rank byte budget (``serve_tp_decode_tp2`` <= ``serve_tp_decode_tp1``
   rank-concurrent tok/s), when the TP section is present in the artifact.
 
+With ``--baseline PREV.json`` (the previous main-branch artifact) the
+gate additionally compares throughput row-by-row and flags any shared
+row whose ``tok_per_s`` fell MORE than 15% below the baseline — the
+cross-run regression net the within-run orderings cannot catch.  An
+unreadable baseline is noted and skipped (first run, expired artifact),
+never fatal: the gate must not brick CI on its own bootstrap.
+
 Findings go to stdout and, when ``$GITHUB_STEP_SUMMARY`` is set, to the
 workflow run's summary page.  By default any finding FAILS the check
 (exit 1): the serving benches run single-process on a pinned smoke
@@ -20,7 +27,8 @@ runs on shared runners can pass ``--warn-only`` to keep the old
 advisory behaviour (exit 0 on findings).  Exit 2 means the artifact is
 missing or malformed either way.
 
-Usage: ``python benchmarks/check_serve_perf.py [--warn-only] [BENCH_serve.json]``
+Usage: ``python benchmarks/check_serve_perf.py [--warn-only]
+[--baseline PREV.json] [BENCH_serve.json]``
 """
 import argparse
 import json
@@ -78,6 +86,33 @@ def check(rows):
     return warnings
 
 
+# any shared row losing more than this fraction of its baseline tok/s
+# fails the gate (pinned smoke configs drift far less than 15%)
+REGRESSION_TOLERANCE = 0.15
+
+
+def check_baseline(rows, baseline_rows, tolerance=REGRESSION_TOLERANCE):
+    """Warnings for rows whose tok/s regressed vs the previous artifact."""
+    prev = {
+        r.get("name"): r.get("tok_per_s")
+        for r in baseline_rows
+        if r.get("tok_per_s")
+    }
+    warnings = []
+    for r in rows:
+        name, now = r.get("name"), r.get("tok_per_s")
+        was = prev.get(name)
+        if not name or not now or not was:
+            continue  # new row, dropped row, or no throughput to compare
+        if now < (1.0 - tolerance) * was:
+            warnings.append(
+                f"{name} throughput regressed {(1.0 - now / was):.0%} vs "
+                f"the previous main-branch artifact: {now:.1f} tok/s vs "
+                f"{was:.1f} tok/s (tolerance {tolerance:.0%})"
+            )
+    return warnings
+
+
 def main(argv):
     ap = argparse.ArgumentParser(
         prog="check_serve_perf",
@@ -86,6 +121,11 @@ def main(argv):
     ap.add_argument(
         "--warn-only", action="store_true",
         help="report findings but exit 0 (nightly runs on shared runners)",
+    )
+    ap.add_argument(
+        "--baseline", metavar="PREV.json", default=None,
+        help="previous main-branch BENCH_serve.json: fail any shared row "
+        "whose tok/s fell >15%% below it (unreadable baseline: skipped)",
     )
     ap.add_argument(
         "path", nargs="?", default="BENCH_serve.json",
@@ -104,6 +144,18 @@ def main(argv):
         return 2
 
     warnings = check(rows)
+    baseline_note = None
+    if args.baseline:
+        try:
+            with open(args.baseline) as f:
+                baseline_rows = json.load(f)["rows"]
+        except (OSError, KeyError, ValueError) as e:
+            baseline_note = (
+                f"baseline {args.baseline} unreadable ({e}) — cross-run "
+                f"gate skipped (first run or expired artifact)"
+            )
+        else:
+            warnings += check_baseline(rows, baseline_rows)
     summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
     lines = []
     if warnings:
@@ -114,7 +166,14 @@ def main(argv):
         lines.append(
             "### serving perf OK — paged decode >= dense, overlap gap "
             "> 1.0x, tp=2 > tp=1"
+            + (
+                ", throughput within 15% of the previous main artifact"
+                if args.baseline and baseline_note is None
+                else ""
+            )
         )
+    if baseline_note:
+        lines.append(f"- note: {baseline_note}")
     for line in lines:
         print(line)
     if summary_path:

@@ -132,7 +132,9 @@ def restore(
     for k, sh in zip(keys, shardings):
         fn = os.path.join(d, k.replace("/", "__") + ".npy")
         arr = np.load(fn)
-        leaves.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+        leaves.append(
+            jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
+        )
     treedef = jax.tree_util.tree_structure(target)
     return treedef.unflatten(leaves), manifest.get("extra", {})
 

@@ -321,7 +321,10 @@ def plan_collective(
         return ring
 
     if op == "all_to_all":
-        native = engine is not None and type(engine).all_to_all is not CommEngine.all_to_all
+        native = (
+            engine is not None
+            and type(engine).all_to_all is not CommEngine.all_to_all
+        )
         est = cost.alpha_us + cost.beta_us_per_kib * kib * (n - 1) / n
         if native:
             return CollectivePlan(

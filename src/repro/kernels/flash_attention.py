@@ -149,7 +149,9 @@ def flash_attention(
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
     if Sq % block_q or Sk % block_k:
-        raise ValueError(f"seq ({Sq},{Sk}) not divisible by blocks ({block_q},{block_k})")
+        raise ValueError(
+            f"seq ({Sq},{Sk}) not divisible by blocks ({block_q},{block_k})"
+        )
     nq, nk = Sq // block_q, Sk // block_k
 
     kernel = functools.partial(

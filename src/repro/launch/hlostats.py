@@ -173,7 +173,10 @@ def _parse(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
                 if m.group(1):
                     entry = m.group(2)
                 # parameters from header: "name: type, name: type"
-                for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^()]*\))|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)", m.group(3)):
+                for pm in re.finditer(
+                    r"([\w\.\-]+):\s*((?:\([^()]*\))|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)",
+                    m.group(3),
+                ):
                     cur.types[pm.group(1)] = pm.group(2)
             continue
         if line.strip() == "}" or line.strip().startswith("} "):
@@ -203,9 +206,9 @@ def _called(inst: Inst) -> List[str]:
 
 
 def _trip_from_backend_config(inst: Inst) -> Optional[int]:
-    m = re.search(r'backend_config=(\{.*?\})(?:,|$| )', inst.attrs)
+    m = re.search(r"backend_config=(\{.*?\})(?:,|$| )", inst.attrs)
     if not m:
-        m = re.search(r'backend_config=(\{.*\})\s*$', inst.attrs)
+        m = re.search(r"backend_config=(\{.*\})\s*$", inst.attrs)
     if not m:
         return None
     try:

@@ -30,6 +30,7 @@ __all__ = [
     "serve_roles",
     "decode_groups",
     "role_backends",
+    "promote_spare",
 ]
 
 
@@ -88,7 +89,11 @@ def node_backends(
 
 
 def serve_roles(
-    n_prefill: int, n_decode: int, n_memory: int = 0, tp: int = 1
+    n_prefill: int,
+    n_decode: int,
+    n_memory: int = 0,
+    tp: int = 1,
+    n_spare: int = 0,
 ) -> Tuple[str, ...]:
     """Per-rank roles of a disaggregated serving ring: the first
     ``n_prefill`` ranks are the prefill pool, then the decode pool, then
@@ -106,11 +111,17 @@ def serve_roles(
     consecutive ranks (see :func:`decode_groups`): it must divide
     ``n_decode``, and every member of a group keeps the ``"decode"``
     role — group structure is a decode-pool refinement, not a new role.
+
+    ``n_spare`` trailing *spare* ranks join the ring idle (segment
+    capacity reserved, no assigned work) and are promoted into a pool by
+    :func:`promote_spare` at elastic scale-out: membership changes
+    without re-launching the job, since the ring size — which every
+    permutation and segment shape depends on — never changes.
     """
-    if n_prefill < 1 or n_decode < 1 or n_memory < 0:
+    if n_prefill < 1 or n_decode < 1 or n_memory < 0 or n_spare < 0:
         raise ValueError(
-            f"need at least 1 prefill and 1 decode rank (memory >= 0), got "
-            f"{n_prefill}/{n_decode}/{n_memory}"
+            f"need at least 1 prefill and 1 decode rank (memory/spare "
+            f">= 0), got {n_prefill}/{n_decode}/{n_memory}/{n_spare}"
         )
     if tp < 1 or n_decode % tp:
         raise ValueError(
@@ -120,6 +131,7 @@ def serve_roles(
         ("prefill",) * n_prefill
         + ("decode",) * n_decode
         + ("memory",) * n_memory
+        + ("spare",) * n_spare
     )
 
 
@@ -147,6 +159,7 @@ def role_backends(
     prefill: str = "xla",
     decode: str = "xla",
     memory: str = "xla",
+    spare: Optional[str] = None,
 ) -> Tuple[str, ...]:
     """Per-rank engine backends keyed by serving role.
 
@@ -156,10 +169,34 @@ def role_backends(
     nodes (``"gascore"``), or any other mix; memory ranks (pure segment
     exporters, the FPGA memory-node archetype) take their own engine too.
     Feed the result to ``make_engine`` / ``gasnet.Context(backend=...)``
-    to get an ``EngineMap`` when the pools differ.
+    to get an ``EngineMap`` when the pools differ.  Spare ranks default
+    to the decode engine (they are promoted into the decode pool).
     """
-    table = {"prefill": prefill, "decode": decode, "memory": memory}
+    table = {
+        "prefill": prefill,
+        "decode": decode,
+        "memory": memory,
+        "spare": decode if spare is None else spare,
+    }
     try:
         return tuple(table[r] for r in roles)
     except KeyError as e:
         raise ValueError(f"unknown serving role {e.args[0]!r}") from None
+
+
+def promote_spare(
+    roles: Tuple[str, ...], rank: int, to: str = "decode"
+) -> Tuple[str, ...]:
+    """Elastic scale-out: promote spare ``rank`` into pool ``to`` and
+    return the regenerated role map.  Only ``"spare"`` ranks promote (a
+    live pool member never changes role mid-job), and the ring size is
+    unchanged — every derived permutation stays valid."""
+    if not (0 <= rank < len(roles)):
+        raise ValueError(f"rank {rank} outside the {len(roles)}-rank ring")
+    if roles[rank] != "spare":
+        raise ValueError(
+            f"rank {rank} has role {roles[rank]!r}, only spares promote"
+        )
+    if to not in ("prefill", "decode", "memory"):
+        raise ValueError(f"cannot promote a spare to {to!r}")
+    return roles[:rank] + (to,) + roles[rank + 1 :]

@@ -67,7 +67,10 @@ def global_norm(tree: Any) -> jax.Array:
 def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
     norm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
-    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+    scaled = jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    )
+    return scaled, norm
 
 
 def apply_updates(

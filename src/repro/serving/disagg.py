@@ -109,6 +109,10 @@ class DisaggCluster:
         prefill_us: float = 4000.0,
         tp: int = 1,
         tp_backend: Optional[str] = None,
+        heartbeat_timeout: int = 3,
+        tier_replicas: int = 1,
+        replicate_all_swaps: bool = False,
+        n_spare: int = 0,
     ):
         import jax
         import jax.numpy as jnp
@@ -118,12 +122,15 @@ class DisaggCluster:
         from repro.launch.serve import (
             PooledDecodeServer, Server, TPPooledDecodeServer,
         )
+        from repro.runtime.ft import HeartbeatMonitor
         from repro.serving import pool as pool_lib
         from repro.serving import scheduler as sched_lib
         from repro.serving import tier as tier_lib
 
         if n_memory and not paged:
             raise ValueError("memory ranks require paged=True (page swap)")
+        if n_spare and not paged:
+            raise ValueError("spare ranks require paged=True (elastic join)")
         if tp > 1:
             if not paged:
                 raise ValueError(
@@ -141,7 +148,9 @@ class DisaggCluster:
         self.model, self.ctx, self.params = model, ctx, params
         self.n_prefill, self.n_decode = n_prefill, n_decode
         self.n_memory = n_memory
-        self.n = n_prefill + n_decode + n_memory
+        self.n_spare = n_spare
+        self.n = n_prefill + n_decode + n_memory + n_spare
+        self._memory_base = n_prefill + n_decode
         self.cache_len = cache_len
         self.n_slots = n_slots
         self.node_axis = node_axis
@@ -151,12 +160,22 @@ class DisaggCluster:
         self.tp = tp
         self.tp_backend = tp_backend or decode_backend
         self.n_groups = n_decode // tp if tp else n_decode
+        self._interpret = interpret
+        self._decode_batch = decode_batch
+        self._eos_id = eos_id
 
-        self.roles = mesh_lib.serve_roles(n_prefill, n_decode, n_memory, tp=tp)
+        self.roles = mesh_lib.serve_roles(
+            n_prefill, n_decode, n_memory, tp=tp, n_spare=n_spare
+        )
         backends = mesh_lib.role_backends(
             self.roles, prefill=prefill_backend, decode=decode_backend,
             memory=memory_backend,
         )
+        self._backends = backends
+        # decode-group leader ranks, extensible: an elastic join appends a
+        # promoted spare here, so every "decode rank of group g" lookup
+        # stays a table read and survives membership changes
+        self.group_leaders = [n_prefill + g * tp for g in range(self.n_groups)]
         self.mesh = mesh_lib.make_mesh((self.n,), (node_axis,))
         self.gas = gasnet.Context(
             self.mesh,
@@ -201,25 +220,27 @@ class DisaggCluster:
             ]
             # ---- tiered KV memory: memory-only ranks + preemption ------
             self.max_swap = self.playout.n_pages  # one request per tick
+            # one request's pages per vectored swap/fetch transfer; built
+            # even without memory ranks — the elastic-join prefix
+            # migration rides the same vectored-get plane
+            self.swap_plan = sched.plan_p2p(
+                nbytes=self.max_swap * self.playout.page_bytes,
+                engine=self.gas.make_engine(),
+                costs=costs,
+            )
             if n_memory:
                 self.mem_slots = mem_slots_per_rank or (
                     2 * decode_batch * self.playout.n_pages
                 )
                 self.tier = tier_lib.MemoryTier(
-                    n_memory, self.mem_slots, self.playout.page_elems
+                    n_memory, self.mem_slots, self.playout.page_elems,
+                    replicas=max(1, min(tier_replicas, n_memory)),
                 )
                 self.seg_elems = max(
                     self.seg_elems, self.mem_slots * self.playout.page_elems
                 )
-                # one request's pages per vectored swap transfer
-                self.swap_plan = sched.plan_p2p(
-                    nbytes=self.max_swap * self.playout.page_bytes,
-                    engine=self.gas.make_engine(),
-                    costs=costs,
-                )
             else:
                 self.tier = None
-                self.swap_plan = None
             self.scheduler = sched_lib.AdmissionScheduler(
                 page_bytes=self.playout.page_bytes, costs=costs,
                 decode_step_us=decode_step_us, prefill_us=prefill_us,
@@ -355,9 +376,12 @@ class DisaggCluster:
         # ---- tiered-memory scheduler state -----------------------------
         # rid -> preemption snapshot (mode, decode pos, last token, pages)
         self._preempted: Dict[int, Dict[str, Any]] = {}
-        # staged swap-outs: (rid, d, src_offsets, dst_offsets, mem_rank)
+        # staged swap-outs: (rid, d, src_offsets, legs) — legs is a tuple
+        # of (memory rank, dst_offsets), one vectored put per replica leg
         self._swap_jobs: List[Tuple] = []
-        # staged swap-ins: (rid, d, remote_offsets, local_offsets, mem_rank)
+        # staged swap-ins: (rid, d, remote_offsets, local_offsets,
+        # src_rank) — src is a memory rank for tier resumes, a donor
+        # decode leader for elastic-join prefix migration (rid == -1)
         self._fetch_jobs: List[Tuple] = []
         self._inflight_swap: Optional[Tuple] = None
         self._inflight_fetch: Optional[Tuple] = None
@@ -366,6 +390,32 @@ class DisaggCluster:
         self._installable: Dict[int, int] = {}
         self.swap_out_bytes = 0
         self.swap_in_bytes = 0
+        # ---- fault tolerance + elasticity ------------------------------
+        # membership is tick-clocked: every live rank "beats" once per
+        # tick (in a multi-host launch the beat would be an AM), and the
+        # monitor declares a rank dead after ``heartbeat_timeout`` missed
+        # ticks — detection within K ticks by construction.
+        self._tick_no = 0
+        self.monitor = HeartbeatMonitor(
+            list(range(self.n)),
+            timeout_s=float(heartbeat_timeout),
+            clock=lambda: float(self._tick_no),
+        )
+        self.killed: set = set()       # fault injection: ranks to stop beating
+        self.dead_ranks: set = set()   # monitor-declared failures
+        self.dead_groups: set = set()  # decode groups with a dead member
+        self.fault_hook = None         # callable(cluster, phase, tick)
+        self.beat_filter = None        # callable(rank, tick) -> bool
+        self.replicate_all_swaps = replicate_all_swaps
+        self.max_replicas = self.tier.replicas if self.tier is not None else 1
+        self.rank_failures = 0
+        self.recovered_recompute = 0
+        self.recovered_reroutes = 0
+        self.elastic_joins = 0
+        self.migrated_prefix_pages = 0
+        # in-flight prefix-index migration to a freshly joined group:
+        # {"donor": g, "n": pages} until its vectored get lands
+        self._pending_migration: Optional[Dict[str, int]] = None
 
     # ------------------------------------------------------------------ #
     # role views
@@ -374,14 +424,25 @@ class DisaggCluster:
         """Rank of decode GROUP ``d``'s leader (= its only member at
         tp=1): the rank whose pool partition backs the group's store and
         which receives the group's control-plane AMs."""
-        return self.n_prefill + d * self.tp
+        return self.group_leaders[d]
 
     def member_rank(self, g: int, s: int) -> int:
         """Rank of member ``s`` of decode group ``g`` (its head shard)."""
-        return self.n_prefill + g * self.tp + s
+        return self.group_leaders[g] + s
 
     def memory_rank(self, m: int) -> int:
-        return self.n_prefill + self.n_decode + m
+        return self._memory_base + m
+
+    def _group_down(self, g: int) -> bool:
+        """True when any member rank of decode group ``g`` is killed or
+        declared dead — a TP group fails as a unit."""
+        if g in self.dead_groups:
+            return True
+        return any(
+            self.member_rank(g, s) in self.killed
+            or self.member_rank(g, s) in self.dead_ranks
+            for s in range(self.tp)
+        )
 
     def _alias_store_mem(self) -> None:
         """Point each decode store's physical page array at its group
@@ -425,7 +486,7 @@ class DisaggCluster:
     def _transfer_fn(
         self,
         perm: Tuple[int, ...],
-        perm_swap: Optional[Tuple[int, ...]] = None,
+        perm_swap: Optional[Tuple[Tuple[int, ...], ...]] = None,
         perm_fetch: Optional[Tuple[int, ...]] = None,
     ) -> Any:
         key = (perm, perm_swap, perm_fetch)
@@ -492,18 +553,24 @@ class DisaggCluster:
             # tier plane: swap-out rides the vectored put (victim pages +
             # tier slot offsets in one command block), swap-in the
             # vectored get — both split-phase, in flight alongside the
-            # admission puts and the AM control plane.
+            # admission puts and the AM control plane.  Replication fans
+            # the SAME victim pages once per placement leg: one vectored
+            # put per replica, each to its own memory rank (perm_swap is
+            # a tuple of per-leg permutations; unused legs gate off via
+            # zero flags).
             swap_handles = []
             fetch_handles = None
             if perm_swap is not None:
-                swap_handles, _ = tier_lib.swap_out_pages(
-                    node, kvseg,
-                    swap_meta[0, :, 0], swap_meta[0, :, 1],
-                    to=gasnet.Perm(perm_swap),
-                    page_elems=self.playout.page_elems,
-                    flags=swap_meta[0, :, 2],
-                    plan=self.swap_plan,
-                )
+                for li, pm in enumerate(perm_swap):
+                    hs, _ = tier_lib.swap_out_pages(
+                        node, kvseg,
+                        swap_meta[0, li, :, 0], swap_meta[0, li, :, 1],
+                        to=gasnet.Perm(pm),
+                        page_elems=self.playout.page_elems,
+                        flags=swap_meta[0, li, :, 2],
+                        plan=self.swap_plan,
+                    )
+                    swap_handles.extend(hs)
             if perm_fetch is not None:
                 # in-step page prefetch: the pool's split-phase vectored
                 # fetch (plan-batched get_nbv) is issued HERE and drained
@@ -580,7 +647,14 @@ class DisaggCluster:
         tried in order of *prefix affinity* — the rank whose pool already
         holds the longest leading run of the prompt's pages wins, so the
         shared pages are mapped instead of moved."""
-        order = [(self._rr_decode + i) % self.n_groups for i in range(self.n_groups)]
+        order = [
+            d
+            for d in (
+                (self._rr_decode + i) % self.n_groups
+                for i in range(self.n_groups)
+            )
+            if not self._group_down(d)
+        ]
         if self.paged and prompt is not None:
             matches = {d: self.stores[d].prefix_match(prompt) for d in order}
             best = max(matches.values())
@@ -625,6 +699,8 @@ class DisaggCluster:
         taken = {push[1] for push in self.pending_push if push is not None}
         order = self._admission_queue()
         for p in range(self.n_prefill):
+            if p in self.killed or p in self.dead_ranks:
+                continue  # dead prefill workers take no new requests
             if self.pending_push[p] is not None or not order:
                 continue
             req = order[0]
@@ -687,6 +763,8 @@ class DisaggCluster:
         slo = getattr(req, "slo", None) or SLO()
         expired = time.monotonic() > req.t_enqueue + slo.ttft_deadline_s
         for d in range(self.n_groups):
+            if self._group_down(d):
+                continue
             shortage = need - self.stores[d].n_free
             if shortage <= 0:
                 continue  # pages are not this rank's blocker (slots are)
@@ -729,9 +807,20 @@ class DisaggCluster:
         mode, _, _ = self.scheduler.choose_mode(rid, n_mat)
         hold = None
         if mode == "swap":
+            # replication policy: hot (prefix-shared) pages get every
+            # tier replica — losing them would take several requests'
+            # prefixes down at once; cold private pages default to one
+            # leg unless the cluster opts everything in.
+            want = 1
+            if self.tier.replicas > 1 and (
+                self.replicate_all_swaps or store.shared_page_count(rid) > 0
+            ):
+                want = self.tier.replicas
             try:
                 store.materialize_through(rid, n_mat)
-                hold = self.tier.plan_swap_out(rid, list(range(n_mat)))
+                hold = self.tier.plan_swap_out(
+                    rid, list(range(n_mat)), replicas=want
+                )
             except (pool_lib.OutOfPagesError, tier_lib.OutOfSlotsError):
                 mode = "recompute"  # no room to stage: drop and replay
         if mode == "swap":
@@ -740,16 +829,21 @@ class DisaggCluster:
             # and prompt pages are written once at admission (prefix
             # sharers included) — so unlike the old dense decode rows
             # there is nothing to stage; the swap-out job just ships the
-            # victim's resident pages as they sit in the mirror.
+            # victim's resident pages as they sit in the mirror, fanned
+            # once per placement leg (ONE put_nbv per replica).
             table = store.page_table(rid)
             src = [table[lp] * self.playout.page_elems for lp in range(n_mat)]
-            dst = [
-                self.tier.slot_offset(hold.rank, s) for s in hold.slots
-            ]
-            self._swap_jobs.append(
-                (rid, d, src, dst, self.memory_rank(hold.rank))
+            legs = tuple(
+                (
+                    self.memory_rank(pl.rank),
+                    [self.tier.slot_offset(pl.rank, s) for s in pl.slots],
+                )
+                for pl in hold.placements
             )
-            self.swap_out_bytes += n_mat * self.playout.page_bytes
+            self._swap_jobs.append((rid, d, src, legs))
+            self.swap_out_bytes += (
+                n_mat * self.playout.page_bytes * len(legs)
+            )
         else:
             store.evict_request(rid)
             self.queue.append(req)  # resume = re-prefill + replay
@@ -812,6 +906,8 @@ class DisaggCluster:
         if not self.paged:
             return
         for g, server in enumerate(self.decode_servers):
+            if self._group_down(g):
+                continue
             for pp, row in server.drain_dirty().items():
                 if self.tp > 1:
                     # stacked (tp, shard_elems) rows: one slice per member
@@ -840,6 +936,10 @@ class DisaggCluster:
             ):
                 continue
             hold = self.tier.holdings[rid]
+            # quorum restore: read from the first placement leg whose
+            # memory rank is still alive — with a replica surviving, a
+            # dead primary is invisible to the resume path
+            pl = self.tier.restore_placement(rid)
             # growth headroom: when the resume position opens a FRESH page
             # (position on a page boundary), the first decode tick after
             # install needs one page beyond the restored set — resuming
@@ -849,16 +949,18 @@ class DisaggCluster:
                 need += 1
             best = None
             for d in range(self.n_groups):
+                if self._group_down(d):
+                    continue
                 if self.stores[d].n_free >= need:
                     best = d
                     break
             if best is None:
                 continue
             phys = self.stores[best].admit_resume(rid, hold.logical)
-            remote = [self.tier.slot_offset(hold.rank, s) for s in hold.slots]
+            remote = [self.tier.slot_offset(pl.rank, s) for s in pl.slots]
             local = [pp * self.playout.page_elems for pp in phys]
             self._fetch_jobs.append(
-                (rid, best, remote, local, self.memory_rank(hold.rank))
+                (rid, best, remote, local, self.memory_rank(pl.rank))
             )
             snap["staged"] = True
             return
@@ -885,7 +987,12 @@ class DisaggCluster:
                     if r is not None and r.rid == rid
                 )
                 server.start_replay(row, snap["replay"])
-            self.tier.release(rid)
+            # a memory-rank failure may have scrubbed the holding after
+            # the pages landed (they are already safe in the pool shard)
+            if rid in self.tier.holdings:
+                self.tier.release(rid)
+            for s in self.stores:
+                s.note_swap_in(rid)
             del self._installable[rid]
             del self._preempted[rid]
             self.scheduler.on_admitted(rid, time.monotonic())
@@ -920,18 +1027,30 @@ class DisaggCluster:
             edges = {p: self.decode_rank(d) for p, (_, d, _, _, _) in pushes}
             perm = kv_lib.handoff_permutation(self.n, edges)
         # tier plane: at most one swap-out and one swap-in job per tick,
-        # each its own completed bijection (decode rank -> memory rank)
+        # each its own completed bijection (decode rank -> memory rank);
+        # a replicated swap-out fans one bijection per placement leg
         perm_swap = perm_fetch = None
-        swap_meta = np.zeros((self.n, self.max_swap, 3), np.int32)
+        R = getattr(self, "max_replicas", 1)
+        swap_meta = np.zeros((self.n, R, self.max_swap, 3), np.int32)
         fetch_meta = np.zeros((self.n, self.max_swap, 3), np.int32)
-        if self.paged and self.n_memory:
+        if self.paged:
             if self._swap_jobs:
                 job = self._swap_jobs.pop(0)
-                _, d, src, dst, mrank = job
+                _, d, src, legs = job
                 rank = self.decode_rank(d)
-                for j, (s, t) in enumerate(zip(src, dst)):
-                    swap_meta[rank, j] = (s, t, 1)
-                perm_swap = kv_lib.handoff_permutation(self.n, {rank: mrank})
+                perms = []
+                for li, (mrank, dst) in enumerate(legs):
+                    for j, (s, t) in enumerate(zip(src, dst)):
+                        swap_meta[rank, li, j] = (s, t, 1)
+                    perms.append(
+                        kv_lib.handoff_permutation(self.n, {rank: mrank})
+                    )
+                # pad unused legs with the identity permutation (their
+                # flags are zero, so nothing ships) — the leg count stays
+                # static across ticks and the jit cache stays small
+                while len(perms) < R:
+                    perms.append(kv_lib.handoff_permutation(self.n, {}))
+                perm_swap = tuple(perms)
                 self._inflight_swap = job
             if self._fetch_jobs:
                 job = self._fetch_jobs.pop(0)
@@ -1004,6 +1123,8 @@ class DisaggCluster:
         newly finished requests as completion reports for the next
         transfer launch."""
         for d, server in enumerate(self.decode_servers):
+            if self._group_down(d):
+                continue  # a dead rank computes nothing from the kill on
             self.decoded_tokens += server.step()
             fresh = server.finished[self._finished_seen[d] :]
             self._finished_seen[d] = len(server.finished)
@@ -1023,6 +1144,12 @@ class DisaggCluster:
         # scheduler clears inbox flags after installs
         kvseg, inbox, acks, done, dropped = (np.array(r) for r in results)
         self.kvseg, self.inbox, self.acks, self.done = kvseg, inbox, acks, done
+        # death emulation: the consumed result replaces the whole segment
+        # array, so re-poison every dead rank's mirror — any recovery path
+        # that erroneously reads a "dead" rank's bytes breaks token parity
+        # instead of silently passing
+        for r in self.killed | self.dead_ranks:
+            self.kvseg[r, :] = np.nan
         if self.paged:
             self._alias_store_mem()  # fresh host mirror of the pool shards
         self.dropped_am += int(dropped.sum())
@@ -1030,26 +1157,64 @@ class DisaggCluster:
         # pool pages (never before the bytes are safe in the memory rank);
         # a landed swap-in becomes installable into a decode row.
         if self._inflight_swap is not None:
-            rid, d, src, _, _ = self._inflight_swap
-            self.stores[d].evict_request(rid)
-            self._preempted[rid]["swapped"] = True
-            self._inflight_swap = None
+            rid, d, src, legs = self._inflight_swap
+            if self._group_down(d):
+                # the source rank died mid-put: the tier bytes are not
+                # trustworthy — requeue; detection converts to recompute
+                self._swap_jobs.insert(0, self._inflight_swap)
+                self._inflight_swap = None
+            else:
+                self.stores[d].note_swap_out(
+                    rid, len(src), replicas=len(legs) - 1
+                )
+                self.stores[d].evict_request(rid)
+                self._preempted[rid]["swapped"] = True
+                self._inflight_swap = None
         if self._inflight_fetch is not None:
-            rid, d, remote, _, _ = self._inflight_fetch
-            self._installable[rid] = d
-            self.swap_in_bytes += len(remote) * self.playout.page_bytes
-            self._inflight_fetch = None
-        # prefill side: retire acknowledged pushes
+            rid, d, remote, _, src_rank = self._inflight_fetch
+            if (
+                src_rank in self.killed
+                or src_rank in self.dead_ranks
+                or (rid >= 0 and self._group_down(d))
+            ):
+                # source or target died mid-get: the fetched bytes are
+                # poison — requeue; detection re-stages or recomputes
+                self._fetch_jobs.insert(0, self._inflight_fetch)
+                self._inflight_fetch = None
+            elif rid < 0:
+                # elastic-join prefix migration landed: the joined group's
+                # adopted pages now hold the donor's prefix bytes — unpin
+                # the donor side and count the moved pages
+                mig = self._pending_migration or {}
+                donor = mig.get("donor")
+                if donor is not None:
+                    self.stores[donor].unpin_pages()
+                self.migrated_prefix_pages += len(remote)
+                self._pending_migration = None
+                self.swap_in_bytes += len(remote) * self.playout.page_bytes
+                self._inflight_fetch = None
+            else:
+                self._installable[rid] = d
+                self.swap_in_bytes += len(remote) * self.playout.page_bytes
+                self._inflight_fetch = None
+        # prefill side: retire acknowledged pushes — but NEVER on the word
+        # of a dead group: in the emulation the killed rank's program
+        # still ran, so its acks must be voided host-side (on real
+        # hardware they would simply never arrive)
         for p, push in enumerate(self.pending_push):
             if push is None:
                 continue
             req, d, slot, _, _ = push
+            if self._group_down(d):
+                continue
             if int(self.acks[p, slot]) == req.rid + 1:
                 self.kv_acked += 1
                 req.origin_rank = p
                 self.pending_push[p] = None
         # decode side: install staged blocks into servers with free rows
         for d, server in enumerate(self.decode_servers):
+            if self._group_down(d):
+                continue
             rank = self.decode_rank(d)
             for slot in range(self.n_slots):
                 occupied = int(self.inbox[rank, slot, 0])
@@ -1096,16 +1261,341 @@ class DisaggCluster:
         )
 
     # ------------------------------------------------------------------ #
+    # fault tolerance: heartbeats, death recovery, elastic scale-out
+    # ------------------------------------------------------------------ #
+    def kill_rank(self, rank: int) -> None:
+        """Fault injection: rank ``rank`` stops beating, computing, and
+        acknowledging from this instant.  Its segment mirror is poisoned
+        with NaN so any recovery path that erroneously consumes a "dead"
+        rank's bytes breaks token parity instead of silently passing.
+        Detection is automatic within ``heartbeat_timeout`` ticks."""
+        if not self.paged:
+            raise ValueError("fault injection requires paged=True")
+        if not (0 <= rank < self.n):
+            raise ValueError(f"rank {rank} outside the {self.n}-rank ring")
+        self.killed.add(rank)
+        self.kvseg[rank, :] = np.nan
+
+    def _heartbeat(self) -> None:
+        """Tick-clocked liveness: every live rank beats once per tick (on
+        a real cluster the beat is an AM to the coordinator); the monitor
+        declares a silent rank dead after ``heartbeat_timeout`` missed
+        ticks and recovery runs before any scheduling decision."""
+        if not self.paged:
+            return
+        for r in range(self.n):
+            if r in self.killed or r in self.dead_ranks:
+                continue
+            if self.beat_filter is not None and not self.beat_filter(
+                r, self._tick_no
+            ):
+                continue
+            self.monitor.beat(r)
+        for r in self.monitor.check():
+            self._on_rank_failed(r)
+
+    def _on_rank_failed(self, rank: int) -> None:
+        if rank in self.dead_ranks:
+            return
+        self.dead_ranks.add(rank)
+        self.rank_failures += 1
+        role = self.roles[rank]
+        if role == "decode":
+            g = next(
+                g for g, lead in enumerate(self.group_leaders)
+                if lead <= rank < lead + self.tp
+            )
+            self._recover_decode(g)
+        elif role == "memory":
+            self._recover_memory(rank - self._memory_base)
+        elif role == "prefill":
+            self._recover_prefill(rank)
+        # spares are idle: nothing to recover
+        self._rebuild_plans()
+
+    def _to_recompute(self, rid: int) -> None:
+        """Route a request whose pages (pool or tier) died through the
+        bit-exact recompute-resume path: re-prefill, replay the generated
+        history, continue — the tokens already streamed are kept."""
+        req = self.by_rid[rid]
+        snap = self._preempted.get(rid)
+        if snap is None:
+            self._preempted[rid] = {
+                "mode": "recompute",
+                "position": 0,
+                "last_token": 0,
+                "n_mat": 0,
+                "swapped": False,
+                "replay": [],
+            }
+            if self.scheduler is not None:
+                self.scheduler.on_preempted(rid, "recompute")
+        else:
+            snap["mode"] = "recompute"
+            snap["swapped"] = False
+            snap.pop("staged", None)
+        if req not in self.queue:
+            self.queue.append(req)
+        self.recovered_recompute += 1
+
+    def _recover_decode(self, g: int) -> None:
+        """Decode group ``g`` died: re-route its in-flight admissions,
+        convert its resident requests to recompute-resume, re-stage its
+        pending tier restores to surviving groups, and retire its pool
+        shard.  Detection-to-recovery is one host step — the surviving
+        ranks never stall."""
+        from repro.serving import pool as pool_lib
+
+        self.dead_groups.add(g)
+        server = self.decode_servers[g]
+        lead = self.decode_rank(g)
+        # in-flight pushes targeting the dead group re-route: the pages
+        # never became visible to a live rank (acks from a dead group are
+        # voided), so the request re-enters the queue; the prefill token
+        # it already produced is kept, so re-admission elsewhere is
+        # bit-exact
+        for p, push in enumerate(self.pending_push):
+            if push is not None and push[1] == g:
+                self.pending_push[p] = None
+                self.queue.append(push[0])
+                self.recovered_reroutes += 1
+        self.staged[g].clear()
+        self.inbox[lead] = 0
+        # completion AMs the dead group can no longer send
+        self._done_queue = [e for e in self._done_queue if e[0] != g]
+        # staged swap-outs FROM the dead group: the victim's pages lived
+        # in its (now lost) pool shard — release the planned tier slots
+        # and recompute
+        for job in [j for j in self._swap_jobs if j[1] == g]:
+            self._swap_jobs.remove(job)
+            rid = job[0]
+            if self.tier is not None and rid in self.tier.holdings:
+                self.tier.release(rid)
+            self._to_recompute(rid)
+        # staged fetches INTO the dead group: the tier copy survives
+        # (holdings release only at install) — re-stage to a live group
+        for job in [j for j in self._fetch_jobs if j[1] == g]:
+            self._fetch_jobs.remove(job)
+            if job[0] >= 0:
+                self._preempted[job[0]]["staged"] = False
+        # prefix migrations SOURCED at the dead group: the donor bytes
+        # never arrived — drop the target's adopted-but-empty pages
+        for job in [
+            j for j in self._fetch_jobs if j[0] < 0 and j[4] == lead
+        ]:
+            self._fetch_jobs.remove(job)
+            self.stores[job[1]].release_prefix_cache()
+            self._pending_migration = None
+        # restored-but-not-installed requests on the dead group: same
+        # re-stage (their pool copy died with the shard)
+        for rid, d in list(self._installable.items()):
+            if d == g:
+                del self._installable[rid]
+                self._preempted[rid]["staged"] = False
+        # resident rows recover through recompute-resume replay
+        for i, r in enumerate(server.active):
+            if r is None:
+                continue
+            server.evict_row(i)
+            self._to_recompute(r.rid)
+        for req in list(server.queue):
+            server.queue.remove(req)
+            if req not in self.queue:
+                self.queue.append(req)
+        # fresh (empty) shard bookkeeping so survivor invariants hold and
+        # nothing references the lost pages
+        self.stores[g] = pool_lib.PagedKVStore(
+            self.shard_layout, self.pages_per_rank
+        )
+        server.store = self.stores[g]
+        self._alias_store_mem()
+
+    def _recover_memory(self, m: int) -> None:
+        """Memory rank ``m`` died: scrub its tier placements.  Requests
+        with a surviving replica leg restore from it (the quorum read);
+        requests whose last copy died fall back to recompute-resume."""
+        mrank = self.memory_rank(m)
+        handled: set = set()
+        # staged swap-outs with a leg on the dead rank: drop that leg;
+        # a job with no live leg left converts to recompute
+        for job in list(self._swap_jobs):
+            rid, d, src, legs = job
+            live = tuple(leg for leg in legs if leg[0] != mrank)
+            if len(live) == len(legs):
+                continue
+            if live:
+                self._swap_jobs[self._swap_jobs.index(job)] = (
+                    rid, d, src, live,
+                )
+            else:
+                self._swap_jobs.remove(job)
+                if not self._group_down(d):
+                    self.stores[d].evict_request(rid)
+                if rid in self.tier.holdings:
+                    self.tier.release(rid)
+                self._to_recompute(rid)
+                handled.add(rid)
+        # staged fetches sourced at the dead rank: undo the target-side
+        # resume allocation; the re-stage picks a surviving leg
+        for job in [
+            j for j in self._fetch_jobs if j[0] >= 0 and j[4] == mrank
+        ]:
+            self._fetch_jobs.remove(job)
+            rid, d = job[0], job[1]
+            if not self._group_down(d):
+                self.stores[d].evict_request(rid)
+            self._preempted[rid]["staged"] = False
+        lost = self.tier.mark_failed(m)
+        for rid in lost:
+            if rid in handled:
+                continue
+            if rid in self._installable:
+                continue  # restored copy already safe in a pool shard
+            self._to_recompute(rid)
+
+    def _recover_prefill(self, p: int) -> None:
+        """Prefill worker ``p`` died: its in-flight push (if any) is
+        undone on the live target and the request re-queued for a
+        surviving worker (the prefill is recomputed — still bit-exact,
+        prefill is deterministic)."""
+        push = self.pending_push[p]
+        if push is None:
+            return
+        req, d, slot, _, _ = push
+        self.pending_push[p] = None
+        if self.paged and not self._group_down(d):
+            self.stores[d].evict_request(req.rid)
+        self.staged[d].pop(slot, None)
+        if req not in self.queue:
+            self.queue.append(req)
+        self.recovered_reroutes += 1
+
+    def _rebuild_plans(self) -> None:
+        """Re-plan the collective schedules for the surviving engine map:
+        a dead rank's engine leaves the cost model, so segment counts and
+        batching re-derive from the ranks that remain (ACCL+-style
+        re-planning on membership change).  The jitted transfer cache is
+        dropped — its programs closed over the stale plans."""
+        from repro.core import engine as engine_lib
+        from repro.core import sched
+
+        alive = tuple(
+            b for r, b in enumerate(self._backends)
+            if r not in self.dead_ranks
+        )
+        if not alive:
+            return
+        engine = engine_lib.make_engine(
+            alive, self.node_axis, len(alive), interpret=self._interpret
+        )
+        if self.paged:
+            self.plan = sched.plan_p2p(
+                nbytes=self.shard_layout.page_bytes,
+                engine=engine, costs=self.costs,
+            )
+            self.swap_plan = sched.plan_p2p(
+                nbytes=self.max_swap * self.playout.page_bytes,
+                engine=engine, costs=self.costs,
+            )
+        else:
+            self.plan = sched.plan_p2p(
+                nbytes=self.block_bytes, engine=engine, costs=self.costs,
+            )
+        self._transfer_fns.clear()
+
+    def join_decode_rank(self) -> int:
+        """Elastic scale-out: promote an idle spare rank into a NEW
+        decode group (``launch.mesh.promote_spare`` regenerates the role
+        map; the ring size never changes, so every permutation and
+        segment shape stays valid).  The joined rank gets a fresh pool
+        shard, and the busiest live group's prefix index migrates to it —
+        index entries adopted host-side, page bytes shipped as ONE
+        vectored RMA get on the swap plane.  Returns the promoted rank."""
+        from repro.launch.serve import PooledDecodeServer
+        from repro.serving import pool as pool_lib
+
+        if not self.paged or self.tp != 1:
+            raise ValueError("elastic join requires paged=True and tp == 1")
+        spare = next(
+            (
+                r for r, role in enumerate(self.roles)
+                if role == "spare"
+                and r not in self.killed
+                and r not in self.dead_ranks
+            ),
+            None,
+        )
+        if spare is None:
+            raise RuntimeError("no live spare rank to promote")
+        self.roles = mesh_lib.promote_spare(self.roles, spare, to="decode")
+        g = self.n_groups
+        self.group_leaders.append(spare)
+        store = pool_lib.PagedKVStore(self.shard_layout, self.pages_per_rank)
+        self.stores.append(store)
+        self.shard_mems.append([None])
+        self.staged.append({})
+        self._finished_seen.append(0)
+        self.n_groups += 1
+        self.decode_servers.append(
+            PooledDecodeServer(
+                self.model, self.ctx, self.params, self._decode_batch,
+                self.cache_len, store=store, eos_id=self._eos_id,
+                on_page_shortage=(
+                    lambda rid, need, g=g:
+                    self._decode_shortage(g, rid, need)
+                ),
+            )
+        )
+        self._alias_store_mem()
+        self.elastic_joins += 1
+        # prefix-index migration: warm the new shard from the live group
+        # holding the largest index so affinity routing can target it
+        donor, best = None, 0
+        for d in range(self.n_groups - 1):
+            if self._group_down(d):
+                continue
+            n = len(self.stores[d].prefix_entries())
+            if n > best:
+                donor, best = d, n
+        if donor is not None and self._pending_migration is None:
+            entries = self.stores[donor].prefix_entries()[: self.max_swap]
+            pairs = store.adopt_prefix(entries)
+            if pairs:
+                self.stores[donor].pin_pages([dp for dp, _ in pairs])
+                remote = [
+                    dp * self.playout.page_elems for dp, _ in pairs
+                ]
+                local = [
+                    lp * self.playout.page_elems for _, lp in pairs
+                ]
+                self._fetch_jobs.append(
+                    (-1, g, remote, local, self.decode_rank(donor))
+                )
+                self._pending_migration = {
+                    "donor": donor, "n": len(pairs),
+                }
+        return spare
+
+    # ------------------------------------------------------------------ #
     def tick(self) -> None:
         """One cluster tick: prefill (possibly preempting for the queue
         head), stage resumes, launch the KV transfer (admission puts +
         swap puts + swap-in gets + AM control plane), overlap a decode
         step with it, consume the results, and install restored
         requests."""
+        self._tick_no += 1
+        if self.fault_hook is not None:
+            self.fault_hook(self, "tick", self._tick_no)
+        self._heartbeat()
         self._run_prefills()
         self._run_resumes()
         results = self._launch_transfer()
         self._decode_step()  # overlaps the in-flight transfer
+        if self.fault_hook is not None:
+            # fires between transfer launch and consume: a kill here
+            # lands AFTER the put went on the wire but BEFORE its
+            # kv_ready ack is processed — the mid-handoff death window
+            self.fault_hook(self, "pre_consume", self._tick_no)
         if results is not None:
             self._consume_transfer(results)
         self._apply_decode_writes()
@@ -1124,6 +1614,7 @@ class DisaggCluster:
             and not self._installable
             and self._inflight_swap is None
             and self._inflight_fetch is None
+            and self._pending_migration is None
         )
 
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
@@ -1185,6 +1676,12 @@ class DisaggCluster:
                     getattr(s, "paged_decode_steps", 0)
                     for s in self.decode_servers
                 ),
+                "rank_failures": self.rank_failures,
+                "recovered_recompute": self.recovered_recompute,
+                "recovered_reroutes": self.recovered_reroutes,
+                "elastic_joins": self.elastic_joins,
+                "migrated_prefix_pages": self.migrated_prefix_pages,
+                "heartbeat_failed": list(self.monitor.failed),
             })
             if self.scheduler is not None:
                 stats.update(self.scheduler.stats())

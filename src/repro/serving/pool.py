@@ -68,6 +68,8 @@ __all__ = [
     "writable",
     "check_pool",
     "AdmitPlan",
+    "PREFIX_CACHE_RID",
+    "PIN_RID",
     "PagedKVStore",
     "PoolMap",
     "fetch_pages",
@@ -79,6 +81,19 @@ __all__ = [
 #: is written, and :meth:`PagedKVStore.gather` synthesises the absent page
 #: from :meth:`PagedLayout.empty_page_row`.
 UNMATERIALIZED = -1
+
+#: Pseudo-table rid owning pages a rank ADOPTED into its prefix index from
+#: a migration donor (elastic scale-out): the pages are live and prefix-
+#: shareable but belong to no request, so they hold their refcount through
+#: a reserved table entry — ``check_pool``'s refcount==table-multiplicity
+#: invariant covers them unchanged.
+PREFIX_CACHE_RID = -1
+
+#: Pseudo-table rid pinning a migration DONOR's pages for the duration of
+#: an in-flight page transfer: the extra reference keeps the physical
+#: pages (and their bytes) alive even if every owning request retires
+#: mid-transfer.  Dropped by :meth:`PagedKVStore.unpin_pages`.
+PIN_RID = -2
 
 
 # --------------------------------------------------------------------------- #
@@ -598,6 +613,11 @@ class PagedKVStore:
         self._page_key: Dict[int, Tuple[int, ...]] = {}
         self.prefix_hits = 0
         self.prefix_misses = 0
+        # replica-aware swap bookkeeping (fault tolerance): how many pages
+        # left this shard under each durability level, and which evicted
+        # requests still have replicated tier copies
+        self.swap_out_replica_pages = 0
+        self.swapped_replicated: Dict[int, int] = {}
 
     # ------------------------------------------------------------------ #
     def plan_admit(self, prompt: Sequence[int], lazy: bool = False) -> AdmitPlan:
@@ -823,6 +843,87 @@ class PagedKVStore:
         self.tables[rid] = tuple(table)
         return phys
 
+    # ---- replica-aware swap bookkeeping (fault tolerance) ------------- #
+    def shared_page_count(self, rid: int) -> int:
+        """Materialised pages of ``rid`` referenced by MORE than one table
+        — the hot/prefix-shared pages whose tier swap-outs are worth
+        replicating (losing them loses every sharer's prefix)."""
+        table = self.tables.get(rid, ())
+        return sum(
+            1
+            for p in table
+            if p != UNMATERIALIZED and self.state.refcnt[p] > 1
+        )
+
+    def note_swap_out(self, rid: int, n_pages: int, replicas: int = 0) -> None:
+        """Record that ``rid``'s swap-out left this shard with
+        ``replicas`` EXTRA tier copies (0 = unreplicated).  Purely
+        bookkeeping — the tier owns the placements; the pool remembers
+        the durability so recovery can tell swap-resume from recompute."""
+        if replicas > 0:
+            self.swap_out_replica_pages += int(n_pages) * int(replicas)
+            self.swapped_replicated[rid] = int(replicas)
+
+    def note_swap_in(self, rid: int) -> None:
+        """Forget a swapped request's replica record (resume or abort)."""
+        self.swapped_replicated.pop(rid, None)
+
+    # ---- prefix-index migration (elastic scale-out) ------------------- #
+    def prefix_entries(self) -> List[Tuple[Tuple[int, ...], int]]:
+        """The resident prefix index as ``(chain_key, physical_page)``
+        rows, shortest chains first — adoption order must follow chain
+        order so a capped migration still transfers usable leading runs
+        (``prefix_match`` walks keys from the front)."""
+        return sorted(self._prefix.items(), key=lambda kv: len(kv[0]))
+
+    def adopt_prefix(
+        self, entries: Sequence[Tuple[Tuple[int, ...], int]]
+    ) -> List[Tuple[int, int]]:
+        """Adopt a donor's prefix index: allocate one local physical page
+        per new chain key and index it, owned by the
+        :data:`PREFIX_CACHE_RID` pseudo-table (live, shareable, owned by
+        no request).  Returns ``(donor_physical, local_physical)`` pairs —
+        the vectored-RMA transfer list; the PAYLOAD bytes must land at
+        the local pages (over the wire) before any sharer decodes.
+        Already-present keys are skipped; stops early when the pool
+        cannot fit another page."""
+        adopted: List[Tuple[int, int]] = []
+        cache = list(self.tables.get(PREFIX_CACHE_RID, ()))
+        for key, donor_pp in entries:
+            key = tuple(int(t) for t in key)
+            if key in self._prefix:
+                continue
+            try:
+                self.state, (pp,) = alloc(self.state, 1)
+            except OutOfPagesError:
+                break
+            self._prefix[key] = pp
+            self._page_key[pp] = key
+            cache.append(pp)
+            adopted.append((int(donor_pp), pp))
+        if cache:
+            self.tables[PREFIX_CACHE_RID] = tuple(cache)
+        return adopted
+
+    def release_prefix_cache(self) -> int:
+        """Drop every adopted-but-unowned prefix page (pressure relief or
+        shutdown); pages shared with live requests stay with them."""
+        table = self.tables.pop(PREFIX_CACHE_RID, ())
+        self._drop_refs(table)
+        return len(table)
+
+    def pin_pages(self, pages: Sequence[int]) -> None:
+        """Hold an extra reference on ``pages`` (a migration donor's
+        transfer set) under the :data:`PIN_RID` pseudo-table so retiring
+        owners cannot recycle them while the bytes are on the wire."""
+        pages = tuple(int(p) for p in pages)
+        self.state = fork(self.state, pages)
+        self.tables[PIN_RID] = self.tables.get(PIN_RID, ()) + pages
+
+    def unpin_pages(self) -> None:
+        """Drop every migration pin (the transfer landed or aborted)."""
+        self._drop_refs(self.tables.pop(PIN_RID, ()))
+
     # ------------------------------------------------------------------ #
     @property
     def n_free(self) -> int:
@@ -834,6 +935,8 @@ class PagedKVStore:
             "n_free": self.state.n_free,
             "prefix_hits": self.prefix_hits,
             "prefix_misses": self.prefix_misses,
+            "swap_out_replica_pages": self.swap_out_replica_pages,
+            "prefix_cache_pages": len(self.tables.get(PREFIX_CACHE_RID, ())),
         }
 
 

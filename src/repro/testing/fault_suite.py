@@ -1,0 +1,360 @@
+"""Fault-injection suite: ranks die, join, and recover mid-flight.
+
+Deterministic rank-kill / heartbeat-delay injectors over the lockstep
+single-process cluster (6 host devices).  Every scenario compares a
+faulted run against its no-failure twin and requires BIT-IDENTICAL
+tokens — recovery that silently corrupts output cannot pass, because a
+killed rank's segment mirror is poisoned with NaN the instant it dies.
+
+Scenarios (``--fast`` runs the first, third, and fourth — the fixed-seed
+PR subset; the full run adds the chaos scenario, seeded for nightly
+randomisation via ``--seed``):
+
+1. kill-a-decode-rank: 1P+2D+2M, one decode rank killed in the
+   mid-KV-handoff window (after its admission put launched, before the
+   ``kv_ready`` ack is consumed) — every request completes bit-exactly,
+   pool/tier invariants hold on all survivors.
+2. quorum restore: ``tier_replicas=2`` under pressure, the PRIMARY leg's
+   memory rank killed while requests sit swapped out — restores read the
+   surviving replica (``get_nbv`` quorum), zero recompute fallbacks.
+3. elastic join: a spare rank promotes into a new decode group, the
+   prefix index migrates over one vectored RMA get, and the joined rank
+   serves requests with token parity.
+4. heartbeat delay: beats delayed for fewer ticks than the timeout must
+   NOT trip failure detection (no false positives).
+5. chaos(seed): a randomised kill (role, tick, phase drawn from the
+   seed) over the standard workload — parity + invariants, any seed.
+"""
+
+import argparse
+import os
+
+if __name__ == "__main__":
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=6"
+    )
+
+import numpy as np
+
+PAGE_TOKENS = 8
+
+
+class FaultInjector:
+    """Deterministic fault plan driven by the cluster's fault hook.
+
+    Each event is ``{"tick": T, "phase": p, "kill": rank_or_fn}`` — at
+    the first hook firing with phase ``p`` and tick >= ``T`` the rank (or
+    ``fn(cluster) -> rank | None``; None retries next firing) is killed.
+    """
+
+    def __init__(self, events):
+        self.events = list(events)
+        self.log = []
+
+    def __call__(self, cluster, phase, tick):
+        for ev in list(self.events):
+            if ev["phase"] != phase or tick < ev["tick"]:
+                continue
+            rank = ev["kill"]
+            if callable(rank):
+                rank = rank(cluster)
+            if rank is None:
+                continue  # condition not met yet — retry on later ticks
+            cluster.kill_rank(rank)
+            self.log.append((tick, phase, rank))
+            self.events.remove(ev)
+
+
+def build_model_once():
+    import jax
+
+    from repro.configs.registry import SMOKE
+    from repro.models.build import build_model
+    from repro.parallel.ctx import RunCtx
+
+    cfg = SMOKE["qwen3-4b"]
+    model = build_model(cfg)
+    ctx = RunCtx(mesh=None, remat="none")
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    return cfg, model, ctx, params
+
+
+def make_requests(cfg, rng, n=6):
+    """Mixed workload: even rids share a two-page prompt prefix (the
+    hot pages replication protects), odd rids are private."""
+    from repro.launch.serve import Request
+
+    shared = rng.integers(0, cfg.vocab, size=2 * PAGE_TOKENS).tolist()
+    reqs = []
+    for rid in range(n):
+        if rid % 2 == 0:
+            prompt = shared + rng.integers(0, cfg.vocab, size=rid + 1).tolist()
+        else:
+            plen = int(rng.integers(6, 20))
+            prompt = rng.integers(0, cfg.vocab, size=plen).tolist()
+        reqs.append(
+            Request(rid=rid, prompt=prompt, max_new=int(rng.integers(5, 10)))
+        )
+    return reqs
+
+
+def run_cluster(model, ctx, params, reqs, hook=None, ticks_before=0,
+                late_reqs=(), max_ticks=800, **kw):
+    from repro.serving.disagg import DisaggCluster
+
+    cl = DisaggCluster(
+        model, ctx, params, paged=True, page_tokens=PAGE_TOKENS, **kw
+    )
+    cl.fault_hook = hook
+    for r in reqs:
+        cl.submit(r)
+    for _ in range(ticks_before):
+        cl.tick()
+    for r in late_reqs:
+        cl.submit(r)
+    stats = cl.run_until_drained(max_ticks=max_ticks)
+    toks = {r.rid: list(r.out) for r in cl.finished}
+    return cl, stats, toks
+
+
+def check_survivors(cl):
+    """Pool + tier invariants on every surviving rank after drain."""
+    from repro.serving import pool, tier as tier_lib
+
+    for g in range(cl.n_groups):
+        if cl._group_down(g):
+            continue
+        store = cl.stores[g]
+        pool.check_pool(store.state, tables=list(store.tables.values()))
+    if cl.tier is not None:
+        tier_lib.check_tier(cl.tier)
+        assert not cl.tier.holdings, "tier not drained"
+
+
+def assert_parity(base, got, what):
+    assert set(got) == set(base), (
+        f"{what}: finished rids {sorted(got)} != {sorted(base)}"
+    )
+    for rid, want in base.items():
+        assert got[rid] == want, (
+            f"{what}: rid {rid} tokens diverged\n  want {want}\n  got  "
+            f"{got[rid]}"
+        )
+
+
+# --------------------------------------------------------------------------- #
+def scenario_kill_decode(cfg, model, ctx, params):
+    """1P+2D+2M(+1 spare idle): kill one decode rank in the
+    mid-KV-handoff window; every request completes bit-identically."""
+    shape = dict(n_prefill=1, n_decode=2, n_memory=2, n_spare=1,
+                 decode_batch=2, cache_len=48)
+    reqs = make_requests(cfg, np.random.default_rng(3))
+    _, _, base = run_cluster(model, ctx, params, reqs, **shape)
+
+    def mid_handoff_target(cl):
+        # a push whose put launched THIS tick and whose ack is about to
+        # be consumed: killing its target now is the mid-handoff death
+        for push in cl.pending_push:
+            if push is not None and not cl._group_down(push[1]):
+                return cl.decode_rank(push[1])
+        return None
+
+    inj = FaultInjector(
+        [{"tick": 2, "phase": "pre_consume", "kill": mid_handoff_target}]
+    )
+    reqs = make_requests(cfg, np.random.default_rng(3))
+    cl, stats, toks = run_cluster(
+        model, ctx, params, reqs, hook=inj, **shape
+    )
+    assert inj.log, "injector never fired (no mid-flight push found)"
+    assert stats["rank_failures"] == 1, stats["rank_failures"]
+    assert stats["recovered_reroutes"] + stats["recovered_recompute"] >= 1
+    assert_parity(base, toks, "kill-decode")
+    check_survivors(cl)
+    dead = inj.log[0][2]
+    assert np.isnan(cl.kvseg[dead]).all(), "dead rank's mirror unpoisoned"
+    print(f"kill-decode OK: rank {dead} died mid-handoff at tick "
+          f"{inj.log[0][0]}, {stats['recovered_reroutes']} rerouted / "
+          f"{stats['recovered_recompute']} recomputed, tokens bit-exact")
+
+
+def scenario_quorum_restore(cfg, model, ctx, params):
+    """Replicated swap-outs survive a memory-rank loss: the example's
+    pressure burst with ``tier_replicas=2``, primary leg killed while
+    holdings are out — restores read the surviving replica."""
+    from repro.launch.serve import Request
+    from repro.serving.scheduler import SLO
+
+    def burst():
+        rng = np.random.default_rng(11)
+        reqs = []
+        for rid in range(5):
+            plen = int(rng.integers(18, 28))
+            reqs.append(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, size=plen).tolist(),
+                max_new=14 if rid < 3 else 8,
+            ))
+        for r in reqs[:3]:
+            r.slo = SLO(priority=0)
+        for r in reqs[3:]:
+            r.slo = SLO(priority=2)
+        return reqs
+
+    shape = dict(n_prefill=1, n_decode=1, n_memory=2, decode_batch=2,
+                 cache_len=48, pages_per_rank=8, tier_replicas=2,
+                 replicate_all_swaps=True)
+
+    def run(hook):
+        reqs = burst()
+        return run_cluster(model, ctx, params, reqs[:3], hook=hook,
+                           ticks_before=8, late_reqs=reqs[3:], **shape)
+
+    _, bstats, base = run(None)
+    assert bstats["sched_swaps"] >= 1, "pressure burst produced no swap"
+    assert bstats["tier_replica_pages"] >= 1, "no replicated swap pages"
+
+    def primary_leg(cl):
+        if cl.tier is None or not cl.tier.holdings:
+            return None
+        h = next(iter(cl.tier.holdings.values()))
+        return cl.memory_rank(h.rank)
+
+    inj = FaultInjector([{"tick": 9, "phase": "tick", "kill": primary_leg}])
+    cl, stats, toks = run(inj)
+    assert inj.log, "no holding was resident to kill under"
+    assert stats["rank_failures"] == 1
+    assert stats["tier_quorum_restores"] >= 1, stats
+    assert stats["recovered_recompute"] == 0, (
+        "replicated pages should never fall back to recompute", stats,
+    )
+    assert_parity(base, toks, "quorum-restore")
+    check_survivors(cl)
+    print(f"quorum-restore OK: memory rank {inj.log[0][2]} died with "
+          f"{stats['tier_quorum_restores']} quorum restore(s), "
+          f"0 recompute fallbacks, tokens bit-exact")
+
+
+def scenario_elastic_join(cfg, model, ctx, params):
+    """A spare promotes into a new decode group mid-run; the prefix
+    index migrates over vectored RMA and the joined rank serves."""
+    shape = dict(n_prefill=1, n_decode=1, n_spare=1, decode_batch=2,
+                 cache_len=48)
+    allreqs = make_requests(cfg, np.random.default_rng(5))
+    first, second = allreqs[:4], allreqs[4:]
+
+    # no-join twin for parity
+    base_first = make_requests(cfg, np.random.default_rng(5))
+    _, _, base = run_cluster(
+        model, ctx, params, base_first[:4], ticks_before=6,
+        late_reqs=base_first[4:], **shape,
+    )
+
+    from repro.serving.disagg import DisaggCluster
+
+    cl = DisaggCluster(model, ctx, params, paged=True,
+                       page_tokens=PAGE_TOKENS, **shape)
+    for r in first:
+        cl.submit(r)
+    for _ in range(6):
+        cl.tick()
+    joined = cl.join_decode_rank()
+    assert cl.roles[joined] == "decode" and cl.n_groups == 2
+    for r in second:
+        cl.submit(r)
+    stats = cl.run_until_drained(max_ticks=800)
+    toks = {r.rid: list(r.out) for r in cl.finished}
+    assert stats["elastic_joins"] == 1
+    assert stats["migrated_prefix_pages"] >= 1, (
+        "prefix index did not migrate", stats,
+    )
+    served = len(cl.decode_servers[-1].finished)
+    assert served >= 1, "joined rank served nothing"
+    assert_parity(base, toks, "elastic-join")
+    # drop the adopted prefix cache and require a fully drained pool
+    cl.stores[-1].release_prefix_cache()
+    check_survivors(cl)
+    print(f"elastic-join OK: rank {joined} promoted, "
+          f"{stats['migrated_prefix_pages']} prefix page(s) migrated, "
+          f"{served} request(s) served on the joined rank, tokens "
+          f"bit-exact")
+
+
+def scenario_heartbeat_delay(cfg, model, ctx, params):
+    """Beats delayed for fewer ticks than the timeout are NOT failures."""
+    shape = dict(n_prefill=1, n_decode=1, decode_batch=2, cache_len=48,
+                 heartbeat_timeout=3)
+    reqs = make_requests(cfg, np.random.default_rng(7), n=4)
+    _, _, base = run_cluster(model, ctx, params, reqs, **shape)
+
+    from repro.serving.disagg import DisaggCluster
+
+    cl = DisaggCluster(model, ctx, params, paged=True,
+                       page_tokens=PAGE_TOKENS, **shape)
+    # rank 1 goes silent for ticks 3..5 (3 missed beats == timeout, the
+    # detector requires STRICTLY more) then recovers
+    cl.beat_filter = lambda rank, tick: not (rank == 1 and 3 <= tick <= 5)
+    reqs = make_requests(cfg, np.random.default_rng(7), n=4)
+    for r in reqs:
+        cl.submit(r)
+    stats = cl.run_until_drained(max_ticks=800)
+    toks = {r.rid: list(r.out) for r in cl.finished}
+    assert stats["rank_failures"] == 0, (
+        "delay below the timeout tripped failure detection", stats,
+    )
+    assert not cl.monitor.failed
+    assert_parity(base, toks, "heartbeat-delay")
+    print("heartbeat-delay OK: 3 missed beats < timeout declared nothing "
+          "dead, tokens bit-exact")
+
+
+def scenario_chaos(cfg, model, ctx, params, seed):
+    """Randomised kill drawn from ``seed``: victim role (decode, memory,
+    spare), tick, and phase vary; parity + invariants must hold."""
+    rng = np.random.default_rng(seed)
+    shape = dict(n_prefill=1, n_decode=2, n_memory=2, n_spare=1,
+                 decode_batch=2, cache_len=48, tier_replicas=2,
+                 replicate_all_swaps=True)
+    reqs = make_requests(cfg, np.random.default_rng(seed + 1))
+    _, _, base = run_cluster(model, ctx, params, reqs, **shape)
+
+    victim = int(rng.choice([1, 2, 3, 4, 5]))  # decode, memory, or spare
+    tick = int(rng.integers(2, 12))
+    phase = str(rng.choice(["tick", "pre_consume"]))
+    inj = FaultInjector([{"tick": tick, "phase": phase, "kill": victim}])
+    reqs = make_requests(cfg, np.random.default_rng(seed + 1))
+    cl, stats, toks = run_cluster(
+        model, ctx, params, reqs, hook=inj, **shape
+    )
+    assert inj.log, "chaos kill never fired"
+    assert stats["rank_failures"] == 1
+    assert_parity(base, toks, f"chaos(seed={seed})")
+    check_survivors(cl)
+    print(f"chaos OK: seed={seed} killed rank {victim} "
+          f"({cl.roles[victim] if victim < len(cl.roles) else '?'}) at "
+          f"tick {tick}/{phase}, tokens bit-exact")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="chaos scenario seed (echo into CI summaries)")
+    ap.add_argument("--fast", action="store_true",
+                    help="fixed-seed PR subset (skips quorum + chaos)")
+    args = ap.parse_args(argv)
+
+    print(f"fault_suite: seed={args.seed} fast={args.fast}")
+    cfg, model, ctx, params = build_model_once()
+
+    scenario_kill_decode(cfg, model, ctx, params)
+    scenario_elastic_join(cfg, model, ctx, params)
+    scenario_heartbeat_delay(cfg, model, ctx, params)
+    if not args.fast:
+        scenario_quorum_restore(cfg, model, ctx, params)
+        scenario_chaos(cfg, model, ctx, params, args.seed)
+
+    print("FAULT_SUITE_PASS")
+
+
+if __name__ == "__main__":
+    main()

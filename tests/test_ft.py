@@ -61,7 +61,9 @@ def test_straggler_quarantine_after_patience():
 
 def test_straggler_recovers():
     tr = StragglerTracker(range(3), alpha=1.0, threshold=1.5, patience=2)
-    tr.record(0, 1.0); tr.record(1, 1.0); tr.record(2, 5.0)
+    tr.record(0, 1.0)
+    tr.record(1, 1.0)
+    tr.record(2, 5.0)
     assert tr.assess()[0].action == "observe"
     tr.record(2, 1.0)  # back to normal -> strikes reset
     assert tr.assess() == []

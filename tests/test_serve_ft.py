@@ -1,0 +1,222 @@
+"""Fault-tolerant serving: replicated tier placements, elastic
+membership, and the chaos suite.
+
+Fast tests exercise the host-side bookkeeping directly — fanned
+swap-out legs and quorum restores on the :class:`MemoryTier`, rank
+failure scrubbing and re-admission, spare promotion in the role map,
+prefix-index migration between pool shards, and the tick-clocked
+:class:`HeartbeatMonitor`.  The slow test runs the deterministic
+fault-injection suite (``repro.testing.fault_suite``) in a subprocess
+with forced host devices: a decode rank dies mid-KV-handoff, a memory
+rank dies holding swap legs, a spare joins mid-flight — every scenario
+must finish with bit-exact tokens and clean pool/tier invariants on the
+survivors.
+"""
+
+import numpy as np
+import pytest
+
+from repro.launch import mesh
+from repro.runtime.ft import HeartbeatMonitor
+from repro.serving import pool, tier
+
+
+# --------------------------------------------------------------------------- #
+# replicated memory tier: fanned legs, quorum restores, failure scrubbing
+# --------------------------------------------------------------------------- #
+def test_replicated_swap_out_fans_legs_and_quorum_restores():
+    t = tier.MemoryTier(3, 4, 2, host_backed=True, replicas=2)
+    h = t.plan_swap_out(1, [1, 0])
+    # two legs on two DISTINCT ranks, primary first
+    assert len(h.placements) == 2
+    assert h.placements[0].rank != h.placements[1].rank
+    assert t.replica_pages == 2
+    rows = np.arange(4, dtype=np.float32).reshape(2, 2)
+    t.host_store(1, rows)
+    # the fanned store fed EVERY leg
+    for pl in h.placements:
+        got = np.stack([t.host_mem[pl.rank, s] for s in pl.slots])
+        np.testing.assert_array_equal(got, rows)
+    tier.check_tier(t)
+    # primary alive: restore reads it, no quorum event
+    assert t.restore_placement(1).rank == h.rank
+    assert t.quorum_restores == 0
+    # primary dies: nothing is lost, restore falls over to the replica
+    assert t.mark_failed(h.rank) == []
+    pl = t.restore_placement(1)
+    assert pl.rank == h.placements[1].rank
+    assert t.quorum_restores == 1
+    np.testing.assert_array_equal(t.host_load(1), rows)
+    tier.check_tier(t)
+    # release returns only the LIVE leg's slots; the dead rank stays empty
+    t.release(1)
+    tier.check_tier(t)
+    assert t.free_slots(h.rank) == 0
+    assert t.n_free == 2 * 4  # the two surviving ranks
+
+
+def test_tier_mark_failed_lost_rids_degradation_and_readmit():
+    t = tier.MemoryTier(2, 4, 2, replicas=2)
+    # one unreplicated holding on the tier: its rank's death loses it
+    h = t.plan_swap_out(5, [0], replicas=1)
+    assert len(h.placements) == 1
+    lost = t.mark_failed(h.rank)
+    assert lost == [5]
+    assert 5 not in t.holdings
+    with pytest.raises(tier.TierError):
+        t.restore_placement(5)
+    assert t.mark_failed(h.rank) == []  # idempotent
+    tier.check_tier(t)
+    # replicas=2 with one live rank: want clamps to the live count
+    h2 = t.plan_swap_out(6, [0, 1], replicas=2)
+    assert len(h2.placements) == 1
+    t.release(6)
+    # the dead rank rejoins empty and takes placements again
+    t.admit_rank(h.rank)
+    with pytest.raises(tier.TierError):
+        t.admit_rank(h.rank)  # only failed ranks re-admit
+    assert t.free_slots(h.rank) == 4
+    # degradation: both ranks live, but only one can fit the leg
+    t.plan_swap_out(7, [0, 1, 2], replicas=1)
+    before = t.degraded_placements
+    h3 = t.plan_swap_out(8, [0, 1], replicas=2)
+    assert len(h3.placements) == 1  # second leg didn't fit anywhere
+    assert t.degraded_placements == before + 1
+    tier.check_tier(t)
+    assert "tier_quorum_restores" in t.stats()
+
+
+# --------------------------------------------------------------------------- #
+# elastic membership: spare ranks in the role map
+# --------------------------------------------------------------------------- #
+def test_serve_roles_spares_and_promotion():
+    roles = mesh.serve_roles(1, 2, n_memory=1, n_spare=2)
+    assert roles == ("prefill", "decode", "decode", "memory", "spare", "spare")
+    # spares default to the decode engine (their promotion target)
+    backends = mesh.role_backends(roles, decode="gascore")
+    assert backends[4] == backends[5] == "gascore"
+    assert mesh.role_backends(roles, spare="xla")[4] == "xla"
+    promoted = mesh.promote_spare(roles, 4)
+    assert promoted[4] == "decode"
+    assert len(promoted) == len(roles)
+    assert promoted[:4] == roles[:4] and promoted[5] == "spare"
+    with pytest.raises(ValueError):
+        mesh.promote_spare(roles, 1)  # live pool members never change role
+    with pytest.raises(ValueError):
+        mesh.promote_spare(roles, 9)  # outside the ring
+    with pytest.raises(ValueError):
+        mesh.promote_spare(roles, 4, to="spare")
+
+
+# --------------------------------------------------------------------------- #
+# prefix-index migration between pool shards (elastic scale-out)
+# --------------------------------------------------------------------------- #
+def _smoke_layout():
+    from repro.configs.registry import SMOKE
+    from repro.models.build import build_model
+    from repro.parallel.ctx import RunCtx
+
+    model = build_model(SMOKE["qwen3-4b"])
+    ctx = RunCtx(mesh=None, remat="none")
+    return pool.PagedLayout.from_struct(
+        model.kv_block_struct(ctx, prompt_len=4, cache_len=32),
+        cache_len=32,
+        page_tokens=8,
+    )
+
+
+def test_prefix_migration_adopt_pin_and_release():
+    layout = _smoke_layout()
+    donor = pool.PagedKVStore(layout, 8)
+    target = pool.PagedKVStore(layout, 8)
+    rng = np.random.default_rng(0)
+    pages = rng.normal(size=(layout.n_pages, layout.page_elems)).astype(
+        np.float32
+    )
+    shared = list(range(100, 117))  # 2 full pages + a partial third
+    donor.admit(1, shared, pages)
+    donor.admit(2, shared + [7], pages)
+    # the 2 full prefix pages are multiply referenced — the replication
+    # policy's "worth replicating" signal
+    assert donor.shared_page_count(1) == 2
+    entries = donor.prefix_entries()
+    assert len(entries) == 2
+    assert len(entries[0][0]) < len(entries[1][0])  # shortest chain first
+    # target adopts the index: one local page per chain, transfer pairs
+    pairs = target.adopt_prefix(entries)
+    assert len(pairs) == 2
+    assert target.adopt_prefix(entries) == []  # already present
+    assert target.stats()["prefix_cache_pages"] == 2
+    # donor pins the transfer set: releasing every owner keeps the bytes
+    donor.pin_pages([dp for dp, _ in pairs])
+    donor.release(1)
+    donor.release(2)
+    for dp, _ in pairs:
+        assert donor.state.refcnt[dp] > 0
+    pool.check_pool(donor.state, tables=list(donor.tables.values()))
+    donor.unpin_pages()
+    assert donor.n_free == 8
+    # an admit on the target maps (not moves) the adopted pages
+    plan = target.admit(3, shared + [9], pages)
+    assert not plan.fresh[0] and not plan.fresh[1]
+    target.release(3)
+    # dropping the cache returns the pool to empty
+    assert target.release_prefix_cache() == 2
+    assert target.n_free == 8
+    pool.check_pool(target.state)
+
+
+def test_pool_swap_replica_bookkeeping():
+    layout = _smoke_layout()
+    store = pool.PagedKVStore(layout, 4)
+    store.note_swap_out(5, 3, replicas=1)
+    assert store.stats()["swap_out_replica_pages"] == 3
+    assert store.swapped_replicated[5] == 1
+    store.note_swap_in(5)
+    assert 5 not in store.swapped_replicated
+    store.note_swap_in(99)  # unknown rids are a no-op
+    store.note_swap_out(6, 2, replicas=0)  # unreplicated: bookkeeping-free
+    assert 6 not in store.swapped_replicated
+
+
+# --------------------------------------------------------------------------- #
+# tick-clocked heartbeat (the serving control plane's failure detector)
+# --------------------------------------------------------------------------- #
+def test_heartbeat_monitor_on_a_tick_clock():
+    tick = {"now": 0.0}
+    m = HeartbeatMonitor([0, 1, 2], timeout_s=3.0, clock=lambda: tick["now"])
+    for now in (1.0, 2.0, 3.0):
+        tick["now"] = now
+        m.beat(0)
+        m.beat(1)
+        # rank 2 never beats: at exactly timeout ticks it is still alive
+        assert m.check() == []
+    tick["now"] = 4.0
+    m.beat(0)
+    m.beat(1)
+    assert m.check() == [2]  # strictly MORE than timeout missed ticks
+    assert m.failed == [2] and m.alive == [0, 1]
+    m.beat(2)  # beats from a declared-dead rank are ignored
+    assert m.failed == [2]
+    m.admit(2)  # elastic re-admission resets its clock
+    assert m.failed == [] and m.check() == []
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: the deterministic fault-injection suite
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_fault_suite_end_to_end(suite_runner):
+    out = suite_runner("repro.testing.fault_suite", devices=6)
+    # a decode rank dies AFTER the KV put launched but BEFORE the ack —
+    # the request re-routes and finishes bit-exact
+    assert "kill-decode OK" in out
+    assert "died mid-handoff" in out
+    # a memory rank dies holding swap legs — the replica leg restores
+    assert "quorum-restore OK" in out
+    # a spare promotes mid-flight and serves with a migrated prefix index
+    assert "elastic-join OK" in out
+    # missed-but-within-timeout beats declare nothing dead
+    assert "heartbeat-delay OK" in out
+    assert "chaos OK" in out
+    assert "FAULT_SUITE_PASS" in out
