@@ -83,6 +83,20 @@ def check(rows):
                 f"(head-sharded pages fit ~2x the pages, so the "
                 f"weights-bound decode should run ~2x the batch)"
             )
+
+    # observability tax: tracing must be effectively free on the decode
+    # hot path.  The row measures the fully-ENABLED recorder (an upper
+    # bound on the disabled guards), so <2% here bounds both.  Optional:
+    # older artifacts predate the obs section.
+    obs = by_name.get("obs_overhead")
+    if obs:
+        x = obs.get("overhead_x", 0.0)
+        if x >= 1.02:
+            warnings.append(
+                f"tracing overhead on the paged decode path is "
+                f"{x:.3f}x >= 1.02x (instrumentation must stay under "
+                f"the 2% budget)"
+            )
     return warnings
 
 
@@ -92,24 +106,39 @@ REGRESSION_TOLERANCE = 0.15
 
 
 def check_baseline(rows, baseline_rows, tolerance=REGRESSION_TOLERANCE):
-    """Warnings for rows whose tok/s regressed vs the previous artifact."""
+    """Warnings for rows whose tok/s regressed vs the previous artifact,
+    plus baseline rows that VANISHED from the new snapshot — a silently
+    skipped section would otherwise shrink the gate's coverage with
+    every merge (the old loop iterated only the new rows, so a dropped
+    row was indistinguishable from a new one and never reported)."""
     prev = {
         r.get("name"): r.get("tok_per_s")
         for r in baseline_rows
-        if r.get("tok_per_s")
+        if r.get("name") and r.get("tok_per_s")
     }
     warnings = []
+    seen = set()
     for r in rows:
         name, now = r.get("name"), r.get("tok_per_s")
+        if name:
+            seen.add(name)
         was = prev.get(name)
         if not name or not now or not was:
-            continue  # new row, dropped row, or no throughput to compare
+            continue  # new row or no throughput to compare
         if now < (1.0 - tolerance) * was:
             warnings.append(
                 f"{name} throughput regressed {(1.0 - now / was):.0%} vs "
                 f"the previous main-branch artifact: {now:.1f} tok/s vs "
                 f"{was:.1f} tok/s (tolerance {tolerance:.0%})"
             )
+    # every name in {rows} with a throughput is also checked above; what
+    # remains is coverage loss: measured before, missing now
+    for name in sorted(set(prev) - seen):
+        warnings.append(
+            f"{name} vanished from the new snapshot (present in the "
+            f"baseline at {prev[name]:.1f} tok/s) — a bench section "
+            f"silently stopped running?"
+        )
     return warnings
 
 

@@ -51,6 +51,8 @@ from repro.configs.registry import SMOKE  # noqa: E402
 from repro.launch.serve import Request, Server  # noqa: E402
 from repro.models.build import build_model  # noqa: E402
 from repro.parallel.ctx import RunCtx  # noqa: E402
+from repro.obs import export as obs_export  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
 from repro.serving.disagg import DisaggCluster  # noqa: E402
 
 PAGE_TOKENS = 8
@@ -87,6 +89,9 @@ def main() -> None:
     ap.add_argument("--decode-backend", default="xla",
                     help="decode pool engine (try gascore: the paper's "
                          "hardware nodes serving the KV-install side)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record the Act-3 tiered run and write the merged "
+                         "Chrome trace (chrome://tracing / Perfetto) here")
     args = ap.parse_args()
     n_requests = 6 if args.smoke else args.requests
 
@@ -207,6 +212,11 @@ def main() -> None:
     ref.run_until_drained()
     unpressured = {r.rid: r.out for r in ref.finished}
 
+    tracer = None
+    if args.trace:
+        # one registry for tracer + cluster: the exported span byte
+        # totals and the cluster's RMA counters must agree bit-for-bit
+        tracer = obs_trace.enable()
     tiered = DisaggCluster(
         model, ctx, params,
         n_prefill=1, n_decode=1, n_memory=N_MEMORY,
@@ -214,6 +224,7 @@ def main() -> None:
         decode_backend=args.decode_backend,
         paged=True, page_tokens=PAGE_TOKENS,
         pages_per_rank=8,  # aggregate demand >= 1.5x this pool
+        metrics=tracer.registry if tracer else None,
     )
     reqs3 = pressure_burst()
     for r in reqs3[:3]:
@@ -225,6 +236,15 @@ def main() -> None:
         r.slo = SLO(priority=2)
         tiered.submit(r)
     tstats = tiered.run_until_drained()
+    if tracer is not None:
+        obs_trace.disable()
+        trace = obs_export.chrome_trace(tracer)
+        problems = obs_export.validate(trace, tracer.registry)
+        assert not problems, problems
+        obs_export.write_trace(trace, args.trace)
+        n_events = len(trace["traceEvents"])
+        print(f"trace: {n_events} events -> {args.trace} (validated: "
+              f"spans nest, every RMA synced, span bytes == counters)")
     print(f"tiered KV memory: {tstats['n_memory_ranks']} memory rank(s), "
           f"{tstats['sched_evictions']} preemption(s) "
           f"({tstats['sched_swaps']} swap / "

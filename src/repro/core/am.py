@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.obs import trace as obs_trace
+
 __all__ = [
     "AMBatch",
     "AMReply",
@@ -353,6 +355,15 @@ def route(
     identity as the ``token``).
     """
     K = per_peer_capacity
+    tr = obs_trace.active()
+    if tr.enabled:
+        w = batch.payload_width
+        tr.instant(
+            "am_route", cat="am", n_nodes=n_nodes, capacity=K,
+            payload_width=w,
+            engine=getattr(engine, "name", None) if engine is not None
+            else ("custom" if all_to_all_fn is not None else "lax"),
+        )
     packed, dropped = build_send_buffer(batch, n_nodes, K)
 
     def a2a(x: jax.Array) -> jax.Array:
@@ -484,18 +495,21 @@ def request_reply(
     replies per destination, so hop 2 can never drop for capacity.
     Returns ``(state, dropped)`` with the hop-1 + hop-2 drop count.
     """
-    recv, dropped = route(
-        batch, axis=axis, n_nodes=n_nodes,
-        per_peer_capacity=per_peer_capacity,
-        all_to_all_fn=all_to_all_fn, engine=engine,
-    )
-    state, replies = deliver_with_replies(state, recv, handlers)
-    recv2, dropped2 = route(
-        replies, axis=axis, n_nodes=n_nodes,
-        per_peer_capacity=per_peer_capacity,
-        all_to_all_fn=all_to_all_fn, engine=engine,
-    )
-    state = deliver(state, recv2, handlers)
+    tr = obs_trace.active()
+    with tr.span("am_request_hop", cat="am", n_nodes=n_nodes):
+        recv, dropped = route(
+            batch, axis=axis, n_nodes=n_nodes,
+            per_peer_capacity=per_peer_capacity,
+            all_to_all_fn=all_to_all_fn, engine=engine,
+        )
+        state, replies = deliver_with_replies(state, recv, handlers)
+    with tr.span("am_reply_hop", cat="am", n_nodes=n_nodes):
+        recv2, dropped2 = route(
+            replies, axis=axis, n_nodes=n_nodes,
+            per_peer_capacity=per_peer_capacity,
+            all_to_all_fn=all_to_all_fn, engine=engine,
+        )
+        state = deliver(state, recv2, handlers)
     return state, dropped + dropped2
 
 

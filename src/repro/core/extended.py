@@ -68,6 +68,10 @@ class Handle:
     """
 
     op: str = "nop"
+    # open trace span riding the handle from initiation to sync (set by
+    # the Node when tracing is enabled; None otherwise — the tracer is
+    # host-side only, so the span never crosses a jit boundary either)
+    span = None
 
     def __init__(self) -> None:
         self.done = False

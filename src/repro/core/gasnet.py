@@ -74,6 +74,7 @@ from repro.core import extended
 from repro.core.addrspace import AddressSpace
 from repro.core.engine import CommEngine, make_engine
 from repro.compat import shard_map
+from repro.obs import trace as obs_trace
 
 __all__ = ["Shift", "Perm", "Context", "Node"]
 
@@ -254,6 +255,14 @@ class Node:
             functools.partial(self._restore, seg),
             key=id(seg),
         )
+        tr = obs_trace.active()
+        if tr.enabled:
+            h.span = tr.begin_async(
+                "put_nb", cat="rma",
+                bytes=int(payload.size) * payload.dtype.itemsize,
+                engine=self.engine.name, seg=id(seg),
+                pred=pred is not None,
+            )
         self._outstanding.append(h)
         return h
 
@@ -279,6 +288,13 @@ class Node:
         data = lax.dynamic_slice(local, (req,), (size,))
         # reply: data travels back from the source to me
         h = extended.GetHandle(self._move(data, inv))
+        tr = obs_trace.active()
+        if tr.enabled:
+            h.span = tr.begin_async(
+                "get_nb", cat="rma",
+                bytes=size * local.dtype.itemsize,
+                engine=self.engine.name, seg=id(seg), pred=False,
+            )
         self._outstanding.append(h)
         return h
 
@@ -355,6 +371,15 @@ class Node:
             functools.partial(self._restore, seg),
             key=id(seg),
         )
+        tr = obs_trace.active()
+        if tr.enabled:
+            size = payloads[0].shape[0]
+            h.span = tr.begin_async(
+                "put_nbv", cat="rma",
+                bytes=m * size * local.dtype.itemsize,
+                m=m, engine=self.engine.name, seg=id(seg),
+                pred=pred is not None,
+            )
         self._outstanding.append(h)
         return h
 
@@ -417,6 +442,14 @@ class Node:
         # reply leg: one vectored transfer back to the requester
         (prep,) = self._move_nbv([data], inv)
         h = extended.GetvHandle(prep, m, size, flag)
+        tr = obs_trace.active()
+        if tr.enabled:
+            h.span = tr.begin_async(
+                "get_nbv", cat="rma",
+                bytes=m * size * local.dtype.itemsize,
+                m=m, engine=self.engine.name, seg=id(seg),
+                pred=pred is not None,
+            )
         self._outstanding.append(h)
         return h
 
@@ -463,8 +496,14 @@ class Node:
                 self._seg_latest[handle.key] = new_local
             else:
                 self._seg_latest.pop(handle.key, None)
-            return handle.restore(new_local)
-        return handle.complete()
+            result = handle.restore(new_local)
+        else:
+            result = handle.complete()
+        sp = handle.span
+        if sp is not None:
+            handle.span = None
+            obs_trace.active().end_async(sp)
+        return result
 
     def try_sync(
         self, handle: extended.Handle
@@ -598,13 +637,18 @@ class Node:
             per_peer_capacity=self._am_per_peer,
             engine=self.engine,
         )
-        if self.handlers.has_replies:
-            state, dropped = am_lib.request_reply(
-                state, batch, self.handlers, **kw
-            )
-        else:
-            recv, dropped = am_lib.route(batch, **kw)
-            state = am_lib.deliver(state, recv, self.handlers)
+        with obs_trace.active().span(
+            "am_flush", cat="am", engine=self.engine.name,
+            replies=self.handlers.has_replies,
+            capacity=self._am_per_peer,
+        ):
+            if self.handlers.has_replies:
+                state, dropped = am_lib.request_reply(
+                    state, batch, self.handlers, **kw
+                )
+            else:
+                recv, dropped = am_lib.route(batch, **kw)
+                state = am_lib.deliver(state, recv, self.handlers)
         self.dropped = self.dropped + dropped
         self._batch = None
         for h in self._pending_acks:

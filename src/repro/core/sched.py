@@ -32,12 +32,13 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-from typing import Dict, Optional
+from typing import Dict, Iterable, Optional
 
 import jax
 
 from repro.core import collectives
 from repro.core.engine import CommEngine, EngineMap
+from repro.obs import trace as obs_trace
 
 __all__ = [
     "EngineCost",
@@ -82,6 +83,67 @@ class EngineCost:
             max(self.beta_us_per_kib, other.beta_us_per_kib),
             max(self.gamma_us_per_kib, other.gamma_us_per_kib),
         )
+
+    @staticmethod
+    def _points(spans: Iterable) -> list:
+        """(KiB, measured us) pairs from recorded transfer spans — either
+        :class:`repro.obs.trace.Span` objects (``bytes`` tag + wall
+        ``dur_us``) or plain ``{"bytes", "dur_us"}`` dicts."""
+        pts = []
+        for s in spans:
+            if isinstance(s, dict):
+                b, d = s.get("bytes"), s.get("dur_us")
+            else:
+                b, d = s.args.get("bytes"), s.dur_us
+            if not b or not d or d <= 0:
+                continue
+            pts.append((b / 1024.0, float(d)))
+        return pts
+
+    @classmethod
+    def fit_from_trace(
+        cls, spans: Iterable, *, gamma_us_per_kib: float = 0.0
+    ) -> "EngineCost":
+        """Refit α/β by least squares from *measured* transfer spans —
+        the loop the paper's hardware counters close in ACCL+: plan with
+        a model, measure what the transfers actually cost in situ, feed
+        the measurements back.
+
+        ``spans`` must cover at least two distinct sizes (α and β are
+        not separable from a single point).  γ is not observable from
+        end-to-end transfer walls (it overlaps the wire by design), so
+        it passes through unchanged.
+        """
+        pts = cls._points(spans)
+        if len(pts) < 2:
+            raise ValueError(
+                f"fit_from_trace needs >= 2 measured transfer spans with "
+                f"byte tags, got {len(pts)}"
+            )
+        n = float(len(pts))
+        sx = sum(x for x, _ in pts)
+        sy = sum(y for _, y in pts)
+        sxx = sum(x * x for x, _ in pts)
+        sxy = sum(x * y for x, y in pts)
+        den = n * sxx - sx * sx
+        if den <= 0:
+            raise ValueError(
+                "fit_from_trace needs spans of at least two distinct "
+                "sizes to separate alpha from beta"
+            )
+        beta = (n * sxy - sx * sy) / den
+        alpha = (sy - beta * sx) / n
+        return cls(max(alpha, 0.0), max(beta, 0.0), gamma_us_per_kib)
+
+    def model_error(self, spans: Iterable) -> float:
+        """Mean absolute relative error of this model's :meth:`hop_us`
+        prediction against measured transfer spans (0.0 = perfect)."""
+        pts = self._points(spans)
+        if not pts:
+            raise ValueError("model_error needs measured transfer spans")
+        return sum(
+            abs(self.hop_us(kib * 1024.0) - d) / d for kib, d in pts
+        ) / len(pts)
 
 
 # Defaults in the measured ballpark of host-device runs (gas_microbench
@@ -237,6 +299,21 @@ def _ring_est(
     )
 
 
+def _record_plan(plan: CollectivePlan) -> CollectivePlan:
+    """Emit the chosen algorithm + *predicted* cost as a trace instant,
+    so a measured transfer span sits next to the estimate that planned
+    it — the cost-model error becomes a trace query."""
+    tr = obs_trace.active()
+    if tr.enabled:
+        tr.instant(
+            "plan", cat="plan", op=plan.op, algorithm=plan.algorithm,
+            n_segments=plan.n_segments, depth=plan.depth,
+            bytes=plan.payload_bytes, n_nodes=plan.n_nodes,
+            engine=plan.engine, est_us=round(plan.est_us, 3),
+        )
+    return plan
+
+
 def plan_collective(
     op: str,
     *,
@@ -256,6 +333,22 @@ def plan_collective(
     ring, so the latency-tier overrides (recursive doubling, tree) are
     skipped.
     """
+    return _record_plan(_plan_collective(
+        op, nbytes=nbytes, n_nodes=n_nodes, engine=engine, costs=costs,
+        n_segments=n_segments, depth=depth,
+    ))
+
+
+def _plan_collective(
+    op: str,
+    *,
+    nbytes: int,
+    n_nodes: int,
+    engine: Optional[CommEngine] = None,
+    costs: Optional[Dict[str, EngineCost]] = None,
+    n_segments: Optional[int] = None,
+    depth: Optional[int] = None,
+) -> CollectivePlan:
     cost = cost_of(engine, costs)
     ename = engine.name if engine is not None else "xla"
     n = max(1, n_nodes)
@@ -351,11 +444,11 @@ def plan_p2p(
     g = _segments_for(float(nbytes), cost)
     d = DEFAULT_DEPTH if g > 1 else 1
     est = _ring_est(float(nbytes), cost, 1, g, d)
-    return CollectivePlan(
+    return _record_plan(CollectivePlan(
         "p2p", "ring", g, d, nbytes, 2,
         engine.name if engine is not None else "xla", est,
         "stage-boundary put" + (f"; segmented x{g}" if g > 1 else ""),
-    )
+    ))
 
 
 # --------------------------------------------------------------------------- #

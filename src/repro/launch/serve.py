@@ -34,6 +34,8 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 
 def _paged_decode_fn(model, ctx, layout):
     """Build the fused paged decode step: pool carrier -> decode views ->
@@ -167,6 +169,10 @@ class Server:
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
 
+        # rank attributed to this server's trace events (the disagg
+        # cluster sets it to the decode rank; standalone servers trace
+        # on the program-wide row)
+        self.trace_rank: Optional[int] = None
         self.active: List[Optional[Request]] = [None] * batch_size
         self.positions = np.zeros((batch_size,), np.int32)
         self.last_token = np.zeros((batch_size, 1), np.int32)
@@ -188,6 +194,10 @@ class Server:
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
         req.t_enqueue = time.monotonic()
+        tr = obs_trace.active()
+        if tr.enabled:
+            tr.instant("req_submit", cat="req", rank=self.trace_rank,
+                       rid=req.rid, prompt_len=len(req.prompt))
         self.queue.append(req)
 
     def _free_slot(self) -> Optional[int]:
@@ -224,8 +234,15 @@ class Server:
             return False
         if not req.out:
             req.out.append(int(first_token))
+        tr = obs_trace.active()
         if not req.t_first:
             req.t_first = time.monotonic()
+            if tr.enabled:
+                tr.instant("req_first_token", cat="req",
+                           rank=self.trace_rank, rid=req.rid)
+        if tr.enabled:
+            tr.instant("req_admit", cat="req", rank=self.trace_rank,
+                       rid=req.rid, slot=slot, position=position)
         self.active[slot] = req
         self.positions[slot] = position
         self.last_token[slot, 0] = int(first_token)
@@ -251,6 +268,10 @@ class Server:
         if req is None:  # already retired this step (eos at the cache cap)
             return
         req.t_done = time.monotonic()
+        tr = obs_trace.active()
+        if tr.enabled:
+            tr.instant("req_retire", cat="req", rank=self.trace_rank,
+                       rid=req.rid, tokens=len(req.out))
         self.finished.append(req)
         self.active[slot] = None
         self._release(req)
@@ -309,7 +330,19 @@ class Server:
 
     # ------------------------------------------------------------------ #
     def step(self) -> int:
-        """One scheduler tick: admit, decode one token for all rows."""
+        """One scheduler tick: admit, decode one token for all rows.
+        Subclasses override :meth:`_step`; this wrapper is the single
+        place every server's tick gets its ``decode_step`` span."""
+        tr = obs_trace.active()
+        if not tr.enabled:
+            return self._step()
+        with tr.span("decode_step", cat="decode",
+                     rank=self.trace_rank) as sp:
+            n = self._step()
+            sp.args["live"] = n
+            return n
+
+    def _step(self) -> int:
         self._admit()
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live or self.caches is None:
@@ -559,8 +592,15 @@ class PagedServer(Server):
     def _bind_row(
         self, req: Request, slot: int, position: int, last_token: int
     ) -> None:
+        tr = obs_trace.active()
         if not req.t_first:
             req.t_first = time.monotonic()
+            if tr.enabled:
+                tr.instant("req_first_token", cat="req",
+                           rank=self.trace_rank, rid=req.rid)
+        if tr.enabled:
+            tr.instant("req_admit", cat="req", rank=self.trace_rank,
+                       rid=req.rid, slot=slot, position=position)
         self.active[slot] = req
         self.positions[slot] = position
         self.last_token[slot, 0] = int(last_token)
@@ -658,9 +698,9 @@ class PagedServer(Server):
     # ------------------------------------------------------------------ #
     # the end-to-end paged decode step
     # ------------------------------------------------------------------ #
-    def step(self) -> int:
+    def _step(self) -> int:
         if not self.paged_decode:
-            return super().step()
+            return super()._step()
         self._admit()
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
@@ -1009,8 +1049,15 @@ class PooledDecodeServer(Server):
             return False
         if not req.out:
             req.out.append(int(first_token))
+        tr = obs_trace.active()
         if not req.t_first:
             req.t_first = time.monotonic()
+            if tr.enabled:
+                tr.instant("req_first_token", cat="req",
+                           rank=self.trace_rank, rid=req.rid)
+        if tr.enabled:
+            tr.instant("req_admit", cat="req", rank=self.trace_rank,
+                       rid=req.rid, slot=slot, position=position)
         self.active[slot] = req
         self.positions[slot] = position
         self.last_token[slot, 0] = int(first_token)
@@ -1022,7 +1069,7 @@ class PooledDecodeServer(Server):
         self._dirty = {}
         return d
 
-    def step(self) -> int:
+    def _step(self) -> int:
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
             return 0

@@ -1,0 +1,48 @@
+"""Cluster-wide observability: tracing, typed metrics, trace export.
+
+The paper's hardware engine is a black box once an operation is
+initiated — real GASNet grew ``GASNET_TRACE`` operation tracing for
+exactly that reason, and ACCL+ instruments its collective engine with
+hardware performance counters.  This package is our software analogue:
+
+- :mod:`repro.obs.metrics` — a typed Counter/Gauge/Histogram registry
+  that the serving ``stats()`` dicts are built on (explicit kinds, a
+  ``reset()`` that only clears counters).
+- :mod:`repro.obs.trace` — a per-rank span/event tracer clocked on the
+  SPMD tick counter.  Spans are host-side (around initiation and sync,
+  never inside compiled code), ring-buffered, and free when disabled:
+  every instrumentation site is guarded by one attribute check on a
+  no-op recorder.
+- :mod:`repro.obs.export` — merges per-rank streams on the tick clock
+  into Chrome-trace JSON (load in ``chrome://tracing`` / Perfetto) and
+  dumps a flight-recorder ring of the last N ticks on rank death.
+
+Nothing here imports the rest of ``repro`` — core and serving layers
+import ``obs``, never the other way around.
+"""
+from repro.obs import export, metrics, trace
+from repro.obs.metrics import Counter, Gauge, Histogram, Registry
+from repro.obs.trace import (
+    NullTracer,
+    Span,
+    Tracer,
+    active,
+    disable,
+    enable,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "NullTracer",
+    "Registry",
+    "Span",
+    "Tracer",
+    "active",
+    "disable",
+    "enable",
+    "export",
+    "metrics",
+    "trace",
+]

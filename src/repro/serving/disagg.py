@@ -60,6 +60,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.launch import mesh as mesh_lib
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import Registry, counter_property
 from repro.serving import kv as kv_lib
 
 
@@ -78,9 +81,33 @@ class DisaggCluster:
     (``pages_per_rank`` pages of ``page_tokens`` tokens), prefill ranks
     put pages straight into their allocator-assigned slots, and
     prompt-prefix-shared pages are mapped, not moved.
+
+    Cluster statistics live on one typed
+    :class:`~repro.obs.metrics.Registry` (``self.metrics``, shared with
+    the admission scheduler and the memory tier): cumulative counts are
+    Counters, point-in-time values are Gauges, and
+    :meth:`reset_metrics` clears only the former.  Pass ``metrics`` to
+    share a registry with a tracer so RMA byte accounting and cluster
+    counters land in one place.
     """
 
     HEADER = 2  # carrier elems prepended to each block: first_token, pos
+
+    # cumulative counters, registry-backed (explicit Counter kind); the
+    # increment sites keep plain `self.x += 1` syntax via the proxy
+    kv_transfers = counter_property("kv_transfers")
+    kv_acked = counter_property("kv_acked")
+    kv_pages_sent = counter_property("kv_pages_sent")
+    kv_pages_shared = counter_property("kv_pages_shared")
+    decoded_tokens = counter_property("decoded_tokens")
+    dropped_am = counter_property("am_dropped")
+    swap_out_bytes = counter_property("swap_out_bytes")
+    swap_in_bytes = counter_property("swap_in_bytes")
+    rank_failures = counter_property("rank_failures")
+    recovered_recompute = counter_property("recovered_recompute")
+    recovered_reroutes = counter_property("recovered_reroutes")
+    elastic_joins = counter_property("elastic_joins")
+    migrated_prefix_pages = counter_property("migrated_prefix_pages")
 
     def __init__(
         self,
@@ -113,6 +140,8 @@ class DisaggCluster:
         tier_replicas: int = 1,
         replicate_all_swaps: bool = False,
         n_spare: int = 0,
+        metrics: Optional[Registry] = None,
+        flight_ticks: int = 64,
     ):
         import jax
         import jax.numpy as jnp
@@ -145,6 +174,11 @@ class DisaggCluster:
         self.jax, self.jnp = jax, jnp
         self.gasnet = gasnet
         self.shard_map = shard_map
+        # the typed registry every counter/gauge below lives on — created
+        # before any counter_property assignment runs
+        self.metrics = metrics if metrics is not None else Registry()
+        self.flight_ticks = flight_ticks
+        self.flight_dumps: List[Dict[str, Any]] = []
         self.model, self.ctx, self.params = model, ctx, params
         self.n_prefill, self.n_decode = n_prefill, n_decode
         self.n_memory = n_memory
@@ -235,6 +269,7 @@ class DisaggCluster:
                 self.tier = tier_lib.MemoryTier(
                     n_memory, self.mem_slots, self.playout.page_elems,
                     replicas=max(1, min(tier_replicas, n_memory)),
+                    registry=self.metrics,
                 )
                 self.seg_elems = max(
                     self.seg_elems, self.mem_slots * self.playout.page_elems
@@ -244,6 +279,7 @@ class DisaggCluster:
             self.scheduler = sched_lib.AdmissionScheduler(
                 page_bytes=self.playout.page_bytes, costs=costs,
                 decode_step_us=decode_step_us, prefill_us=prefill_us,
+                registry=self.metrics,
             )
         else:
             self.layout = kv_lib.KVLayout.from_struct(
@@ -350,6 +386,8 @@ class DisaggCluster:
                        eos_id=eos_id)
                 for _ in range(n_decode)
             ]
+        for d, srv in enumerate(self.decode_servers):
+            srv.trace_rank = self.decode_rank(d)
         self._prefill_fn = jax.jit(
             lambda p, b: model.prefill(p, ctx, b, cache_len=cache_len)
         )
@@ -470,6 +508,12 @@ class DisaggCluster:
     # ------------------------------------------------------------------ #
     def submit(self, req: Any) -> None:
         req.t_enqueue = time.monotonic()
+        tr = obs_trace.active()
+        if tr.enabled:
+            tr.instant(
+                "req_submit", cat="req", rid=req.rid,
+                prompt_len=len(req.prompt),
+            )
         self.queue.append(req)
         self.by_rid[req.rid] = req
         if self.scheduler is not None:
@@ -715,12 +759,23 @@ class DisaggCluster:
             order.pop(0)
             self.queue.remove(req)
             jnp = self.jnp
-            toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, caches_one = self._prefill_fn(self.params, {"inputs": toks})
-            tok = int(np.argmax(np.asarray(logits)[0]))
+            tr = obs_trace.active()
+            with tr.span(
+                "prefill", cat="req", rank=p, rid=req.rid,
+                prompt_len=len(req.prompt), group=d,
+            ):
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, caches_one = self._prefill_fn(
+                    self.params, {"inputs": toks}
+                )
+                tok = int(np.argmax(np.asarray(logits)[0]))
             if not req.out:  # a recompute-resume already holds its tokens
                 req.out.append(tok)
                 req.t_first = time.monotonic()
+                if tr.enabled:
+                    tr.instant(
+                        "req_first_token", cat="req", rank=p, rid=req.rid
+                    )
             if self.paged:
                 # the pool's allocator assigns the pages NOW (host control
                 # plane); the page payloads go one-sided into those exact
@@ -804,7 +859,15 @@ class DisaggCluster:
         last = int(server.last_token[i, 0])
         n_mat = self.playout.pages_for(pos)
         self.scheduler.entry(rid).generated = max(0, len(req.out) - 1)
-        mode, _, _ = self.scheduler.choose_mode(rid, n_mat)
+        mode, swap_us, recompute_us = self.scheduler.choose_mode(rid, n_mat)
+        tr = obs_trace.active()
+        if tr.enabled:
+            tr.instant(
+                "req_preempt", cat="req", rank=self.decode_rank(d),
+                rid=rid, mode=mode, n_pages=n_mat,
+                swap_est_us=round(swap_us, 1),
+                recompute_est_us=round(recompute_us, 1),
+            )
         hold = None
         if mode == "swap":
             # replication policy: hot (prefix-shared) pages get every
@@ -996,6 +1059,12 @@ class DisaggCluster:
             del self._installable[rid]
             del self._preempted[rid]
             self.scheduler.on_admitted(rid, time.monotonic())
+            tr = obs_trace.active()
+            if tr.enabled:
+                tr.instant(
+                    "req_resume", cat="req", rank=self.decode_rank(d),
+                    rid=rid, position=snap["position"],
+                )
 
     def _launch_transfer(self) -> Optional[Tuple[Any, ...]]:
         """Build this tick's transfer inputs and dispatch the SPMD program
@@ -1104,6 +1173,17 @@ class DisaggCluster:
             else:
                 leftover.append((d, rid_plus1, origin))
         self._done_queue = leftover
+        tr = obs_trace.active()
+        if tr.enabled:
+            # split-phase handoff span: initiation here, ended when the
+            # consume lands — the KV-handoff window a decode step overlaps
+            self._transfer_span = tr.begin_async(
+                "kv_handoff", cat="transfer", pushes=len(pushes),
+                done_reports=int(sum(per_rank_counts)),
+                swap=self._inflight_swap is not None,
+                fetch=self._inflight_fetch is not None,
+                est_us=round(self.plan.est_us, 1),
+            )
         fn = self._transfer_fn(perm, perm_swap, perm_fetch)
         return fn(
             self.kvseg,
@@ -1143,6 +1223,10 @@ class DisaggCluster:
         # np.array (not asarray): host copies must stay writable — the
         # scheduler clears inbox flags after installs
         kvseg, inbox, acks, done, dropped = (np.array(r) for r in results)
+        sp = getattr(self, "_transfer_span", None)
+        if sp is not None:
+            self._transfer_span = None
+            obs_trace.active().end_async(sp)
         self.kvseg, self.inbox, self.acks, self.done = kvseg, inbox, acks, done
         # death emulation: the consumed result replaces the whole segment
         # array, so re-poison every dead rank's mirror — any recovery path
@@ -1283,12 +1367,15 @@ class DisaggCluster:
         ticks and recovery runs before any scheduling decision."""
         if not self.paged:
             return
+        tr = obs_trace.active()
         for r in range(self.n):
             if r in self.killed or r in self.dead_ranks:
                 continue
             if self.beat_filter is not None and not self.beat_filter(
                 r, self._tick_no
             ):
+                if tr.enabled:
+                    tr.instant("heartbeat_miss", cat="ft", rank=r)
                 continue
             self.monitor.beat(r)
         for r in self.monitor.check():
@@ -1300,6 +1387,19 @@ class DisaggCluster:
         self.dead_ranks.add(rank)
         self.rank_failures += 1
         role = self.roles[rank]
+        tr = obs_trace.active()
+        if tr.enabled:
+            tr.instant("rank_death", cat="ft", rank=rank, role=role)
+            # flight recorder: freeze the last few ticks of the ring at
+            # the moment of death, before recovery mutates anything
+            self.flight_dumps.append(
+                obs_export.flight_dump(
+                    tr,
+                    self.flight_ticks,
+                    reason=f"rank {rank} ({role}) died",
+                    rank=rank,
+                )
+            )
         if role == "decode":
             g = next(
                 g for g, lead in enumerate(self.group_leaders)
@@ -1546,8 +1646,12 @@ class DisaggCluster:
                 ),
             )
         )
+        self.decode_servers[-1].trace_rank = spare
         self._alias_store_mem()
         self.elastic_joins += 1
+        tr = obs_trace.active()
+        if tr.enabled:
+            tr.instant("elastic_join", cat="ft", rank=spare, group=g)
         # prefix-index migration: warm the new shard from the live group
         # holding the largest index so affinity routing can target it
         donor, best = None, 0
@@ -1584,23 +1688,33 @@ class DisaggCluster:
         step with it, consume the results, and install restored
         requests."""
         self._tick_no += 1
+        tr = obs_trace.active()
+        tr.set_tick(self._tick_no)
         if self.fault_hook is not None:
             self.fault_hook(self, "tick", self._tick_no)
-        self._heartbeat()
-        self._run_prefills()
-        self._run_resumes()
-        results = self._launch_transfer()
-        self._decode_step()  # overlaps the in-flight transfer
-        if self.fault_hook is not None:
-            # fires between transfer launch and consume: a kill here
-            # lands AFTER the put went on the wire but BEFORE its
-            # kv_ready ack is processed — the mid-handoff death window
-            self.fault_hook(self, "pre_consume", self._tick_no)
-        if results is not None:
-            self._consume_transfer(results)
-        self._apply_decode_writes()
-        if self.paged and self.tier is not None:
-            self._install_resumed()
+        with tr.span("tick", cat="tick"):
+            with tr.span("heartbeat", cat="tick_phase"):
+                self._heartbeat()
+            with tr.span("prefill", cat="tick_phase"):
+                self._run_prefills()
+            with tr.span("resume_stage", cat="tick_phase"):
+                self._run_resumes()
+            with tr.span("transfer_launch", cat="tick_phase"):
+                results = self._launch_transfer()
+            with tr.span("decode", cat="tick_phase"):
+                self._decode_step()  # overlaps the in-flight transfer
+            if self.fault_hook is not None:
+                # fires between transfer launch and consume: a kill here
+                # lands AFTER the put went on the wire but BEFORE its
+                # kv_ready ack is processed — the mid-handoff death window
+                self.fault_hook(self, "pre_consume", self._tick_no)
+            if results is not None:
+                with tr.span("transfer_consume", cat="tick_phase"):
+                    self._consume_transfer(results)
+            with tr.span("install", cat="tick_phase"):
+                self._apply_decode_writes()
+                if self.paged and self.tier is not None:
+                    self._install_resumed()
 
     def idle(self) -> bool:
         return (
@@ -1617,22 +1731,42 @@ class DisaggCluster:
             and self._pending_migration is None
         )
 
-    def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
-        t0 = time.monotonic()
-        ticks = 0
-        while not self.idle() and ticks < max_ticks:
-            self.tick()
-            ticks += 1
-        # final flushes so the last completions reach their origin ranks
-        # (bounded: an unacknowledged push must not spin forever)
-        for _ in range(2 * self.n + 2):
-            results = self._launch_transfer()
-            if results is None:
-                break
-            self._consume_transfer(results)
-        dt = time.monotonic() - t0
+    def _latencies(self) -> Tuple[List[float], List[float]]:
+        """Per-request (latency, ttft) lists, preferring trace-derived
+        numbers: when tracing is on and every finished request's
+        lifecycle instants (``req_submit`` / ``req_first_token`` /
+        ``req_retire``) are still in the ring, TTFT and latency come
+        from :meth:`~repro.obs.trace.Tracer.request_stats`.  Otherwise
+        (tracing off, or the ring evicted early events) the Request
+        wall timers are the fallback."""
+        tr = obs_trace.active()
+        if tr.enabled and self.finished:
+            per = tr.request_stats()
+            lat = [
+                per[r.rid]["latency_s"] for r in self.finished
+                if r.rid in per and "latency_s" in per[r.rid]
+            ]
+            ttft = [
+                per[r.rid]["ttft_s"] for r in self.finished
+                if r.rid in per and "ttft_s" in per[r.rid]
+            ]
+            if len(lat) == len(self.finished) == len(ttft):
+                return lat, ttft
         lat = [r.t_done - r.t_enqueue for r in self.finished]
         ttft = [r.t_first - r.t_enqueue for r in self.finished]
+        return lat, ttft
+
+    def reset_metrics(self) -> None:
+        """Zero the cluster's cumulative counters (scheduler and tier
+        share the registry, so theirs clear too); gauges survive."""
+        self.metrics.reset()
+
+    def stats(self) -> Dict[str, Any]:
+        """Cumulative counters and point-in-time gauges — everything in
+        :meth:`run_until_drained`'s dict except the run-scoped rates and
+        latencies.  Counter values read off the typed registry; the
+        derived gauges (free pages, prefix hit rate) are published onto
+        it here so a registry ``snapshot()`` sees them too."""
         if self.paged:
             kv_bytes = self.kv_pages_sent * self.playout.page_bytes
         else:
@@ -1640,16 +1774,9 @@ class DisaggCluster:
         stats = {
             "requests": len(self.finished),
             "decoded_tokens": self.decoded_tokens,
-            "wall_s": dt,
-            "ticks": ticks,
-            "tok_per_s": self.decoded_tokens / dt if dt else 0.0,
-            "p50_latency_s": float(np.median(lat)) if lat else 0.0,
-            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
-            "p50_ttft_s": float(np.median(ttft)) if ttft else 0.0,
             "kv_transfers": self.kv_transfers,
             "kv_acked": self.kv_acked,
             "kv_bytes": kv_bytes,
-            "kv_bytes_per_s": kv_bytes / dt if dt else 0.0,
             "kv_block_bytes": self.block_bytes,
             "kv_plan": self.plan.describe(),
             "completions_notified": int(self.done[: self.n_prefill].sum()),
@@ -1661,6 +1788,10 @@ class DisaggCluster:
             # dilute the number
             hits = sum(s.prefix_hits for s in self.stores)
             misses = sum(s.prefix_misses for s in self.stores)
+            hit_rate = hits / (hits + misses) if hits + misses else 0.0
+            free_pages = sum(s.n_free for s in self.stores)
+            self.metrics.gauge("pool_free_pages").set(free_pages)
+            self.metrics.gauge("prefix_hit_rate").set(hit_rate)
             stats.update({
                 "paged": True,
                 "tp": self.tp,
@@ -1670,8 +1801,8 @@ class DisaggCluster:
                 "pages_per_rank": self.pages_per_rank,
                 "kv_pages_sent": self.kv_pages_sent,
                 "kv_pages_shared": self.kv_pages_shared,
-                "prefix_hit_rate": (hits / (hits + misses) if hits + misses else 0.0),
-                "pool_free_pages": sum(s.n_free for s in self.stores),
+                "prefix_hit_rate": hit_rate,
+                "pool_free_pages": free_pages,
                 "decode_paged_steps": sum(
                     getattr(s, "paged_decode_steps", 0)
                     for s in self.decode_servers
@@ -1693,4 +1824,31 @@ class DisaggCluster:
                     "swap_in_bytes": self.swap_in_bytes,
                     "swap_plan": self.swap_plan.describe(),
                 })
+        return stats
+
+    def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
+        t0 = time.monotonic()
+        ticks = 0
+        while not self.idle() and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        # final flushes so the last completions reach their origin ranks
+        # (bounded: an unacknowledged push must not spin forever)
+        for _ in range(2 * self.n + 2):
+            results = self._launch_transfer()
+            if results is None:
+                break
+            self._consume_transfer(results)
+        dt = time.monotonic() - t0
+        lat, ttft = self._latencies()
+        stats = self.stats()
+        stats.update({
+            "wall_s": dt,
+            "ticks": ticks,
+            "tok_per_s": self.decoded_tokens / dt if dt else 0.0,
+            "p50_latency_s": float(np.median(lat)) if lat else 0.0,
+            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "p50_ttft_s": float(np.median(ttft)) if ttft else 0.0,
+            "kv_bytes_per_s": stats["kv_bytes"] / dt if dt else 0.0,
+        })
         return stats

@@ -42,6 +42,7 @@ import math
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import sched
+from repro.obs.metrics import Registry, counter_property
 
 __all__ = [
     "SLO",
@@ -111,7 +112,18 @@ class AdmissionScheduler:
     :class:`~repro.core.sched.EngineCost`) to plan against measured wire
     speed.  ``page_bytes`` prices swap transfers; ``decode_step_us`` /
     ``prefill_us`` price recompute replay.
+
+    The cumulative counters (evictions/swaps/recomputes/resumes) live on
+    a typed :class:`~repro.obs.metrics.Registry` — pass ``registry`` to
+    share the owning cluster's registry (one ``reset()`` clears the
+    whole cluster's counters); stats keys are unchanged.
     """
+
+    # cumulative counters, registry-backed (explicit Counter kind)
+    evictions = counter_property("sched_evictions")
+    swaps = counter_property("sched_swaps")
+    recomputes = counter_property("sched_recomputes")
+    resumes = counter_property("sched_resumes")
 
     def __init__(
         self,
@@ -122,6 +134,7 @@ class AdmissionScheduler:
         engine_name: str = "xla",
         decode_step_us: float = 2000.0,
         prefill_us: float = 4000.0,
+        registry: Optional[Registry] = None,
     ):
         table = costs or sched.DEFAULT_COSTS
         self.cost = cost or table.get(engine_name) or next(iter(table.values()))
@@ -130,6 +143,7 @@ class AdmissionScheduler:
         self.prefill_us = prefill_us
         self._entries: Dict[int, _Entry] = {}
         self._seq = 0
+        self.metrics = registry if registry is not None else Registry()
         self.evictions = 0
         self.swaps = 0
         self.recomputes = 0

@@ -57,6 +57,8 @@ from jax import lax
 import numpy as np
 
 from repro.core import sched
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import Registry, counter_property
 from repro.serving import kv as kv_lib
 
 __all__ = [
@@ -121,7 +123,18 @@ class MemoryTier:
     :meth:`plan_swap_out`: each swap-out allocates slots on up to that
     many distinct live ranks, and restores survive ``replicas - 1``
     memory-rank losses.
+
+    Cumulative counters live on a typed
+    :class:`~repro.obs.metrics.Registry` (pass ``registry`` to share the
+    owning cluster's); ``stats()`` keys are unchanged.
     """
+
+    # cumulative counters, registry-backed (explicit Counter kind)
+    swapped_out_pages = counter_property("tier_swapped_out_pages")
+    swapped_in_pages = counter_property("tier_swapped_in_pages")
+    replica_pages = counter_property("tier_replica_pages")
+    quorum_restores = counter_property("tier_quorum_restores")
+    degraded_placements = counter_property("tier_degraded_placements")
 
     def __init__(
         self,
@@ -130,6 +143,7 @@ class MemoryTier:
         page_elems: int,
         host_backed: bool = False,
         replicas: int = 1,
+        registry: Optional[Registry] = None,
     ):
         if n_ranks < 1 or slots_per_rank < 1:
             raise ValueError(
@@ -155,6 +169,7 @@ class MemoryTier:
             if host_backed
             else None
         )
+        self.metrics = registry if registry is not None else Registry()
         self.swapped_out_pages = 0
         self.swapped_in_pages = 0
         self.replica_pages = 0
@@ -245,6 +260,12 @@ class MemoryTier:
                 if i > 0 or rid in self._promoted:
                     self.quorum_restores += 1
                     self._promoted.discard(rid)
+                    tr = obs_trace.active()
+                    if tr.enabled:
+                        tr.instant(
+                            "quorum_restore", cat="ft", rid=rid,
+                            leg=i, rank=pl.rank,
+                        )
                 return pl
         raise TierError(f"request {rid}: no live replica (all legs failed)")
 
@@ -342,6 +363,12 @@ class MemoryTier:
 
     # ------------------------------------------------------------------ #
     def stats(self) -> Dict[str, int]:
+        # point-in-time values land in the registry as explicit Gauges
+        # (they survive reset(); the counters above are what reset clears)
+        g = self.metrics.gauge
+        g("tier_free_slots").set(self.n_free)
+        g("tier_resident_requests").set(len(self.holdings))
+        g("tier_failed_ranks").set(len(self.failed))
         return {
             "tier_ranks": self.n_ranks,
             "tier_slots": self.n_ranks * self.slots_per_rank,

@@ -336,6 +336,9 @@ def scenario_chaos(cfg, model, ctx, params, seed):
 
 
 def main(argv=None) -> None:
+    from repro.obs import export as obs_export
+    from repro.obs import trace as obs_trace
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--seed", type=int, default=0,
                     help="chaos scenario seed (echo into CI summaries)")
@@ -346,12 +349,34 @@ def main(argv=None) -> None:
     print(f"fault_suite: seed={args.seed} fast={args.fast}")
     cfg, model, ctx, params = build_model_once()
 
-    scenario_kill_decode(cfg, model, ctx, params)
-    scenario_elastic_join(cfg, model, ctx, params)
-    scenario_heartbeat_delay(cfg, model, ctx, params)
-    if not args.fast:
-        scenario_quorum_restore(cfg, model, ctx, params)
-        scenario_chaos(cfg, model, ctx, params, args.seed)
+    # the whole suite runs under the tracer so a failing scenario leaves
+    # a flight-recorder window: the last ticks of spans/instants (rank
+    # deaths, heartbeat misses, handoffs) land in the CI step summary
+    # with the replay seed — the post-mortem a nightly chaos failure
+    # otherwise wouldn't have
+    tracer = obs_trace.enable(capacity=1 << 16)
+    try:
+        scenario_kill_decode(cfg, model, ctx, params)
+        scenario_elastic_join(cfg, model, ctx, params)
+        scenario_heartbeat_delay(cfg, model, ctx, params)
+        if not args.fast:
+            scenario_quorum_restore(cfg, model, ctx, params)
+            scenario_chaos(cfg, model, ctx, params, args.seed)
+    except BaseException:
+        dump = obs_export.flight_dump(
+            tracer, 64,
+            reason=f"fault_suite scenario failed (seed {args.seed})",
+            seed=args.seed,
+        )
+        summary = obs_export.render_flight_summary(dump)
+        print(summary)
+        step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+        if step_summary:
+            with open(step_summary, "a") as f:
+                f.write(summary + "\n")
+        raise
+    finally:
+        obs_trace.disable()
 
     print("FAULT_SUITE_PASS")
 

@@ -1,0 +1,310 @@
+"""Unit tests for the observability stack: tracer, typed metrics,
+Chrome-trace export + validation, flight recorder, and the measured
+cost-model refit (``EngineCost.fit_from_trace``).
+
+These are pure host-side tests — no mesh, no jit — exercising exactly
+the invariants the serving instrumentation relies on: deterministic
+tick-clock ordering, byte-parity between RMA spans and counters,
+counter-only reset, and the never-synced-handle detection that turns a
+leaked split-phase op into a validation failure.
+"""
+import time
+
+import pytest
+
+from repro.core.sched import DEFAULT_COSTS, EngineCost
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import Registry, counter_property
+
+
+# -------------------------------------------------------------------- #
+# tracer
+# -------------------------------------------------------------------- #
+def test_tick_clock_orders_and_resets_seq():
+    tr = obs_trace.Tracer()
+    tr.set_tick(3)
+    a = tr.instant("a")
+    b = tr.instant("b")
+    assert (a.tick0, a.seq0) == (3, 0)
+    assert (b.tick0, b.seq0) == (3, 1)
+    tr.set_tick(4)
+    c = tr.instant("c")
+    assert (c.tick0, c.seq0) == (4, 0)
+    # sids are a plain counter: deterministic across replays
+    assert [e.sid for e in (a, b, c)] == [0, 1, 2]
+
+
+def test_span_context_records_args_and_duration():
+    tr = obs_trace.Tracer()
+    with tr.span("work", cat="decode", rank=2) as sp:
+        sp.args["live"] = 5
+    (e,) = list(tr.spans(cat="decode"))
+    assert e.name == "work" and e.rank == 2 and e.args["live"] == 5
+    assert e.kind == "span" and e.dur_us >= 0.0
+
+
+def test_async_rma_span_bumps_byte_and_op_counters():
+    tr = obs_trace.Tracer()
+    for nbytes in (1024, 2048):
+        sp = tr.begin_async("put_nb", cat="rma", bytes=nbytes)
+        tr.end_async(sp)
+    assert tr.registry.counter("rma_put_nb_bytes").get() == 3072
+    assert tr.registry.counter("rma_put_nb_ops").get() == 2
+    # non-rma async spans (e.g. the kv_handoff transfer) don't count
+    sp = tr.begin_async("kv_handoff", cat="transfer", pages=3)
+    tr.end_async(sp)
+    assert "rma_kv_handoff_bytes" not in tr.registry
+
+
+def test_ring_capacity_bounds_memory():
+    tr = obs_trace.Tracer(capacity=8)
+    for i in range(20):
+        tr.instant(f"e{i}")
+    names = [e.name for e in tr.events]
+    assert names == [f"e{i}" for i in range(12, 20)]
+
+
+def test_flight_window_filters_on_end_tick():
+    tr = obs_trace.Tracer()
+    for t in range(10):
+        tr.set_tick(t)
+        tr.instant(f"t{t}")
+    got = {e.name for e in tr.flight(last_ticks=3)}
+    assert got == {"t7", "t8", "t9"}
+
+
+def test_request_stats_derives_ttft_latency_tpot():
+    tr = obs_trace.Tracer()
+    tr.set_tick(0)
+    tr.instant("req_submit", cat="req", rid=7)
+    tr.set_tick(2)
+    tr.instant("req_first_token", cat="req", rid=7)
+    # a second first-token (re-admit after preemption) must NOT win
+    tr.set_tick(3)
+    tr.instant("req_first_token", cat="req", rid=7)
+    tr.set_tick(5)
+    tr.instant("req_retire", cat="req", rid=7, tokens=4)
+    rec = tr.request_stats()[7]
+    assert rec["tokens"] == 4
+    assert rec["ttft_s"] >= 0.0
+    assert rec["latency_s"] >= rec["ttft_s"]
+    # tpot spreads the post-first-token time over tokens-1 decode steps
+    assert rec["tpot_s"] == pytest.approx(
+        (rec["latency_s"] - rec["ttft_s"]) / 3
+    )
+
+
+def test_null_tracer_is_inert_and_enable_disable_swaps():
+    assert obs_trace.active() is obs_trace.active()  # stable singleton
+    null = obs_trace.active()
+    assert not null.enabled
+    # all no-ops: nothing raises, span() yields a reusable context
+    with null.span("x") as sp:
+        assert sp is None
+    assert null.begin_async("y", bytes=1) is None
+    null.end_async(None)
+    try:
+        tr = obs_trace.enable(capacity=16)
+        assert obs_trace.active() is tr and tr.enabled
+    finally:
+        prev = obs_trace.disable()
+    assert prev is tr
+    assert not obs_trace.active().enabled
+
+
+# -------------------------------------------------------------------- #
+# metrics
+# -------------------------------------------------------------------- #
+def test_registry_kind_mismatch_raises():
+    reg = Registry()
+    reg.counter("n")
+    with pytest.raises(TypeError, match="is a counter, not a gauge"):
+        reg.gauge("n")
+
+
+def test_reset_zeroes_counters_but_never_gauges():
+    reg = Registry()
+    reg.counter("c").inc(5)
+    reg.gauge("g").set(11)
+    reg.histogram("h").observe(3.0)
+    reg.reset()
+    assert reg.counter("c").get() == 0
+    assert reg.gauge("g").get() == 11  # current state, not history
+    assert reg.histogram("h").count == 0
+
+
+def test_counter_rejects_negative_increment():
+    with pytest.raises(ValueError, match="negative inc"):
+        Registry().counter("c").inc(-1)
+
+
+def test_histogram_quantiles_exact_below_cap():
+    h = Registry().histogram("lat")  # default cap 4096 >> 100 samples
+    for v in range(100):
+        h.observe(float(v))
+    assert h.count == 100 and h.total == pytest.approx(sum(range(100)))
+    assert h.p50 == 50.0 and h.p99 == 99.0
+    assert h.mean == pytest.approx(49.5)
+
+
+def test_histogram_decimation_is_bounded_and_deterministic():
+    h = Registry().histogram("lat", cap=16)
+    for v in range(100):
+        h.observe(float(v))
+    assert h.count == 100  # exact even after decimation
+    assert len(h._samples) <= 16
+    assert h.p99 >= h.p50
+    # deterministic: an identical stream yields identical samples —
+    # this is why decimation, not reservoir sampling
+    h2 = Registry().histogram("lat", cap=16)
+    for v in range(100):
+        h2.observe(float(v))
+    assert h._samples == h2._samples
+
+
+def test_snapshot_flattens_histograms():
+    reg = Registry()
+    reg.counter("c").inc(2)
+    reg.histogram("h").observe(4.0)
+    snap = reg.snapshot()
+    assert snap["c"] == 2
+    assert snap["h_count"] == 1 and snap["h_mean"] == 4.0
+    assert "h_p50" in snap and "h_p99" in snap
+
+
+def test_counter_property_proxies_plain_increments():
+    class Thing:
+        hits = counter_property("thing_hits")
+
+        def __init__(self):
+            self.metrics = Registry()
+
+    t = Thing()
+    t.hits += 1
+    t.hits += 2
+    assert t.hits == 3
+    assert t.metrics.counter("thing_hits").get() == 3
+    t.metrics.reset()
+    assert t.hits == 0
+
+
+# -------------------------------------------------------------------- #
+# export + validation
+# -------------------------------------------------------------------- #
+def _traced_tick():
+    """One synthetic tick shaped like the disagg loop: nested scoped
+    spans, a split-phase RMA closed inside, and a lifecycle instant."""
+    tr = obs_trace.Tracer()
+    tr.set_tick(1)
+    with tr.span("tick", cat="tick"):
+        with tr.span("decode", cat="decode", rank=0):
+            h = tr.begin_async("put_nb", cat="rma", bytes=512, rank=0)
+            tr.instant("req_retire", cat="req", rid=0, rank=0, tokens=2)
+            tr.end_async(h)
+    return tr
+
+
+def test_chrome_trace_exports_and_validates():
+    tr = _traced_tick()
+    trace = obs_export.chrome_trace(tr, labels=["test"])
+    assert obs_export.validate(trace, tr.registry) == []
+    evs = trace["traceEvents"]
+    phases = {}
+    for ev in evs:
+        phases.setdefault(ev["ph"], []).append(ev)
+    assert {e["name"] for e in phases["X"]} == {"tick", "decode"}
+    assert len(phases["b"]) == len(phases["e"]) == 1
+    assert phases["b"][0]["args"]["bytes"] == 512
+    names = {
+        ev["args"]["name"] for ev in phases["M"]
+        if ev["name"] == "thread_name"
+    }
+    assert names == {"gas", "rank0"}  # rank rows get readable labels
+
+
+def test_validate_flags_never_synced_handle():
+    tr = obs_trace.Tracer()
+    sp = tr.begin_async("get_nb", cat="rma", bytes=64)
+    tr.end_async(sp)
+    # a second initiation that never syncs: the leak validate must catch
+    leak = tr.begin_async("get_nb", cat="rma", bytes=64)
+    tr.events.append(leak)  # exported open, but no end stamp recorded
+    trace = obs_export.chrome_trace(tr)
+    # fake the leak: strip its end event so only the begin remains
+    trace["traceEvents"] = [
+        ev for ev in trace["traceEvents"]
+        if not (ev.get("ph") == "e" and ev.get("id") == leak.sid)
+    ]
+    problems = obs_export.validate(trace)
+    assert any("never ended" in p for p in problems)
+
+
+def test_validate_flags_byte_mismatch_with_counters():
+    tr = _traced_tick()
+    trace = obs_export.chrome_trace(tr)
+    # simulate a lost span: the counters saw bytes the trace didn't
+    tr.registry.counter("rma_put_nb_bytes").inc(1)
+    problems = obs_export.validate(trace, tr.registry)
+    assert any("bit-equal" in p for p in problems)
+
+
+def test_validate_flags_overlapping_scoped_spans():
+    tr = obs_trace.Tracer()
+    tr.set_tick(0)
+    a = tr.begin("a", cat="x")
+    b = tr.begin("b", cat="x")
+    tr.end(a)  # interleaved, not nested
+    tr.end(b)
+    problems = obs_export.validate(obs_export.chrome_trace(tr))
+    assert any("overlaps" in p for p in problems)
+
+
+def test_flight_dump_and_summary_render():
+    tr = _traced_tick()
+    dump = obs_export.flight_dump(
+        tr, 4, reason="rank 3 (decode) died", seed=42, rank=3
+    )
+    assert dump["seed"] == 42 and dump["events"]
+    assert dump["metrics"]["rma_put_nb_bytes"] == 512
+    md = obs_export.render_flight_summary(dump)
+    assert "rank 3 (decode) died" in md
+    assert "--seed 42" in md  # the replay line
+    assert "| tick |" in md and "put_nb" in md
+
+
+# -------------------------------------------------------------------- #
+# cost model feedback
+# -------------------------------------------------------------------- #
+def _synthetic_transfers(alpha, beta, sizes):
+    return [
+        {"bytes": n, "dur_us": alpha + beta * (n / 1024.0)}
+        for n in sizes
+    ]
+
+
+def test_fit_from_trace_recovers_alpha_beta():
+    spans = _synthetic_transfers(30.0, 0.8, [1024, 4096, 65536, 1 << 20])
+    fit = EngineCost.fit_from_trace(spans, gamma_us_per_kib=0.0)
+    assert fit.alpha_us == pytest.approx(30.0, rel=1e-6)
+    assert fit.beta_us_per_kib == pytest.approx(0.8, rel=1e-6)
+    assert fit.model_error(spans) == pytest.approx(0.0, abs=1e-9)
+    # the stock constants are (deliberately) wrong for this data
+    assert DEFAULT_COSTS["xla"].model_error(spans) > fit.model_error(spans)
+
+
+def test_fit_from_trace_accepts_real_span_objects():
+    tr = obs_trace.Tracer()
+    for n in (1024, 8192):
+        with tr.span(f"put_{n}", cat="transfer", bytes=n):
+            time.sleep(0.001)  # a real (nonzero) wall duration
+    fit = EngineCost.fit_from_trace(tr.spans(cat="transfer"))
+    assert fit.alpha_us >= 0.0 and fit.beta_us_per_kib >= 0.0
+
+
+def test_fit_from_trace_needs_two_distinct_sizes():
+    with pytest.raises(ValueError, match=">= 2 measured"):
+        EngineCost.fit_from_trace(_synthetic_transfers(1.0, 1.0, [4096]))
+    same = _synthetic_transfers(1.0, 1.0, [4096, 4096, 4096])
+    with pytest.raises(ValueError, match="two distinct sizes"):
+        EngineCost.fit_from_trace(same)
