@@ -40,3 +40,30 @@ def write_artifact(result: dict, path: str) -> None:
     with open(path, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
     print(f"wrote {path}")
+
+
+def append_history(result: dict, path: str, run_id: str | None = None) -> None:
+    """Append one line of headline numbers to the committed trajectory
+    log (``BENCH_history.jsonl``): ``{"run", "date", "rows"}`` with
+    ``rows`` mapping row name to its measured value.  A point-in-time
+    artifact answers "is this run ok"; the history answers "is the trend
+    ok" — ``check_serve_perf --history`` gates against the trajectory
+    median so a slow drift (each step inside the single-run tolerance)
+    still trips CI."""
+    import datetime
+
+    date = datetime.datetime.now(datetime.timezone.utc)
+    rows = {}
+    for r in result.get("rows", []):
+        for unit in ("us", "x", "mb_s", "pct", "tokens", "us_per_kib"):
+            if unit in r:
+                rows[r["name"]] = r[unit]
+                break
+    line = {
+        "run": run_id or date.strftime("%Y%m%dT%H%M%SZ"),
+        "date": date.strftime("%Y-%m-%d"),
+        "rows": rows,
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
+    print(f"appended {path} ({len(rows)} rows)")

@@ -19,6 +19,12 @@ cross-run regression net the within-run orderings cannot catch.  An
 unreadable baseline is noted and skipped (first run, expired artifact),
 never fatal: the gate must not brick CI on its own bootstrap.
 
+With ``--history BENCH_history.jsonl`` (the committed trajectory log
+``train_serve_bench --json`` appends to) the gate also compares each
+throughput row's headline against the MEDIAN of its whole trajectory —
+the slow-drift net a one-run baseline cannot provide, since each step
+inside the single-run tolerance walks the baseline down with it.
+
 Findings go to stdout and, when ``$GITHUB_STEP_SUMMARY`` is set, to the
 workflow run's summary page.  By default any finding FAILS the check
 (exit 1): the serving benches run single-process on a pinned smoke
@@ -142,6 +148,63 @@ def check_baseline(rows, baseline_rows, tolerance=REGRESSION_TOLERANCE):
     return warnings
 
 
+def check_history(rows, history_lines, tolerance=REGRESSION_TOLERANCE):
+    """Warnings for rows whose tok/s fell below the TRAJECTORY median.
+
+    ``--baseline`` compares against one previous run, so a slow drift —
+    each step inside the single-run tolerance — walks the baseline down
+    with it and never trips.  The committed ``BENCH_history.jsonl``
+    keeps every headline number ever shipped; gating against the median
+    of that trajectory anchors the comparison to where the repo has
+    actually been.  Malformed lines are skipped (the log is
+    append-only across schema tweaks), and rows with fewer than 3
+    historical points are not gated (too few to call a median a
+    trend)."""
+    hist = {}
+    for line in history_lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+            for name, val in rec.get("rows", {}).items():
+                hist.setdefault(name, []).append(float(val))
+        except (ValueError, TypeError, AttributeError):
+            continue
+    warnings = []
+    for r in rows:
+        name, now = r.get("name"), r.get("tok_per_s")
+        vals = hist.get(name, [])
+        if not name or not now or len(vals) < 3:
+            continue
+        s = sorted(vals)
+        n = len(s)
+        median = s[n // 2] if n % 2 else (s[n // 2 - 1] + s[n // 2]) / 2
+        if not median:
+            continue
+        # the history stores the row's HEADLINE value (us for timings,
+        # where lower is better); gate tok_per_s rows on the matching
+        # headline only when the units line up — the headline of every
+        # tok_per_s row in this artifact is us/token, so a regression
+        # is the new headline rising above the median
+        unit_val = None
+        for unit in ("us", "x", "mb_s", "pct", "tokens", "us_per_kib"):
+            if unit in r:
+                unit_val = (unit, r[unit])
+                break
+        if not unit_val or unit_val[0] != "us":
+            continue
+        if unit_val[1] > (1.0 + tolerance) * median:
+            warnings.append(
+                f"{name} is {unit_val[1] / median - 1.0:.0%} above its "
+                f"trajectory median ({unit_val[1]:.1f}us vs "
+                f"{median:.1f}us over {n} runs, tolerance "
+                f"{tolerance:.0%}) — a drift the one-run baseline "
+                f"cannot catch"
+            )
+    return warnings
+
+
 def main(argv):
     ap = argparse.ArgumentParser(
         prog="check_serve_perf",
@@ -155,6 +218,12 @@ def main(argv):
         "--baseline", metavar="PREV.json", default=None,
         help="previous main-branch BENCH_serve.json: fail any shared row "
         "whose tok/s fell >15%% below it (unreadable baseline: skipped)",
+    )
+    ap.add_argument(
+        "--history", metavar="BENCH_history.jsonl", default=None,
+        help="committed trajectory log: fail any throughput row whose "
+        "headline drifted >15%% above its all-time median (unreadable "
+        "history: skipped)",
     )
     ap.add_argument(
         "path", nargs="?", default="BENCH_serve.json",
@@ -185,6 +254,18 @@ def main(argv):
             )
         else:
             warnings += check_baseline(rows, baseline_rows)
+    history_note = None
+    if args.history:
+        try:
+            with open(args.history) as f:
+                history_lines = f.readlines()
+        except OSError as e:
+            history_note = (
+                f"history {args.history} unreadable ({e}) — trajectory "
+                f"gate skipped (first run?)"
+            )
+        else:
+            warnings += check_history(rows, history_lines)
     summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
     lines = []
     if warnings:
@@ -203,6 +284,8 @@ def main(argv):
         )
     if baseline_note:
         lines.append(f"- note: {baseline_note}")
+    if history_note:
+        lines.append(f"- note: {history_note}")
     for line in lines:
         print(line)
     if summary_path:

@@ -245,6 +245,17 @@ def main() -> None:
         n_events = len(trace["traceEvents"])
         print(f"trace: {n_events} events -> {args.trace} (validated: "
               f"spans nest, every RMA synced, span bytes == counters)")
+        # close the postmortem loop: fold the same trace's lifecycle
+        # events into a per-request critical path and name what the
+        # preempted request actually spent its wall on (GASNET_TRACE
+        # postmortems, one function call instead of an evening)
+        from repro.obs import attrib as obs_attrib
+        preempted = sorted({
+            e.args.get("rid") for e in tracer.events
+            if e.name == "req_preempt" and e.args.get("rid") is not None
+        })
+        if preempted:
+            print(obs_attrib.why_slow(tracer, preempted[0]))
     print(f"tiered KV memory: {tstats['n_memory_ranks']} memory rank(s), "
           f"{tstats['sched_evictions']} preemption(s) "
           f"({tstats['sched_swaps']} swap / "
@@ -252,6 +263,10 @@ def main() -> None:
           f"{tstats['swap_out_bytes']}B out / {tstats['swap_in_bytes']}B "
           f"back over the vectored put/get, swap plan: "
           f"{tstats['swap_plan']}")
+    if tiered.health is not None:
+        # the live SLO monitor ran on every tick of the run above; its
+        # final summary is the health line an operator would watch
+        print(f"health: {tiered.health.render()}")
 
     assert tstats["requests"] == len(reqs3), tstats
     assert tstats["sched_evictions"] >= 1, "expected >= 1 preemption"

@@ -42,6 +42,7 @@ from repro.obs import trace as obs_trace
 
 __all__ = [
     "EngineCost",
+    "try_fit_from_trace",
     "CollectivePlan",
     "DEFAULT_COSTS",
     "load_costs",
@@ -100,24 +101,14 @@ class EngineCost:
             pts.append((b / 1024.0, float(d)))
         return pts
 
-    @classmethod
-    def fit_from_trace(
-        cls, spans: Iterable, *, gamma_us_per_kib: float = 0.0
-    ) -> "EngineCost":
-        """Refit α/β by least squares from *measured* transfer spans —
-        the loop the paper's hardware counters close in ACCL+: plan with
-        a model, measure what the transfers actually cost in situ, feed
-        the measurements back.
-
-        ``spans`` must cover at least two distinct sizes (α and β are
-        not separable from a single point).  γ is not observable from
-        end-to-end transfer walls (it overlaps the wire by design), so
-        it passes through unchanged.
-        """
-        pts = cls._points(spans)
+    @staticmethod
+    def _line_fit(pts: list, what: str) -> tuple:
+        """Least-squares ``(intercept, slope)`` over (KiB, us) points;
+        raises :class:`ValueError` on thin data (fewer than two points,
+        or a single payload size — the constants are not separable)."""
         if len(pts) < 2:
             raise ValueError(
-                f"fit_from_trace needs >= 2 measured transfer spans with "
+                f"{what} needs >= 2 measured transfer spans with "
                 f"byte tags, got {len(pts)}"
             )
         n = float(len(pts))
@@ -128,12 +119,58 @@ class EngineCost:
         den = n * sxx - sx * sx
         if den <= 0:
             raise ValueError(
-                "fit_from_trace needs spans of at least two distinct "
-                "sizes to separate alpha from beta"
+                f"{what} needs spans of at least two distinct "
+                f"sizes to separate the intercept from the slope"
             )
-        beta = (n * sxy - sx * sy) / den
-        alpha = (sy - beta * sx) / n
-        return cls(max(alpha, 0.0), max(beta, 0.0), gamma_us_per_kib)
+        slope = (n * sxy - sx * sy) / den
+        intercept = (sy - slope * sx) / n
+        return intercept, slope
+
+    @classmethod
+    def fit_gamma_from_trace(cls, spans: Iterable) -> float:
+        """Fit γ (receiver-epilogue us/KiB) from *measured epilogue*
+        spans — the install/accumulate program timed alone, at several
+        payload sizes (``obs.profile`` records these).  End-to-end
+        transfer walls cannot separate γ from β (the epilogue overlaps
+        the wire by design); a directly timed epilogue can: its per-KiB
+        slope IS γ.  The per-call dispatch overhead lands in the
+        intercept and is discarded."""
+        pts = cls._points(spans)
+        _, slope = cls._line_fit(pts, "fit_gamma_from_trace")
+        return max(slope, 0.0)
+
+    @classmethod
+    def fit_from_trace(
+        cls, spans: Iterable, *, gamma_us_per_kib: float = 0.0,
+        epilogue_spans: Optional[Iterable] = None,
+    ) -> "EngineCost":
+        """Refit the model by least squares from *measured* transfer
+        spans — the loop the paper's hardware counters close in ACCL+:
+        plan with a model, measure what the transfers actually cost in
+        situ, feed the measurements back.
+
+        ``spans`` must cover at least two distinct sizes (α and β are
+        not separable from a single point).  Without ``epilogue_spans``,
+        γ is not observable from end-to-end transfer walls (it overlaps
+        the wire by design) and passes through unchanged.  With
+        ``epilogue_spans`` (the receiver install program timed alone —
+        see :meth:`fit_gamma_from_trace`), the measured per-KiB slope of
+        the end-to-end walls is *decomposed*: the epilogue's measured
+        share becomes γ and the remainder stays β, so ``hop_us`` (and
+        therefore :meth:`model_error`) is unchanged while segmentation
+        planning gains a measured overlap opportunity (``min(β, γ)``).
+        """
+        pts = cls._points(spans)
+        alpha, beta = cls._line_fit(pts, "fit_from_trace")
+        alpha, beta = max(alpha, 0.0), max(beta, 0.0)
+        gamma = gamma_us_per_kib
+        if epilogue_spans is not None:
+            measured = cls.fit_gamma_from_trace(epilogue_spans)
+            # the epilogue cannot claim more than the measured end-to-end
+            # per-KiB cost; the un-overlapped remainder is the wire
+            gamma = min(measured, beta)
+            beta = beta - gamma
+        return cls(alpha, beta, gamma)
 
     def model_error(self, spans: Iterable) -> float:
         """Mean absolute relative error of this model's :meth:`hop_us`
@@ -144,6 +181,30 @@ class EngineCost:
         return sum(
             abs(self.hop_us(kib * 1024.0) - d) / d for kib, d in pts
         ) / len(pts)
+
+
+def try_fit_from_trace(
+    spans: Iterable,
+    *,
+    epilogue_spans: Optional[Iterable] = None,
+    default: Optional[EngineCost] = None,
+) -> tuple:
+    """:meth:`EngineCost.fit_from_trace` that reports instead of dying.
+
+    A thin trace (cold ring, filtered spans, a bench section that ran
+    alone) raises :class:`ValueError` from the fitter; consumers that
+    refit mid-run — the bench's obs section, anything folding measured
+    spans back against :func:`_record_plan` estimates — should degrade
+    to their prior model, not crash the run.  Returns ``(cost, note)``:
+    ``note`` is ``"fit: ok"`` on success, else
+    ``"fit: insufficient-data (<reason>)"`` with ``cost`` falling back
+    to ``default`` (possibly None).
+    """
+    try:
+        fit = EngineCost.fit_from_trace(spans, epilogue_spans=epilogue_spans)
+        return fit, "fit: ok"
+    except ValueError as e:
+        return default, f"fit: insufficient-data ({e})"
 
 
 # Defaults in the measured ballpark of host-device runs (gas_microbench

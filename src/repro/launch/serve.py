@@ -415,7 +415,8 @@ class PagedServer(Server):
                  page_tokens: int = 8, n_pool_pages: Optional[int] = None,
                  paged_decode: bool = True, tier_slots: Optional[int] = None,
                  sched_costs: Optional[Dict[str, Any]] = None,
-                 decode_step_us: float = 2000.0, prefill_us: float = 4000.0):
+                 decode_step_us: float = 2000.0, prefill_us: float = 4000.0,
+                 health: Optional[Any] = None):
         super().__init__(model, ctx, params, batch_size, cache_len,
                          eos_id=eos_id, greedy=greedy, seed=seed)
         from repro.serving.pool import PagedKVStore, PagedLayout
@@ -441,6 +442,14 @@ class PagedServer(Server):
             page_bytes=self.layout.page_bytes, costs=sched_costs,
             decode_step_us=decode_step_us, prefill_us=prefill_us,
         )
+        # live SLO monitor (repro.obs.health.HealthMonitor): tracked per
+        # submit, ticked per step; when its backpressure is enabled the
+        # scheduler defers below-floor admissions while deadlines are at
+        # risk.  Inert (risk 0) for requests without finite deadlines.
+        self.health = health
+        self._tick_no = 0
+        if health is not None and getattr(health, "backpressure", False):
+            self.scheduler.attach_health(health)
         self._by_rid: Dict[int, Request] = {}
         self._preempted: Dict[int, Dict[str, Any]] = {}
         self._decode_paged = _paged_decode_views_fn(model, ctx, self.layout)
@@ -516,6 +525,8 @@ class PagedServer(Server):
             req.rid, req.slo or SLO(), prompt_len=len(req.prompt),
             now=req.t_enqueue,
         )
+        if self.health is not None:
+            self.health.track(req.rid, req.slo or SLO(), req.t_enqueue)
 
     def _pending(self) -> bool:
         return super()._pending() or bool(self._preempted)
@@ -546,8 +557,18 @@ class PagedServer(Server):
         req = self._by_rid[rid]
         table = self.store.page_table(rid)
         logical = [lp for lp, pp in enumerate(table) if pp >= 0]
+        chosen, swap_us, rec_us = self.scheduler.choose_mode(
+            rid, len(logical))
         if mode is None:
-            mode, _, _ = self.scheduler.choose_mode(rid, len(logical))
+            mode = chosen
+        tr = obs_trace.active()
+        if tr.enabled:
+            tr.instant(
+                "req_preempt", cat="req", rank=self.trace_rank, rid=rid,
+                mode=mode, n_pages=len(logical),
+                swap_est_us=round(swap_us, 1),
+                recompute_est_us=round(rec_us, 1),
+            )
         if mode == "swap":
             try:
                 self.tier.plan_swap_out(rid, logical)
@@ -598,6 +619,8 @@ class PagedServer(Server):
             if tr.enabled:
                 tr.instant("req_first_token", cat="req",
                            rank=self.trace_rank, rid=req.rid)
+            if self.health is not None:
+                self.health.first_token(req.rid, req.t_first)
         if tr.enabled:
             tr.instant("req_admit", cat="req", rank=self.trace_rank,
                        rid=req.rid, slot=slot, position=position)
@@ -635,6 +658,10 @@ class PagedServer(Server):
             self._bind_row(req, slot, len(req.prompt), req.out[0])
             self.start_replay(slot, req.out[1:])
         del self._preempted[rid]
+        tr = obs_trace.active()
+        if tr.enabled:
+            tr.instant("req_resume", cat="req", rank=self.trace_rank,
+                       rid=rid, slot=slot, mode=st["mode"])
         self.scheduler.on_admitted(rid, time.monotonic())
         return True
 
@@ -765,6 +792,46 @@ class PagedServer(Server):
         self._advance(live, logits)
         return len(live)
 
+    def step(self) -> int:
+        n = super().step()
+        if self.health is not None:
+            self._tick_no += 1
+            self.health.tick(
+                self._tick_no, time.monotonic(),
+                progress={
+                    r.rid: len(r.out)
+                    for r in self.active if r is not None
+                },
+            )
+        return n
+
+    def profile_decode(self, profiler, iters: int = 6,
+                       warmup: int = 2) -> Optional[float]:
+        """Offline device-timing of the fused paged decode step over the
+        server's *current* page tables (re-execution is idempotent: the
+        step rewrites the same K/V slots from the same inputs, and the
+        sampled token is discarded).  Never called on the serving path —
+        benchmarks drive it between bursts.  Returns the best wall/device
+        microseconds, or None when no rows are live."""
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live or not self.paged_decode:
+            return None
+        P = self.store.state.n_pages
+        T = self.layout.page_tokens
+        need = max(int(self.positions[i]) // T + 1 for i in live)
+        need = min(self.layout.n_pages, -(-need // 4) * 4)
+        width = max(self._table_width, need)
+        tables = np.full((self.B, width), P, np.int32)
+        for i in live:
+            tables[i] = self.store.device_table(
+                self.active[i].rid, absent=P)[:width]
+        return profiler.profile(
+            "paged_decode_step",
+            lambda: self._decode_via_tables(tables),
+            iters=iters, warmup=warmup,
+            live=len(live), table_width=width,
+        )
+
     def _decode_via_tables(self, tables: np.ndarray) -> np.ndarray:
         """Upload the pool when host-resident, flush queued page patches,
         run the fused paged decode; returns host logits.  The device-pool
@@ -811,6 +878,8 @@ class PagedServer(Server):
         self.store.release(req.rid)
         if req.rid in self._by_rid:
             self.scheduler.on_done(req.rid)
+        if self.health is not None:
+            self.health.retire(req.rid)
 
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
         stats = super().run_until_drained(max_ticks)

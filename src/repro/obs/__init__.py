@@ -16,12 +16,24 @@ hardware performance counters.  This package is our software analogue:
 - :mod:`repro.obs.export` — merges per-rank streams on the tick clock
   into Chrome-trace JSON (load in ``chrome://tracing`` / Perfetto) and
   dumps a flight-recorder ring of the last N ticks on rank death.
+- :mod:`repro.obs.profile` — device-time kernel profiling by (honest,
+  labelled) timed re-execution; measures the receiver epilogue alone so
+  ``EngineCost`` finally fits γ from data.
+- :mod:`repro.obs.attrib` — per-request critical-path attribution over
+  the recorded lifecycle instants; ``why_slow(rid)`` names the dominant
+  segment and the convoying co-residents.
+- :mod:`repro.obs.health` — live SLO monitor on the tick clock:
+  deadline-risk gauges, ``slo_at_risk``/``slo_violated`` instants, and
+  the admission backpressure floor.
 
 Nothing here imports the rest of ``repro`` — core and serving layers
 import ``obs``, never the other way around.
 """
-from repro.obs import export, metrics, trace
+from repro.obs import attrib, export, health, metrics, profile, trace
+from repro.obs.attrib import Breakdown, attribute, why_slow
+from repro.obs.health import HealthMonitor
 from repro.obs.metrics import Counter, Gauge, Histogram, Registry
+from repro.obs.profile import DeviceProfiler
 from repro.obs.trace import (
     NullTracer,
     Span,
@@ -32,17 +44,25 @@ from repro.obs.trace import (
 )
 
 __all__ = [
+    "Breakdown",
     "Counter",
+    "DeviceProfiler",
     "Gauge",
+    "HealthMonitor",
     "Histogram",
     "NullTracer",
     "Registry",
     "Span",
     "Tracer",
     "active",
+    "attribute",
+    "attrib",
     "disable",
     "enable",
     "export",
+    "health",
     "metrics",
+    "profile",
     "trace",
+    "why_slow",
 ]

@@ -96,13 +96,26 @@ class Histogram:
             self._sorted = True
 
     def quantile(self, q: float) -> float:
+        """Linear-interpolated quantile over the current samples.
+
+        Defined explicitly at the edges: n=0 returns 0.0 (no data), n=1
+        returns the single sample for every q.  For n >= 2 the rank
+        ``q * (n - 1)`` interpolates between its two neighbours — so a
+        tiny sample no longer degenerates to its max (the old
+        index-truncation rule mapped p99 of [a, b] to b outright)."""
         if not self._samples:
             return 0.0
         if not self._sorted:
             self._samples.sort()
             self._sorted = True
-        i = min(len(self._samples) - 1, int(q * len(self._samples)))
-        return self._samples[i]
+        n = len(self._samples)
+        if n == 1:
+            return self._samples[0]
+        pos = min(max(q, 0.0), 1.0) * (n - 1)
+        lo = int(pos)
+        hi = min(lo + 1, n - 1)
+        frac = pos - lo
+        return self._samples[lo] + (self._samples[hi] - self._samples[lo]) * frac
 
     @property
     def p50(self) -> float:

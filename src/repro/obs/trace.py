@@ -266,6 +266,15 @@ class Tracer:
         Consumes ``cat="req"`` instants: ``req_submit``,
         ``req_first_token`` and ``req_retire`` (the latter carrying
         ``tokens=<generated count>``).  Returns seconds, keyed by rid.
+
+        Lifecycle edge cases are first-class: a preempted-and-resumed
+        (or recompute-replayed) request's ``req_preempt``/``req_resume``
+        instants land in ``preempts`` / ``resumes`` counts (with
+        ``preempt_modes`` naming swap vs recompute), and a request still
+        in flight at dump time has ``state="in-flight"`` with no
+        ``latency_s``/``tpot_s`` — its ``ttft_s`` still derives when the
+        first token already exists.  TTFT/latency are unchanged by
+        preemption (first-token-wins; the retire instant is terminal).
         """
         out: Dict[Any, Dict[str, float]] = {}
         for e in self.events:
@@ -282,7 +291,15 @@ class Tracer:
             elif e.name == "req_retire":
                 rec["t_retire_us"] = e.t0_us
                 rec["tokens"] = e.args.get("tokens", 0)
+            elif e.name == "req_preempt":
+                rec["preempts"] = rec.get("preempts", 0) + 1
+                rec.setdefault("preempt_modes", []).append(
+                    e.args.get("mode", "?"))
+            elif e.name == "req_resume":
+                rec["resumes"] = rec.get("resumes", 0) + 1
         for rec in out.values():
+            rec["state"] = ("retired" if "t_retire_us" in rec
+                            else "in-flight")
             t0 = rec.get("t_submit_us")
             tf = rec.get("t_first_us")
             td = rec.get("t_retire_us")

@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.launch import mesh as mesh_lib
 from repro.obs import export as obs_export
+from repro.obs import health as health_lib
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import Registry, counter_property
 from repro.serving import kv as kv_lib
@@ -281,6 +282,12 @@ class DisaggCluster:
                 decode_step_us=decode_step_us, prefill_us=prefill_us,
                 registry=self.metrics,
             )
+            # live SLO monitor on the tick clock: tracked per submit,
+            # ticked per cluster tick; its backpressure floor makes the
+            # scheduler defer below-floor admissions while a deadline is
+            # at risk.  Inert until a request carries finite deadlines.
+            self.health = health_lib.HealthMonitor(registry=self.metrics)
+            self.scheduler.attach_health(self.health)
         else:
             self.layout = kv_lib.KVLayout.from_struct(
                 model.kv_block_struct(ctx, prompt_len=4, cache_len=cache_len)
@@ -296,6 +303,7 @@ class DisaggCluster:
             self.tier = None
             self.swap_plan = None
             self.scheduler = None
+            self.health = None
             self.max_swap = 1
 
         # ---- AM control plane ------------------------------------------
@@ -523,6 +531,11 @@ class DisaggCluster:
                 req.rid, getattr(req, "slo", None) or SLO(),
                 prompt_len=len(req.prompt), now=req.t_enqueue,
             )
+            if self.health is not None:
+                self.health.track(
+                    req.rid, getattr(req, "slo", None) or SLO(),
+                    req.t_enqueue,
+                )
 
     # ------------------------------------------------------------------ #
     # SPMD transfer program (data plane + control plane, one launch)
@@ -776,6 +789,8 @@ class DisaggCluster:
                     tr.instant(
                         "req_first_token", cat="req", rank=p, rid=req.rid
                     )
+                if self.health is not None:
+                    self.health.first_token(req.rid, req.t_first)
             if self.paged:
                 # the pool's allocator assigns the pages NOW (host control
                 # plane); the page payloads go one-sided into those exact
@@ -1216,6 +1231,8 @@ class DisaggCluster:
                     self.stores[d].release(req.rid)
                     if self.scheduler is not None:
                         self.scheduler.on_done(req.rid)
+                    if self.health is not None:
+                        self.health.retire(req.rid)
                 origin = getattr(req, "origin_rank", 0)
                 self._done_queue.append((d, req.rid + 1, origin))
 
@@ -1715,6 +1732,24 @@ class DisaggCluster:
                 self._apply_decode_writes()
                 if self.paged and self.tier is not None:
                     self._install_resumed()
+            if self.health is not None:
+                # live SLO projections over everything still tracked;
+                # the rendered one-liner rides the trace so a flight dump
+                # shows cluster health next to the phase spans it explains
+                with tr.span("health", cat="tick_phase"):
+                    self.health.tick(
+                        self._tick_no, time.monotonic(),
+                        progress={
+                            r.rid: len(r.out)
+                            for s in self.decode_servers
+                            for r in s.active if r is not None
+                        },
+                    )
+                    if tr.enabled:
+                        tr.instant(
+                            "health_summary", cat="slo",
+                            line=self.health.render(),
+                        )
 
     def idle(self) -> bool:
         return (
@@ -1816,6 +1851,10 @@ class DisaggCluster:
             })
             if self.scheduler is not None:
                 stats.update(self.scheduler.stats())
+            if self.health is not None:
+                stats["slo_violations"] = int(
+                    self.metrics.counter("slo_violations").value)
+                stats["health"] = dict(self.health.last_summary)
             if self.tier is not None:
                 stats.update(self.tier.stats())
                 stats.update({

@@ -124,6 +124,7 @@ class AdmissionScheduler:
     swaps = counter_property("sched_swaps")
     recomputes = counter_property("sched_recomputes")
     resumes = counter_property("sched_resumes")
+    deferrals = counter_property("sched_deferrals")
 
     def __init__(
         self,
@@ -144,10 +145,12 @@ class AdmissionScheduler:
         self._entries: Dict[int, _Entry] = {}
         self._seq = 0
         self.metrics = registry if registry is not None else Registry()
+        self.health = None  # Optional[repro.obs.health.HealthMonitor]
         self.evictions = 0
         self.swaps = 0
         self.recomputes = 0
         self.resumes = 0
+        self.deferrals = 0
 
     # ------------------------------------------------------------------ #
     def submit(
@@ -181,12 +184,33 @@ class AdmissionScheduler:
             e.rid,
         )
 
+    def attach_health(self, monitor) -> None:
+        """Wire a :class:`~repro.obs.health.HealthMonitor` in: while its
+        at-risk set is non-empty, :meth:`admission_order` defers every
+        waiting request *below* the monitor's backpressure floor (the
+        highest at-risk priority) — deadline-critical work stops
+        competing with bulk admissions for pool pages.  The floor clears
+        the moment the at-risk set drains, so nothing starves."""
+        self.health = monitor
+
     def admission_order(self) -> List[int]:
-        """Waiting requests (queued + preempted) in admission order."""
+        """Waiting requests (queued + preempted) in admission order.
+
+        With an attached health monitor signalling backpressure,
+        below-floor requests are deferred (dropped from this tick's
+        order, counted on ``sched_deferrals``)."""
         waiting = [
             e for e in self._entries.values()
             if e.state in ("queued", "preempted")
         ]
+        floor = (
+            self.health.backpressure_floor()
+            if self.health is not None else None
+        )
+        if floor is not None:
+            eligible = [e for e in waiting if e.slo.priority >= floor]
+            self.deferrals += len(waiting) - len(eligible)
+            waiting = eligible
         return [e.rid for e in sorted(waiting, key=self._key)]
 
     # ------------------------------------------------------------------ #
@@ -298,4 +322,5 @@ class AdmissionScheduler:
             "sched_swaps": self.swaps,
             "sched_recomputes": self.recomputes,
             "sched_resumes": self.resumes,
+            "sched_deferrals": self.deferrals,
         }

@@ -344,6 +344,11 @@ def main(argv=None) -> None:
                     help="chaos scenario seed (echo into CI summaries)")
     ap.add_argument("--fast", action="store_true",
                     help="fixed-seed PR subset (skips quorum + chaos)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write the suite's chrome trace here on success "
+                         "(export.validate-checked) so the nightly chaos "
+                         "run leaves an inspectable artifact, not just a "
+                         "pass line")
     args = ap.parse_args(argv)
 
     print(f"fault_suite: seed={args.seed} fast={args.fast}")
@@ -375,6 +380,46 @@ def main(argv=None) -> None:
             with open(step_summary, "a") as f:
                 f.write(summary + "\n")
         raise
+    else:
+        if args.trace:
+            # Dedicated single-cluster replay for the artifact: the
+            # scenarios above interleave twin clusters (undisturbed base
+            # + injected) on one tracer, and each cluster restarts the
+            # tick clock — two streams at the same virtual timestamps
+            # can never merge into one valid timeline.  The export
+            # records one injected run alone: a decode rank dies
+            # mid-run, recovery re-routes, and the whole thing lands as
+            # a clean validated trace.
+            obs_trace.disable()
+            replay = obs_trace.enable(capacity=1 << 16)
+            try:
+                inj = FaultInjector(
+                    [{"tick": 2, "phase": "tick", "kill": 1}])
+                run_cluster(
+                    model, ctx, params,
+                    make_requests(cfg, np.random.default_rng(3)),
+                    hook=inj,
+                    n_prefill=1, n_decode=2, n_memory=2, n_spare=1,
+                    decode_batch=2, cache_len=48,
+                    metrics=replay.registry,
+                )
+                assert inj.log, "traced replay: kill never fired"
+            finally:
+                obs_trace.disable()
+            trace = obs_export.chrome_trace(replay, labels=["chaos_replay"])
+            problems = obs_export.validate(trace, replay.registry)
+            if problems:
+                for p in problems:
+                    print(f"trace INVALID: {p}")
+                raise SystemExit(
+                    f"fault_suite trace failed export.validate with "
+                    f"{len(problems)} problem(s) — the artifact a "
+                    f"post-mortem would load is malformed"
+                )
+            obs_export.write_trace(trace, args.trace)
+            print(f"trace OK: {args.trace} "
+                  f"({len(trace['traceEvents'])} events, validated: "
+                  f"spans nest, every RMA synced, bytes == counters)")
     finally:
         obs_trace.disable()
 

@@ -144,8 +144,27 @@ def test_histogram_quantiles_exact_below_cap():
     for v in range(100):
         h.observe(float(v))
     assert h.count == 100 and h.total == pytest.approx(sum(range(100)))
-    assert h.p50 == 50.0 and h.p99 == 99.0
+    # linear interpolation at rank q*(n-1): p50 of 0..99 is 49.5, p99
+    # is 98.01 — not the max (the old truncation rule returned 99.0)
+    assert h.p50 == pytest.approx(49.5)
+    assert h.p99 == pytest.approx(98.01)
     assert h.mean == pytest.approx(49.5)
+
+
+def test_histogram_tiny_samples_are_defined():
+    """The n=0 / n=1 / n=2 edges are explicit, not accidents of index
+    truncation: empty -> 0.0, singleton -> the sample for EVERY q, two
+    samples -> interpolation (p99 of [a, b] is no longer b outright)."""
+    h = Registry().histogram("lat")
+    assert h.p50 == 0.0 and h.p99 == 0.0  # n=0: no data
+    h.observe(7.0)
+    assert h.p50 == 7.0 and h.p99 == 7.0 and h.quantile(0.0) == 7.0
+    h.observe(17.0)  # n=2: rank q*(n-1) interpolates
+    assert h.p50 == pytest.approx(12.0)
+    assert h.p99 == pytest.approx(7.0 + 0.99 * 10.0)
+    assert h.quantile(0.0) == 7.0 and h.quantile(1.0) == 17.0
+    # out-of-range q clamps instead of indexing out of bounds
+    assert h.quantile(-0.5) == 7.0 and h.quantile(1.5) == 17.0
 
 
 def test_histogram_decimation_is_bounded_and_deterministic():
@@ -308,3 +327,308 @@ def test_fit_from_trace_needs_two_distinct_sizes():
     same = _synthetic_transfers(1.0, 1.0, [4096, 4096, 4096])
     with pytest.raises(ValueError, match="two distinct sizes"):
         EngineCost.fit_from_trace(same)
+
+
+def test_fit_gamma_from_trace_recovers_epilogue_slope():
+    # epilogue walls: 12us dispatch overhead + 0.3us/KiB install slope;
+    # the fit keeps only the slope (dispatch is not a per-KiB cost)
+    epi = _synthetic_transfers(12.0, 0.3, [1 << 16, 1 << 18, 1 << 20])
+    assert EngineCost.fit_gamma_from_trace(epi) == pytest.approx(
+        0.3, rel=1e-6)
+    # a flat (or noisy-negative) epilogue clamps to 0, never negative
+    flat = _synthetic_transfers(5.0, 0.0, [1 << 16, 1 << 20])
+    assert EngineCost.fit_gamma_from_trace(flat) == 0.0
+
+
+def test_fit_with_epilogue_decomposes_beta_keeping_hop_us():
+    """γ comes out of the measured end-to-end slope (the epilogue
+    overlaps the wire — it was already inside every transfer wall), so
+    α + β + γ pricing and the refit error are IDENTICAL to the
+    α/β-only fit on the same spans."""
+    spans = _synthetic_transfers(30.0, 0.8, [1 << 16, 1 << 18, 1 << 20])
+    epi = _synthetic_transfers(10.0, 0.25, [1 << 16, 1 << 20])
+    plain = EngineCost.fit_from_trace(spans, gamma_us_per_kib=0.0)
+    fit = EngineCost.fit_from_trace(spans, epilogue_spans=epi)
+    assert fit.gamma_us_per_kib == pytest.approx(0.25, rel=1e-6)
+    assert fit.beta_us_per_kib == pytest.approx(0.8 - 0.25, rel=1e-6)
+    for n in (1 << 16, 1 << 19, 1 << 21):
+        assert fit.hop_us(n) == pytest.approx(plain.hop_us(n))
+    assert fit.model_error(spans) == pytest.approx(
+        plain.model_error(spans), abs=1e-9)
+    # a measured epilogue steeper than the end-to-end slope caps at β:
+    # γ can't exceed the total per-KiB cost it is a component of
+    steep = _synthetic_transfers(0.0, 5.0, [1 << 16, 1 << 20])
+    capped = EngineCost.fit_from_trace(spans, epilogue_spans=steep)
+    assert capped.gamma_us_per_kib == pytest.approx(0.8, rel=1e-6)
+    assert capped.beta_us_per_kib == pytest.approx(0.0, abs=1e-9)
+
+
+def test_try_fit_from_trace_reports_instead_of_raising():
+    from repro.core.sched import try_fit_from_trace
+
+    spans = _synthetic_transfers(30.0, 0.8, [1 << 16, 1 << 20])
+    fit, note = try_fit_from_trace(spans)
+    assert fit is not None and note == "fit: ok"
+    default = DEFAULT_COSTS["xla"]
+    got, note = try_fit_from_trace([], default=default)
+    assert got is default
+    assert note.startswith("fit: insufficient-data")
+    _, note = try_fit_from_trace(
+        _synthetic_transfers(1.0, 1.0, [4096, 4096]))
+    assert "two distinct sizes" in note
+
+
+# -------------------------------------------------------------------- #
+# request_stats lifecycle edges
+# -------------------------------------------------------------------- #
+def test_request_stats_preempted_resumed_request():
+    tr = obs_trace.Tracer()
+    tr.instant("req_submit", cat="req", rid=1)
+    tr.instant("req_first_token", cat="req", rid=1)
+    tr.instant("req_preempt", cat="req", rid=1, mode="swap")
+    tr.instant("req_resume", cat="req", rid=1, mode="swap")
+    tr.instant("req_preempt", cat="req", rid=1, mode="recompute")
+    tr.instant("req_resume", cat="req", rid=1, mode="recompute")
+    tr.instant("req_retire", cat="req", rid=1, tokens=6)
+    rec = tr.request_stats()[1]
+    assert rec["state"] == "retired"
+    assert rec["preempts"] == 2 and rec["resumes"] == 2
+    assert rec["preempt_modes"] == ["swap", "recompute"]
+    # timing derivation unchanged by preemption
+    assert rec["latency_s"] >= rec["ttft_s"] >= 0.0
+    assert rec["tokens"] == 6 and "tpot_s" in rec
+
+
+def test_request_stats_recompute_replayed_keeps_first_token():
+    """A recompute replay re-admits the row (second req_first_token
+    would be wrong — first wins) and TTFT must not move."""
+    tr = obs_trace.Tracer()
+    tr.instant("req_submit", cat="req", rid=2)
+    tr.instant("req_first_token", cat="req", rid=2)
+    t_first = tr.request_stats()[2]["t_first_us"]
+    tr.instant("req_preempt", cat="req", rid=2, mode="recompute")
+    time.sleep(0.001)
+    tr.instant("req_first_token", cat="req", rid=2)  # replay re-bind
+    tr.instant("req_retire", cat="req", rid=2, tokens=3)
+    rec = tr.request_stats()[2]
+    assert rec["t_first_us"] == t_first
+    assert rec["preempt_modes"] == ["recompute"]
+
+
+def test_request_stats_in_flight_request():
+    tr = obs_trace.Tracer()
+    tr.instant("req_submit", cat="req", rid=3)
+    rec = tr.request_stats()[3]
+    assert rec["state"] == "in-flight"
+    assert "latency_s" not in rec and "tpot_s" not in rec
+    tr.instant("req_first_token", cat="req", rid=3)
+    rec = tr.request_stats()[3]
+    assert rec["state"] == "in-flight"
+    assert rec["ttft_s"] >= 0.0  # TTFT derives once the token exists
+    assert "latency_s" not in rec
+
+
+# -------------------------------------------------------------------- #
+# critical-path attribution
+# -------------------------------------------------------------------- #
+def _synthetic_lifecycle(tr, rid, points):
+    """Emit lifecycle events with hand-set wall stamps (us offsets)."""
+    for name, t0, t1, args in points:
+        if t1 is None:
+            sp = tr.instant(name, cat="req", rid=rid, **args)
+            sp.t0_us = sp.t1_us = float(t0)
+        else:
+            sp = tr.begin(name, cat="req", rid=rid, **args)
+            tr.end(sp)
+            sp.t0_us, sp.t1_us = float(t0), float(t1)
+
+
+def test_attribute_folds_segments_and_why_slow_renders():
+    from repro.obs import attrib
+
+    tr = obs_trace.Tracer()
+    # rid 0: submit@0, prefill 100..300, admit@500, preempt(swap)@800,
+    # resume@1400, retire@2000 -> queue=100, prefill=200, handoff=200,
+    # swap=600, decode=(2000-500)-600=900
+    _synthetic_lifecycle(tr, 0, [
+        ("req_submit", 0, None, {}),
+        ("prefill", 100, 300, {}),
+        ("req_admit", 500, None, {}),
+        ("req_first_token", 500, None, {}),
+        ("req_preempt", 800, None, {"mode": "swap"}),
+        ("req_resume", 1400, None, {"mode": "swap"}),
+        ("req_retire", 2000, None, {"tokens": 8}),
+    ])
+    # rid 1: resident 700..1300 — convoys rid 0's swap window
+    _synthetic_lifecycle(tr, 1, [
+        ("req_submit", 600, None, {}),
+        ("req_admit", 700, None, {}),
+        ("req_retire", 1300, None, {"tokens": 4}),
+    ])
+    bd = attrib.attribute(tr)[0]
+    assert bd.state == "retired" and bd.total_us == 2000.0
+    assert bd.segments["queue"] == pytest.approx(100.0)
+    assert bd.segments["prefill"] == pytest.approx(200.0)
+    assert bd.segments["handoff_wire"] == pytest.approx(200.0)
+    assert bd.segments["swap"] == pytest.approx(600.0)
+    assert bd.segments["decode"] == pytest.approx(900.0)
+    assert bd.n_preempts == 1
+    # segments tile the lifetime exactly
+    assert sum(bd.segments.values()) == pytest.approx(bd.total_us)
+    assert bd.dominant() == "decode"
+    report = attrib.why_slow(tr, 0)
+    assert "dominant: decode" in report
+    assert "rid 1" in report  # the co-resident convoy
+    assert "no lifecycle events" in attrib.why_slow(tr, 99)
+
+
+def test_attribute_splits_handoff_by_measured_beta_gamma():
+    from repro.obs import attrib
+
+    tr = obs_trace.Tracer()
+    _synthetic_lifecycle(tr, 0, [
+        ("req_submit", 0, None, {}),
+        ("prefill", 0, 100, {}),
+        ("req_admit", 500, None, {}),  # 400us handoff window
+        ("req_retire", 600, None, {"tokens": 2}),
+    ])
+    cost = EngineCost(alpha_us=10.0, beta_us_per_kib=0.6,
+                      gamma_us_per_kib=0.2)
+    bd = attrib.attribute(tr, cost=cost)[0]
+    assert bd.segments["handoff_wire"] == pytest.approx(300.0)
+    assert bd.segments["handoff_epilogue"] == pytest.approx(100.0)
+    # without a cost model the whole window is attributed to the wire
+    bd0 = attrib.attribute(tr)[0]
+    assert bd0.segments["handoff_wire"] == pytest.approx(400.0)
+    assert bd0.segments["handoff_epilogue"] == 0.0
+
+
+def test_attribute_recompute_replay_counts_re_prefill():
+    from repro.obs import attrib
+
+    tr = obs_trace.Tracer()
+    # recompute eviction 300..700; the replay's re-prefill span lands
+    # INSIDE that window and must not be double-counted
+    _synthetic_lifecycle(tr, 5, [
+        ("req_submit", 0, None, {}),
+        ("prefill", 0, 100, {}),
+        ("req_admit", 100, None, {}),
+        ("req_preempt", 300, None, {"mode": "recompute"}),
+        ("prefill", 500, 650, {}),  # replay re-prefill
+        ("req_resume", 700, None, {"mode": "recompute"}),
+        ("req_retire", 1000, None, {"tokens": 5}),
+    ])
+    bd = attrib.attribute(tr)[5]
+    # replay = eviction window (400) + re-prefill (150)
+    assert bd.segments["replay"] == pytest.approx(550.0)
+    assert bd.segments["swap"] == 0.0
+    # decode = resident (900) - evicted (400); the re-prefill is inside
+    # the evicted window, subtracted once
+    assert bd.segments["decode"] == pytest.approx(500.0)
+    assert bd.dominant() == "replay" or bd.segments["decode"] >= 500.0
+
+
+# -------------------------------------------------------------------- #
+# SLO health monitor
+# -------------------------------------------------------------------- #
+class _FakeSLO:
+    def __init__(self, priority=0, ttft=float("inf"), tpot=float("inf")):
+        self.priority = priority
+        self.ttft_deadline_s = ttft
+        self.tpot_deadline_s = tpot
+
+
+def test_health_at_risk_fires_before_violation():
+    """Deterministic pressure: with risk_frac=0.8 and an injected
+    clock, the ``slo_at_risk`` instant lands on a strictly earlier tick
+    than ``slo_violated``."""
+    from repro.obs.health import HealthMonitor
+
+    tr = obs_trace.enable(capacity=1024)
+    try:
+        mon = HealthMonitor(risk_frac=0.8)
+        mon.track("r1", _FakeSLO(priority=2, ttft=1.0), now=0.0)
+        ticks = {}
+        for i, now in enumerate([0.5, 0.85, 1.2]):
+            tr.set_tick(i)
+            s = mon.tick(i, now)
+            ticks[i] = s
+        at_risk = [e for e in tr.spans(name="slo_at_risk")]
+        violated = [e for e in tr.spans(name="slo_violated")]
+        assert len(at_risk) == 1 and len(violated) == 1
+        assert at_risk[0].tick0 < violated[0].tick0
+        assert at_risk[0].args["deadline"] == "ttft"
+        assert ticks[0]["at_risk"] == []          # 0.5/1.0 < 0.8
+        assert ticks[1]["at_risk"] == ["r1"]      # early warning
+        assert ticks[2]["violated"] == ["r1"]     # deadline passed
+        assert mon.registry.counter("slo_violations").get() == 1
+        assert mon.backpressure_floor() == 2
+        assert "at_risk=1" in mon.render()
+    finally:
+        obs_trace.disable()
+
+
+def test_health_tpot_risk_uses_ewma_and_stall():
+    from repro.obs.health import HealthMonitor
+
+    mon = HealthMonitor(risk_frac=0.8, ewma=0.5)
+    mon.track("r", _FakeSLO(tpot=0.1), now=0.0)
+    mon.first_token("r", now=0.0)
+    # 2 tokens per tick, 0.05s/token: comfortably inside the deadline
+    mon.tick(1, 0.1, progress={"r": 3})
+    assert mon.last_summary["at_risk"] == []
+    ewma1 = mon.last_summary["tpot_ewma_s"]["r"]
+    assert ewma1 == pytest.approx(0.05)
+    # then a long stall with no new tokens: projection crosses 0.8x
+    mon.tick(2, 0.19, progress={"r": 3})
+    assert mon.last_summary["at_risk"] == ["r"]
+    # retired requests drop out of tracking entirely
+    mon.tick(3, 0.2, retired=["r"])
+    assert mon.last_summary["tracked"] == 0
+    assert mon.backpressure_floor() is None
+
+
+def test_health_inert_without_finite_deadlines():
+    from repro.obs.health import HealthMonitor
+
+    mon = HealthMonitor()
+    mon.track("r", _FakeSLO(), now=0.0)  # default-inf deadlines
+    mon.tick(1, 1e9)
+    assert mon.last_summary["at_risk"] == []
+    assert mon.backpressure_floor() is None
+
+
+def test_health_backpressure_false_never_raises_floor():
+    from repro.obs.health import HealthMonitor
+
+    mon = HealthMonitor(backpressure=False)
+    mon.track("r", _FakeSLO(priority=3, ttft=0.1), now=0.0)
+    mon.tick(1, 5.0)  # violated outright
+    assert mon.last_summary["violated"] == ["r"]
+    assert mon.backpressure_floor() is None  # observe-only arm
+
+
+def test_scheduler_defers_below_floor_admissions():
+    from repro.obs.health import HealthMonitor
+    from repro.serving.scheduler import SLO, AdmissionScheduler
+
+    sch = AdmissionScheduler(page_bytes=4096)
+    mon = HealthMonitor()
+    sch.attach_health(mon)
+    sch.submit(0, SLO(priority=2, ttft_deadline_s=1.0), now=0.0)
+    sch.submit(1, SLO(priority=0), now=0.0)
+    sch.submit(2, SLO(priority=2), now=0.0)
+    mon.track(0, SLO(priority=2, ttft_deadline_s=1.0), now=0.0)
+    # healthy: everything is admissible, priority-major order
+    mon.tick(1, 0.1)
+    assert sch.admission_order() == [0, 2, 1]
+    assert sch.deferrals == 0
+    # rid 0 at risk -> floor=2: the p0 request is deferred this tick
+    mon.tick(2, 0.95)
+    assert sch.admission_order() == [0, 2]
+    assert sch.deferrals == 1
+    assert sch.stats()["sched_deferrals"] == 1
+    # at-risk set drains -> floor clears, nothing starves
+    mon.retire(0)
+    mon.tick(3, 1.0)
+    assert 1 in sch.admission_order()

@@ -875,7 +875,100 @@ def test_oversubscribed_paged_server_preempts_bit_identically():
         )
 
 
-def test_swap_preemption_mid_replay_keeps_tokens_exact():
+def test_why_slow_blames_eviction_for_preempted_requests():
+    """Act-3 shape (aggregate KV demand ~1.4x the pool, five requests
+    over three slots) with the tracer on: the low-priority victim is
+    swapped out and cannot resume while higher-priority work convoys
+    through the slots — critical-path attribution must blame the
+    eviction (dominant segment swap/replay), and ``why_slow`` names it
+    plus the co-resident convoy."""
+    from repro.launch.serve import PagedServer, Request
+    from repro.obs import attrib
+    from repro.obs import trace as obs_trace
+    from repro.serving.scheduler import SLO
+
+    cfg, model, ctx = _smoke_model()
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    srv = PagedServer(model, ctx, params, 3, 32, page_tokens=8,
+                      n_pool_pages=14)
+    # warm the jitted prefill/decode shapes so the traced run's walls
+    # measure scheduling, not one-off compilation
+    srv.submit(Request(rid=99,
+                       prompt=rng.integers(0, cfg.vocab, 8).tolist(),
+                       max_new=20))
+    srv.run_until_drained(max_ticks=100)
+
+    def mk(rid, max_new, prio):
+        return Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab, 8).tolist(),
+            max_new=max_new, slo=SLO(priority=prio),
+        )
+
+    tr = obs_trace.enable(capacity=1 << 15)
+    try:
+        srv.submit(mk(0, 6, 0))  # the victim: short, low priority
+        srv.submit(mk(1, 20, 1))
+        srv.submit(mk(2, 20, 1))
+        for _ in range(3):
+            srv.step()
+        srv.submit(mk(3, 20, 1))
+        srv.submit(mk(4, 20, 1))
+        srv._preempt(0, "swap")  # the pressure point: pool + slots full
+        stats = srv.run_until_drained(max_ticks=500)
+    finally:
+        obs_trace.disable()
+    assert stats["sched_swaps"] >= 1
+    downs = attrib.attribute(tr)
+    assert {0, 1, 2, 3, 4} <= set(downs)
+    bd = downs[0]
+    assert bd.state == "retired" and bd.n_preempts == 1
+    # the eviction window — not decode, not queueing — is the victim's
+    # critical path: it sat swapped out while p1 work held the slots
+    assert bd.dominant() == "swap", bd.segments
+    assert bd.segments["swap"] > bd.segments["decode"]
+    report = attrib.why_slow(tr, 0)
+    assert "dominant: swap" in report
+    # the pool was full while it waited: the p1 convoy is named
+    assert "convoyed by" in report and "rid 1" in report
+
+
+def test_paged_server_health_backpressure_defers_low_priority():
+    """A tight-TTFT high-priority request at risk raises the admission
+    floor: the paged server stops admitting below-floor work until the
+    at-risk set drains (counted on ``sched_deferrals``), and every
+    request still completes."""
+    from repro.launch.serve import PagedServer, Request
+    from repro.obs.health import HealthMonitor
+    from repro.serving.scheduler import SLO
+
+    cfg, model, ctx = _smoke_model()
+    params, _ = model.init(ctx, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    mon = HealthMonitor()
+    srv = PagedServer(model, ctx, params, 2, 32, page_tokens=8,
+                      health=mon)
+    assert srv.scheduler.health is mon
+    # an (unmeetably) tight TPOT deadline keeps rid 0 at risk for its
+    # whole residence — the floor stays at p2 until it retires
+    srv.submit(Request(
+        rid=0, prompt=rng.integers(0, cfg.vocab, 8).tolist(), max_new=4,
+        slo=SLO(priority=2, tpot_deadline_s=1e-9),
+    ))
+    srv.step()  # admit rid 0; the post-step health tick raises the floor
+    assert mon.backpressure_floor() == 2
+    srv.submit(Request(
+        rid=1, prompt=rng.integers(0, cfg.vocab, 8).tolist(), max_new=4,
+        slo=SLO(priority=0),
+    ))
+    srv.step()  # rid 1 is below the floor: deferred, not admitted
+    assert srv.scheduler.deferrals >= 1
+    assert all(r is None or r.rid == 0 for r in srv.active)
+    stats = srv.run_until_drained(max_ticks=300)
+    assert stats["requests"] == 2  # backpressure defers, never starves
+    assert stats["sched_deferrals"] >= 1
+    assert mon.last_summary["tracked"] == 0  # retirement untracks
+    assert mon.registry.counter("slo_violations").get() >= 1
     """A request recompute-preempted, resumed, then swap-preempted WHILE
     still replaying must carry its replay tail across the swap — no
     re-appended tokens, bit-identical output."""
